@@ -1,0 +1,66 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.data.synthetic import make_batch_fn
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def run_method(method, *, arch="nanogpt_134m", steps=150, stages=8, lr=1e-3,
+               batch=8, seq=64, seed=0, collect=True, straggler=None,
+               warmup=0, log_every=0, n_periods=None):
+    """Train `method` on the synthetic task; returns dict of curves."""
+    cfg = get_config(arch, reduced=True)
+    if n_periods is not None:  # paper Fig. 5: layers scale with stage count
+        import dataclasses
+        cfg = dataclasses.replace(cfg, n_periods=n_periods)
+    ecfg = EngineCfg(n_stages=stages, lr=lr, warmup_steps=warmup, total_steps=steps,
+                     constant_lr=warmup == 0, collect_metrics=collect,
+                     straggler_delays=straggler)
+    tr = AsyncTrainer(cfg, ecfg, method)
+    state = tr.init(jax.random.PRNGKey(seed))
+    step = tr.jit_step()
+    batch_fn, src = make_batch_fn(cfg, 1, batch, seq, seed=seed)
+    out = {"loss": [], "gap": [], "cos": []}
+    t0 = time.time()
+    for i in range(steps):
+        state, m = step(state, batch_fn(i))
+        out["loss"].append(float(m["loss"]))
+        if "stage1_gap_rmse" in m:
+            out["gap"].append(float(m["stage1_gap_rmse"]))
+            out["cos"].append(float(m["stage1_align_cos"]))
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  {method} step {i+1}: {out['loss'][-1]:.3f}", file=sys.stderr)
+    out["wall_s"] = time.time() - t0
+    out["floor"] = src.entropy_floor()
+    out["final"] = float(np.mean(out["loss"][-10:]))
+    out["ppl"] = float(np.exp(out["final"]))
+    return out
+
+
+def tail(xs, n=10):
+    return float(np.mean(xs[-n:]))
+
+
+def emit_csv(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+def save_json(name, obj):
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(obj, f, indent=1)

@@ -1,0 +1,35 @@
+"""Fig. 4: other delay-correction mechanisms vs ours, + weight-discrepancy RMSE.
+
+PipeDream-LR (lr discount), LR-SecondOrder (diag-Fisher Taylor), Polynomial+FFT
+forecasting, XPipe (weight prediction), vs Ours; plus NAG composed with each
+(paper: NAG improves them, but NAG alone is best)."""
+from __future__ import annotations
+
+import argparse
+
+from common import emit_csv, run_method, save_json
+
+METHODS = ["pipedream", "pipedream_lr", "lr_second_order", "polyfft", "xpipe",
+           "ours", "ours_lr", "ours_second_order", "ours_polyfft"]
+
+
+def main(steps=200, stages=8):
+    rows, full = [], {}
+    for m in METHODS:
+        r = run_method(m, steps=steps, stages=stages)
+        full[m] = r
+        gap = r["gap"][-1] if r["gap"] else float("nan")
+        rows.append((f"fig4/{m}", round(1e6 * r["wall_s"] / steps, 1),
+                     f"final_loss={r['final']:.4f};stage1_gap={gap:.3e}"))
+    save_json("fig4_delay_correction.json", full)
+    emit_csv(rows)
+    best = min(full, key=lambda m: full[m]["final"])
+    print(f"# best method: {best} (paper claim: ours)")
+    return full
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    a = ap.parse_args()
+    main(a.steps)

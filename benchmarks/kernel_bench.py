@@ -1,0 +1,73 @@
+"""Kernel microbenchmarks: pallas (interpret on CPU) vs pure-jnp oracle.
+
+Wall-times on CPU interpret mode are NOT TPU perf — correctness + call-overhead
+tracking only; the TPU perf story is in the roofline analysis."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from common import emit_csv
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.nag_update import nag_update
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def timeit(fn, *a, n=5, **kw):
+    out = fn(*a, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*a, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def main():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    B, H, Hkv, S, d = 1, 4, 2, 512, 64
+    q = jax.random.normal(key, (B, H, S, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, S, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, S, d))
+    fa = jax.jit(lambda *x: flash_attention(*x, causal=True, block_q=128, block_k=128))
+    fr = jax.jit(lambda *x: ref.attention_ref(*x, causal=True))
+    err = float(jnp.max(jnp.abs(fa(q, k, v) - fr(q, k, v))))
+    rows.append(("kernel/flash_attention", round(timeit(fa, q, k, v), 1),
+                 f"ref_us={timeit(fr, q, k, v):.1f};maxerr={err:.1e}"))
+
+    b, S2, Hh, P, G, N = 1, 512, 4, 32, 1, 32
+    x = jax.random.normal(key, (b, S2, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (b, S2, Hh))) * 0.1
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 4), (Hh,)) * 0.3)
+    B_ = jax.random.normal(jax.random.fold_in(key, 5), (b, S2, G, N)) * 0.3
+    C_ = jax.random.normal(jax.random.fold_in(key, 6), (b, S2, G, N)) * 0.3
+    sk = jax.jit(lambda *a_: ssd_scan(*a_, chunk=128)[0])
+    sr = jax.jit(lambda *a_: ref.ssd_ref(*a_)[0])
+    err = float(jnp.max(jnp.abs(sk(x, dt, A, B_, C_) - sr(x, dt, A, B_, C_))))
+    rows.append(("kernel/ssd_scan", round(timeit(sk, x, dt, A, B_, C_), 1),
+                 f"ref_us={timeit(sr, x, dt, A, B_, C_):.1f};maxerr={err:.1e}"))
+
+    n = 1 << 16
+    p = jax.random.normal(key, (n,))
+    m = jnp.zeros(n)
+    v2 = jnp.ones(n) * 0.01
+    g = jax.random.normal(jax.random.fold_in(key, 7), (n,))
+    kw = dict(lr=1e-3, mu_t=0.95, mu_next=0.96, mu_prod=0.9, mu_prod_next=0.87, bc2=0.05)
+    nk = jax.jit(lambda *a_: nag_update(*a_, **kw)[0])
+    nr = jax.jit(lambda *a_: ref.nag_update_ref(*a_, b1=0.99, b2=0.95, eps=1e-8,
+                                                wd=0.01, **kw)[0])
+    err = float(jnp.max(jnp.abs(nk(p, m, v2, g) - nr(p, m, v2, g))))
+    rows.append(("kernel/nag_update", round(timeit(nk, p, m, v2, g), 1),
+                 f"ref_us={timeit(nr, p, m, v2, g):.1f};maxerr={err:.1e}"))
+    emit_csv(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

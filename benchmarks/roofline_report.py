@@ -1,0 +1,38 @@
+"""Roofline table from the dry-run artifacts (artifacts/roofline.json).
+
+Run `PYTHONPATH=src python -m repro.launch.roofline --all --out artifacts/roofline.json`
+first (512-device lowering; kept out of the default bench run)."""
+from __future__ import annotations
+
+import json
+import os
+
+from common import ART, emit_csv
+
+
+def main():
+    path = os.path.join(ART, "roofline.json")
+    if not os.path.exists(path):
+        print("# artifacts/roofline.json missing — run repro.launch.roofline --all")
+        return []
+    recs = json.load(open(path))
+    rows = []
+    for r in recs:
+        if "skipped" in r:
+            rows.append((f"roofline/{r['cell']}", 0, "skipped"))
+            continue
+        if "error" in r:
+            rows.append((f"roofline/{r['cell']}", 0, f"error={r['error'][:50]}"))
+            continue
+        bound_ms = max(r["compute_ms"], r["memory_ms"], r["collective_ms"])
+        rows.append((
+            f"roofline/{r['cell']}", bound_ms * 1e3,
+            f"dom={r['dominant']};comp_ms={r['compute_ms']};mem_ms={r['memory_ms']};"
+            f"coll_ms={r['collective_ms']};useful={r['useful_flops_ratio']};"
+            f"roofline_frac={r['roofline_fraction']}"))
+    emit_csv(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark driver: one section per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (plus # comment lines with claim checks).
+
+  PYTHONPATH=src python -m benchmarks.run [--steps N] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--quick", action="store_true", help="fewer steps everywhere")
+    args, _ = ap.parse_known_args()
+    steps = 60 if args.quick else args.steps
+
+    import kernel_bench
+    import table1_methods
+    import fig4_delay_correction
+    import fig5_stage_scaling
+    import fig6_momentum_ablation
+    import fig7_discount_ablation
+    import fig8_swarm
+    import roofline_report
+
+    print("# === kernels (interpret mode) ===")
+    kernel_bench.main()
+    print("# === Table 1: methods ===")
+    table1_methods.main(steps=steps)
+    print("# === Fig 4: delay-correction mechanisms ===")
+    fig4_delay_correction.main(steps=steps)
+    print("# === Fig 5: stage scaling ===")
+    fig5_stage_scaling.main(steps=max(60, steps // 2))
+    print("# === Fig 6: momentum ablation ===")
+    fig6_momentum_ablation.main(steps=steps)
+    print("# === Fig 7: gradient-discount ablation ===")
+    fig7_discount_ablation.main(steps=steps)
+    print("# === Fig 8: SWARM stage-DP ===")
+    fig8_swarm.main(steps=max(60, steps // 2))
+    print("# === Roofline (from dry-run artifacts) ===")
+    roofline_report.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end driver: the paper's Figure-2 experiment (method comparison), scaled by
+--preset. 'full' uses the paper's actual 134M base config (needs a real accelerator
+for reasonable wall time); 'small' runs in minutes on CPU.
+
+  PYTHONPATH=src python examples/paper_repro.py --preset small --steps 400
+  PYTHONPATH=src python examples/paper_repro.py --preset full --config nanogpt-1b
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.data.synthetic import make_batch_fn
+
+METHODS = ["gpipe", "pipedream", "pipemare", "ours", "ours_nows"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["small", "full"], default="small")
+    ap.add_argument("--config", default="nanogpt-134m")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--methods", default=",".join(METHODS))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    reduced = args.preset == "small"
+    cfg = get_config(args.config, reduced=reduced)
+    # paper Sec. 5.1: 8 stages, microbatch 8, lr 3e-4 (1e-4 @1B), cosine to lr/10
+    stages = 8
+    if reduced:
+        batch, seq, lr, warmup = 8, 64, 1e-3, max(args.steps // 20, 10)
+    else:
+        batch, seq, lr = 8, (1024 if "1b" in args.config else 512), \
+            (1e-4 if "1b" in args.config else 3e-4)
+        warmup = 3000
+    ecfg = EngineCfg(n_stages=stages, lr=lr, warmup_steps=warmup,
+                     total_steps=args.steps)
+    batch_fn, src = make_batch_fn(cfg, 1, batch, seq, seed=0)
+    print(f"# {cfg.name} | steps={args.steps} stages={stages} floor={src.entropy_floor():.3f}")
+
+    curves = {}
+    for method in args.methods.split(","):
+        trainer = AsyncTrainer(cfg, ecfg, method)
+        state = trainer.init(jax.random.PRNGKey(0))
+        step = trainer.jit_step()
+        losses = []
+        for i in range(args.steps):
+            state, m = step(state, batch_fn(i))
+            losses.append(float(m["loss"]))
+            if (i + 1) % max(args.steps // 8, 1) == 0:
+                print(f"[{method:10s}] {i+1:6d}  {losses[-1]:.4f}", flush=True)
+        curves[method] = losses
+        print(f"[{method:10s}] final(avg10) = {np.mean(losses[-10:]):.4f}  "
+              f"ppl = {np.exp(np.mean(losses[-10:])):.2f}\n")
+
+    order = sorted(curves, key=lambda m: np.mean(curves[m][-10:]))
+    print("# ranking (best first):", " < ".join(order))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(curves, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — async pipeline-parallel JAX framework around the delay-corrected
+Nesterov method (ICML 2025). See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,118 @@
+"""Mesh-agnostic checkpointing for AsyncState + elastic restage.
+
+Arrays are saved device-gathered (unsharded logical values) into a single .npz with
+path-string keys, so a checkpoint written on any mesh restores onto any other mesh
+(the caller re-device_puts with target shardings). `restage` additionally moves a
+checkpoint between different pipeline-stage counts (elastic scaling): params and
+moment buffers are merged to the monolithic layout and re-split; stashes are
+re-warmed from the restored params (staleness history resets — documented behaviour
+on elastic events).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.tree_util import tree_flatten_with_path, keystr
+
+from repro.models import lm as _lm
+
+
+def _flat(state):
+    leaves, treedef = tree_flatten_with_path(state)
+    return {keystr(path): np.asarray(jax.device_get(x)) for path, x in leaves}, treedef
+
+
+def save(path: str, state, step: int, metadata: dict | None = None):
+    """Atomic save: write tmp then rename."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrs, _ = _flat(state)
+    meta = dict(metadata or {})
+    meta["step"] = int(step)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, __meta__=json.dumps(meta), **arrs)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        leaves, treedef = tree_flatten_with_path(like)
+        out = []
+        for p, l in leaves:
+            k = keystr(p)
+            if k not in z:
+                raise KeyError(f"checkpoint missing {k}")
+            a = z[k]
+            if tuple(a.shape) != tuple(l.shape):
+                raise ValueError(f"shape mismatch at {k}: ckpt {a.shape} vs state {l.shape}")
+            out.append(jnp.asarray(a, l.dtype))
+    return jax.tree.unflatten(treedef, out), meta
+
+
+def latest(ckpt_dir: str):
+    """(path, step) of the newest ckpt-<step>.npz in dir, or (None, -1)."""
+    if not os.path.isdir(ckpt_dir):
+        return None, -1
+    best, best_step = None, -1
+    for f in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"ckpt-(\d+)\.npz", f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(ckpt_dir, f), int(m.group(1))
+    return best, best_step
+
+
+def save_step(ckpt_dir: str, state, step: int, keep: int = 3, metadata=None):
+    save(os.path.join(ckpt_dir, f"ckpt-{step}.npz"), state, step, metadata)
+    # retention
+    steps = sorted(
+        int(re.fullmatch(r"ckpt-(\d+)\.npz", f).group(1))
+        for f in os.listdir(ckpt_dir) if re.fullmatch(r"ckpt-(\d+)\.npz", f))
+    for s in steps[:-keep]:
+        os.remove(os.path.join(ckpt_dir, f"ckpt-{s}.npz"))
+
+
+def restage(state, trainer_old, trainer_new):
+    """Elastic stage-count change: old AsyncState -> new trainer's AsyncState.
+
+    Params and optimizer moment buffers merge to monolithic and re-split under the
+    new stage partition. Stash ring buffers re-warm from the current weights.
+    """
+    merged_params = trainer_old.merge_params(state)
+    new_state = trainer_new.init_from_params(merged_params)
+
+    # migrate adam moments where structurally possible (same leaf paths)
+    def merge_stage_trees(trees, key_):
+        class _Holder:
+            params = tuple(t[key_] for t in trees)
+        return trainer_old.merge_params(_Holder)
+
+    try:
+        if all(("m" in o and "v" in o) for o in state.opt):
+            m_merged = merge_stage_trees(list(state.opt), "m")
+            v_merged = merge_stage_trees(list(state.opt), "v")
+            new_stages, _ = _lm.split_stages(m_merged, trainer_new.model_cfg, trainer_new.P)
+            new_v, _ = _lm.split_stages(v_merged, trainer_new.model_cfg, trainer_new.P)
+            opt = []
+            for i, o in enumerate(new_state.opt):
+                oo = dict(o)
+                oo["m"], oo["v"] = new_stages[i], new_v[i]
+                oo["count"] = state.opt[0]["count"]
+                if "mu_prod" in oo:
+                    oo["mu_prod"] = state.opt[0].get("mu_prod", oo["mu_prod"])
+                opt.append(oo)
+            new_state = new_state._replace(opt=tuple(opt), step=state.step)
+        else:
+            new_state = new_state._replace(step=state.step)
+    except Exception:
+        new_state = new_state._replace(step=state.step)
+    return new_state

@@ -1,0 +1,74 @@
+"""Config registry: 10 assigned architectures + the paper's own models.
+
+Each module exposes ``config() -> ModelCfg`` (full published config) and
+``reduced() -> ModelCfg`` (same family, tiny — for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = [
+    "mamba2_370m",
+    "gemma3_12b",
+    "internlm2_20b",
+    "qwen2_1_5b",
+    "gemma2_9b",
+    "paligemma_3b",
+    "whisper_tiny",
+    "dbrx_132b",
+    "deepseek_v2_lite_16b",
+    "zamba2_7b",
+    # paper's own models
+    "nanogpt_134m",
+    "nanogpt_1b",
+]
+
+# canonical assigned names -> module ids
+ALIASES = {
+    "mamba2-370m": "mamba2_370m",
+    "gemma3-12b": "gemma3_12b",
+    "internlm2-20b": "internlm2_20b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "gemma2-9b": "gemma2_9b",
+    "paligemma-3b": "paligemma_3b",
+    "whisper-tiny": "whisper_tiny",
+    "dbrx-132b": "dbrx_132b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "zamba2-7b": "zamba2_7b",
+    "nanogpt-134m": "nanogpt_134m",
+    "nanogpt-1b": "nanogpt_1b",
+}
+
+ASSIGNED = ARCH_IDS[:10]
+
+# LM shape set (assigned): name -> (seq_len, global_batch, step kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic sequence mixing)
+SUBQUADRATIC = {"mamba2_370m", "zamba2_7b"}
+
+
+def norm_name(name: str) -> str:
+    return ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str, reduced: bool = False, **overrides):
+    mod = importlib.import_module(f"repro.configs.{norm_name(name)}")
+    cfg = mod.reduced() if reduced else mod.config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def cell_runnable(arch: str, shape: str):
+    """(runnable, reason). All 40 cells documented; skips per DESIGN.md §4."""
+    a = norm_name(arch)
+    if shape == "long_500k" and a not in SUBQUADRATIC:
+        return False, "full-attention arch: 500k decode requires sub-quadratic mixing (skip per assignment; see DESIGN.md)"
+    return True, ""

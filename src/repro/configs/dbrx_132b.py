@@ -1,0 +1,44 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained [hf:databricks/dbrx-base].
+
+40L d_model=6144 48H (GQA kv=8) d_ff(expert)=10752 vocab=100352, MoE 16e top-4.
+"""
+from repro.models.layers import BlockDef, ModelCfg, MoECfg
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="dbrx-132b",
+        family="moe",
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=10752,
+        vocab_size=100352,
+        tie_embeddings=False,
+        pattern=(BlockDef(mixer="attn", mlp="moe", rope_theta=5e5),),
+        n_periods=40,
+        moe=MoECfg(n_experts=16, top_k=4, d_ff_expert=10752, n_shared=0),
+        xent_chunk=512,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="dbrx-132b-reduced",
+        family="moe",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=96,
+        vocab_size=256,
+        tie_embeddings=False,
+        pattern=(BlockDef(mixer="attn", mlp="moe", rope_theta=5e5),),
+        n_periods=2,
+        moe=MoECfg(n_experts=4, top_k=2, d_ff_expert=96, n_shared=0),
+        dtype=jnp.float32,
+        remat=False,
+    )

@@ -1,0 +1,51 @@
+"""deepseek-v2-lite-16b [moe] — MLA kv_lora=512, shared+routed experts [arXiv:2405.04434].
+
+27L d_model=2048 16H, MLA (kv_lora=512, nope=128, rope=64, v=128), vocab=102400.
+MoE: 64 routed top-6 + 2 shared, d_ff(expert)=1408; first layer dense d_ff=10944.
+(The pool line lists both "64e top-6" and "160 routed"; 64 routed + 2 shared is the
+published V2-Lite config — see DESIGN.md §7.)
+"""
+from repro.models.layers import BlockDef, ModelCfg, MLACfg, MoECfg
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="deepseek-v2-lite-16b",
+        family="moe",
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=10944,  # dense first layer
+        vocab_size=102400,
+        tie_embeddings=False,
+        prelude=(BlockDef(mixer="attn", mlp="swiglu"),),
+        pattern=(BlockDef(mixer="attn", mlp="moe"),),
+        n_periods=26,
+        mla=MLACfg(kv_lora=512, qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128),
+        moe=MoECfg(n_experts=64, top_k=6, d_ff_expert=1408, n_shared=2, d_ff_shared=2816),
+        xent_chunk=512,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="deepseek-v2-lite-16b-reduced",
+        family="moe",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        tie_embeddings=False,
+        prelude=(BlockDef(mixer="attn", mlp="swiglu"),),
+        pattern=(BlockDef(mixer="attn", mlp="moe"),),
+        n_periods=2,
+        mla=MLACfg(kv_lora=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+        moe=MoECfg(n_experts=4, top_k=2, d_ff_expert=32, n_shared=1, d_ff_shared=64),
+        dtype=jnp.float32,
+        remat=False,
+    )

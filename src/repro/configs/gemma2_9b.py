@@ -1,0 +1,52 @@
+"""gemma2-9b [dense] — local+global alternating, logit softcap [arXiv:2408.00118; hf].
+
+42L d_model=3584 16H (GQA kv=8) head_dim=256 d_ff=14336 vocab=256000.
+Sliding window 4096 on alternating layers; attn softcap 50, final softcap 30.
+"""
+from repro.models.layers import BlockDef, ModelCfg
+
+_LOCAL = BlockDef(mixer="attn", mlp="geglu", window=4096, rope_theta=1e4)
+_GLOBAL = BlockDef(mixer="attn", mlp="geglu", rope_theta=1e4)
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="gemma2-9b",
+        family="dense",
+        d_model=3584,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=256,
+        d_ff=14336,
+        vocab_size=256000,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        use_post_norm=True,
+        tie_embeddings=True,
+        pattern=(_LOCAL, _GLOBAL),
+        n_periods=21,
+        xent_chunk=512,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="gemma2-9b-reduced",
+        family="dense",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        use_post_norm=True,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="geglu", window=8), BlockDef(mixer="attn", mlp="geglu")),
+        n_periods=2,
+        dtype=jnp.float32,
+        remat=False,
+    )

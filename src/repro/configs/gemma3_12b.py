@@ -1,0 +1,51 @@
+"""gemma3-12b [dense] — 5:1 local:global, 128k context [hf:google/gemma-3].
+
+48L d_model=3840 16H (GQA kv=8) head_dim=256 d_ff=15360 vocab=262144.
+Local window 1024 (rope 10k); global layers rope 1M. QK-norm, pre+post norms, GeGLU.
+"""
+from repro.models.layers import BlockDef, ModelCfg
+
+_LOCAL = BlockDef(mixer="attn", mlp="geglu", window=1024, rope_theta=1e4)
+_GLOBAL = BlockDef(mixer="attn", mlp="geglu", rope_theta=1e6)
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="gemma3-12b",
+        family="dense",
+        d_model=3840,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=256,
+        d_ff=15360,
+        vocab_size=262144,
+        qk_norm=True,
+        use_post_norm=True,
+        tie_embeddings=True,
+        pattern=(_LOCAL,) * 5 + (_GLOBAL,),
+        n_periods=8,
+        xent_chunk=512,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="gemma3-12b-reduced",
+        family="dense",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        qk_norm=True,
+        use_post_norm=True,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="geglu", window=8, rope_theta=1e4),) * 2
+        + (BlockDef(mixer="attn", mlp="geglu", rope_theta=1e6),),
+        n_periods=2,
+        dtype=jnp.float32,
+        remat=False,
+    )

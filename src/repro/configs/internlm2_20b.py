@@ -1,0 +1,42 @@
+"""internlm2-20b [dense] — GQA [arXiv:2403.17297; hf].
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92544.
+"""
+from repro.models.layers import BlockDef, ModelCfg
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="internlm2-20b",
+        family="dense",
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab_size=92544,
+        tie_embeddings=False,
+        pattern=(BlockDef(mixer="attn", mlp="swiglu", rope_theta=1e6),),
+        n_periods=48,
+        xent_chunk=512,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="internlm2-20b-reduced",
+        family="dense",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        tie_embeddings=False,
+        pattern=(BlockDef(mixer="attn", mlp="swiglu", rope_theta=1e6),),
+        n_periods=3,
+        dtype=jnp.float32,
+        remat=False,
+    )

@@ -1,0 +1,43 @@
+"""mamba2-370m [ssm] — SSD (state-space duality) [arXiv:2405.21060].
+
+48L d_model=1024, attention-free (d_ff=0), vocab=50280, ssm_state=128.
+"""
+from repro.models.layers import BlockDef, ModelCfg, SSMCfg
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="mamba2-370m",
+        family="ssm",
+        d_model=1024,
+        n_heads=1,  # unused (attn-free)
+        n_kv_heads=1,
+        head_dim=64,
+        d_ff=0,
+        vocab_size=50280,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="ssm", mlp="none"),),
+        n_periods=48,
+        ssm=SSMCfg(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1, chunk=256),
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="mamba2-370m-reduced",
+        family="ssm",
+        d_model=64,
+        n_heads=1,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=0,
+        vocab_size=256,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="ssm", mlp="none"),),
+        n_periods=2,
+        ssm=SSMCfg(d_state=16, d_conv=4, expand=2, head_dim=16, n_groups=1, chunk=16),
+        dtype=jnp.float32,
+        remat=False,
+    )

@@ -1,0 +1,42 @@
+"""Paper base model: NanoGPT-style decoder-only, ~134M params.
+
+ctx 512, d_model=768, 12 heads, 8 layers (each layer = one pipeline stage in the
+paper). GPT-2 tokenizer vocab (50257). RoPE replaces learned positions (adaptation).
+"""
+from repro.models.layers import BlockDef, ModelCfg
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="nanogpt-134m",
+        family="dense",
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        head_dim=64,
+        d_ff=3072,
+        vocab_size=50257,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="gelu"),),
+        n_periods=8,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="nanogpt-134m-reduced",
+        family="dense",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=256,
+        vocab_size=256,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="gelu"),),
+        n_periods=8,
+        dtype=jnp.float32,
+        remat=False,
+    )

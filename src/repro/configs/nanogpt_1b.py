@@ -1,0 +1,38 @@
+"""Paper 1B model: ctx 1024, d_model=2688, 24 heads, 8 layers (8 stages)."""
+from repro.models.layers import BlockDef, ModelCfg
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="nanogpt-1b",
+        family="dense",
+        d_model=2688,
+        n_heads=24,
+        n_kv_heads=24,
+        head_dim=112,
+        d_ff=10752,
+        vocab_size=50257,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="gelu"),),
+        n_periods=8,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="nanogpt-1b-reduced",
+        family="dense",
+        d_model=96,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=24,
+        d_ff=384,
+        vocab_size=256,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="gelu"),),
+        n_periods=8,
+        dtype=jnp.float32,
+        remat=False,
+    )

@@ -1,0 +1,48 @@
+"""paligemma-3b [vlm] — SigLIP + gemma [arXiv:2407.07726; hf].
+
+Backbone only (18L d_model=2048 8H GQA kv=1 d_ff=16384 vocab=257216); the SigLIP
+vision tower is a STUB: `input_specs` supplies 256 precomputed patch embeddings that
+occupy the first positions, with prefix-LM (bidirectional) masking over the prefix.
+"""
+from repro.models.layers import BlockDef, ModelCfg
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="paligemma-3b",
+        family="vlm",
+        d_model=2048,
+        n_heads=8,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab_size=257216,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="geglu"),),
+        n_periods=18,
+        n_prefix_img=256,
+        prefix_lm=True,
+        xent_chunk=512,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="paligemma-3b-reduced",
+        family="vlm",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="geglu"),),
+        n_periods=3,
+        n_prefix_img=8,
+        prefix_lm=True,
+        dtype=jnp.float32,
+        remat=False,
+    )

@@ -1,0 +1,44 @@
+"""qwen2-1.5b [dense] — GQA, QKV bias [arXiv:2407.10671; hf].
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+"""
+from repro.models.layers import BlockDef, ModelCfg
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="qwen2-1.5b",
+        family="dense",
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        head_dim=128,
+        d_ff=8960,
+        vocab_size=151936,
+        qkv_bias=True,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="swiglu", rope_theta=1e6),),
+        n_periods=28,
+        xent_chunk=512,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="qwen2-1.5b-reduced",
+        family="dense",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        qkv_bias=True,
+        tie_embeddings=True,
+        pattern=(BlockDef(mixer="attn", mlp="swiglu", rope_theta=1e6),),
+        n_periods=3,
+        dtype=jnp.float32,
+        remat=False,
+    )

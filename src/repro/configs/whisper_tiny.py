@@ -1,0 +1,53 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend stubbed [arXiv:2212.04356].
+
+4L encoder + 4L decoder, d_model=384, 6H (MHA kv=6) head_dim=64, d_ff=1536,
+vocab=51865. The conv1d audio frontend is a STUB: `input_specs` supplies
+precomputed frame embeddings [B, n_frames, d_model]. RoPE replaces whisper's
+learned absolute positions (TPU-idiomatic adaptation; noted in DESIGN.md).
+"""
+from repro.models.layers import BlockDef, ModelCfg
+
+_ENC = BlockDef(mixer="attn", mlp="gelu", causal=False)
+_DEC = BlockDef(mixer="attn", mlp="gelu", cross_attn=True)
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="whisper-tiny",
+        family="audio",
+        d_model=384,
+        n_heads=6,
+        n_kv_heads=6,
+        head_dim=64,
+        d_ff=1536,
+        vocab_size=51865,
+        tie_embeddings=True,
+        enc_pattern=(_ENC,),
+        enc_periods=4,
+        n_frames=1500,
+        pattern=(_DEC,),
+        n_periods=4,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="whisper-tiny-reduced",
+        family="audio",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        tie_embeddings=True,
+        enc_pattern=(_ENC,),
+        enc_periods=2,
+        n_frames=16,
+        pattern=(_DEC,),
+        n_periods=2,
+        dtype=jnp.float32,
+        remat=False,
+    )

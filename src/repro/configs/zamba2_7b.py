@@ -1,0 +1,53 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+81L d_model=3584, shared attn 32H (MHA kv=32, head_dim=112) d_ff=14336, ssm_state=64.
+Layout adaptation: pattern = (ssm x5, shared_attn) x 13 periods + 3 prelude ssm = 81
+layers. The shared transformer block (attn+MLP) has ONE param set reused at every
+occurrence, with a per-occurrence output projection (zamba2's per-occurrence LoRA
+adapted to a full linear; noted in DESIGN.md).
+"""
+from repro.models.layers import BlockDef, ModelCfg, SSMCfg
+
+_SSM = BlockDef(mixer="ssm", mlp="none")
+_SHARED = BlockDef(mixer="shared_attn", mlp="none")
+
+
+def config() -> ModelCfg:
+    return ModelCfg(
+        name="zamba2-7b",
+        family="hybrid",
+        d_model=3584,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=112,
+        d_ff=14336,
+        vocab_size=32000,
+        tie_embeddings=True,
+        prelude=(_SSM,) * 3,
+        pattern=(_SSM,) * 5 + (_SHARED,),
+        n_periods=13,
+        ssm=SSMCfg(d_state=64, d_conv=4, expand=2, head_dim=64, n_groups=1, chunk=256),
+        xent_chunk=512,
+    )
+
+
+def reduced() -> ModelCfg:
+    import jax.numpy as jnp
+
+    return ModelCfg(
+        name="zamba2-7b-reduced",
+        family="hybrid",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        tie_embeddings=True,
+        prelude=(_SSM,),
+        pattern=(_SSM, _SSM, _SHARED),
+        n_periods=2,
+        ssm=SSMCfg(d_state=16, d_conv=4, expand=2, head_dim=16, n_groups=1, chunk=16),
+        dtype=jnp.float32,
+        remat=False,
+    )

@@ -1,0 +1,3 @@
+"""The paper's contribution: async-PP engine (engine.py), stage-delay model
+(delay.py), weight-stash rings (stash.py), staged VJP (staged.py), method registry
+(methods.py), SWARM stage-DP (swarm.py), utilization analytics (utilization.py)."""

@@ -1,0 +1,18 @@
+"""Gradient-staleness model for 1F1B async pipeline parallelism (paper Eq. 5)."""
+from __future__ import annotations
+
+import math
+
+
+def stage_delay(i: int, P: int, K: int = 1) -> int:
+    """tau_i = floor((2(P-i)+1)/(2K)), i in 1..P. Earlier stages: larger delay."""
+    assert 1 <= i <= P
+    return int(math.floor((2 * (P - i) + 1) / (2 * K)))
+
+
+def stage_delays(P: int, K: int = 1) -> tuple:
+    return tuple(stage_delay(i, P, K) for i in range(1, P + 1))
+
+
+def max_delay(P: int, K: int = 1) -> int:
+    return stage_delay(1, P, K)

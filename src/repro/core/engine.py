@@ -1,0 +1,247 @@
+"""Async pipeline-parallel training engine.
+
+One `tick` == one 1F1B steady-state update interval (paper Sec. 2.2): the microbatch
+completing its backward now forwarded through *staggered stale weights*
+f_P^t . f_{P-1}^{t-1} ... f_1^{t-P+1} (Eq. 7); every stage updates with its own
+staleness tau_i (Eq. 5/6). The stash ring buffers replay exactly those weights, so
+the single jit-compiled program is per-iteration faithful to asynchronous execution.
+
+Engine state is a pure pytree -> pjit-shardable, checkpointable, and scan-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delay as delay_mod
+from repro.core import staged, stash
+from repro.core.methods import Method, get_method
+from repro.models import lm
+from repro.models.layers import ModelCfg
+from repro.optim import forecast, optimizers, schedules
+
+
+class AsyncState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar: tick counter t
+    params: tuple  # per-stage current weights w_i^t
+    stashes: tuple  # per-stage ring buffers of forward points (depth tau_i+1)
+    opt: tuple  # per-stage optimizer states
+    extra: tuple  # per-stage method-specific state (forecast history, ...)
+
+
+@dataclasses.dataclass
+class EngineCfg:
+    n_stages: int = 4
+    update_interval: int = 1  # K in Eq. 5 (microbatches accumulated per update)
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    warmup_steps: int = 0
+    total_steps: int = 10000
+    constant_lr: bool = False
+    collect_metrics: bool = True
+    stash_dtype: Any = None  # e.g. jnp.bfloat16 to halve stash memory
+    straggler_delays: Optional[tuple] = None  # override tau_i (straggler injection)
+
+
+class AsyncTrainer:
+    """Builds init/step for (model cfg, method). Step is jit-compatible and pjit-able."""
+
+    def __init__(self, model_cfg: ModelCfg, ecfg: EngineCfg, method: str | Method):
+        self.model_cfg = model_cfg
+        self.ecfg = ecfg
+        self.method = get_method(method) if isinstance(method, str) else method
+        # a stage must own >= 1 block unit: clamp P to the model's block count
+        n_units = len(model_cfg.prelude) + model_cfg.n_periods + model_cfg.enc_periods
+        P = min(ecfg.n_stages, max(n_units, 1))
+        self.P = P
+        if self.method.sync:
+            self.taus = tuple(0 for _ in range(P))
+        elif ecfg.straggler_delays is not None:
+            self.taus = tuple(ecfg.straggler_delays)
+        else:
+            self.taus = delay_mod.stage_delays(P, ecfg.update_interval)
+        kw = dict(self.method.opt_kwargs())
+        kw.setdefault("wd", ecfg.weight_decay)
+        self.opt = optimizers.make_optimizer(self.method.optimizer, lr=1.0, **kw)
+        # lr folded via lr_scale so schedules stay outside the optimizer
+        if ecfg.constant_lr:
+            self.lr_sched = schedules.constant(ecfg.lr)
+        else:
+            self.lr_sched = schedules.warmup_cosine(ecfg.lr, ecfg.warmup_steps, ecfg.total_steps)
+        self._stage_ops = None
+
+    # -- setup ---------------------------------------------------------------
+
+    def init(self, key) -> AsyncState:
+        params = lm.init_lm(key, self.model_cfg)
+        return self.init_from_params(params)
+
+    def init_from_params(self, params) -> AsyncState:
+        stages_p, stage_ops = lm.split_stages(params, self.model_cfg, self.P)
+        # Under PP, params shared across stages (tied embeddings, zamba2 shared
+        # blocks) become independent per-stage copies — an async pipeline cannot
+        # sync them without reintroducing a barrier (see DESIGN.md §7). Dedupe
+        # buffers so each stage owns its copy (also required for jit donation).
+        seen: set = set()
+
+        def dedupe(x):
+            nonlocal seen
+            key = id(x)
+            if key in seen:
+                return jnp.array(x)
+            seen.add(key)
+            return x
+
+        stages_p = [jax.tree.map(dedupe, sp) for sp in stages_p]
+        self._stage_ops = stage_ops
+        self.stage_fns = staged.make_stage_fns(self.model_cfg, stage_ops)
+        stashes = tuple(
+            stash.init_stash(sp, self.taus[i] + 1, dtype=self.ecfg.stash_dtype)
+            for i, sp in enumerate(stages_p)
+        )
+        opt_states = tuple(self.opt.init(sp) for sp in stages_p)
+        extras = tuple(self._init_extra(sp) for sp in stages_p)
+        return AsyncState(jnp.zeros((), jnp.int32), tuple(stages_p), stashes, opt_states, extras)
+
+    def _init_extra(self, sp):
+        e = {}
+        if self.method.grad_forecast == "polyfft":
+            e["hist"] = forecast.init_history(sp, self.method.forecast_hist)
+        if self.method.bwd_point == "pipemare_predict":
+            e["velocity"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), sp)
+        return e
+
+    # -- one tick -------------------------------------------------------------
+
+    def step(self, state: AsyncState, batch) -> tuple:
+        """batch: pytree with leading microbatch axis [K, ...] (K = update_interval)."""
+        m = self.method
+        t = state.step
+        P = self.P
+
+        # 1) forward/backward points per stage
+        Wfwd = []
+        for i in range(P):
+            if m.sync:
+                Wfwd.append(state.params[i])
+            else:
+                Wfwd.append(stash.get(state.stashes[i], t, self.taus[i], like=state.params[i]))
+        if m.bwd_point == "stash":
+            Wbwd = Wfwd
+        elif m.bwd_point == "current":
+            Wbwd = list(state.params)
+        elif m.bwd_point == "pipemare_predict":
+            # PipeMare: estimate the weights the forward used via update velocity:
+            # w_hat_i = w_t - tau_i * velocity_i
+            Wbwd = [
+                jax.tree.map(
+                    lambda w, v: (w.astype(jnp.float32) - self.taus[i] * v).astype(w.dtype),
+                    state.params[i], state.extra[i].get("velocity"))
+                if self.taus[i] > 0 and state.extra[i] else state.params[i]
+                for i in range(P)
+            ]
+        else:
+            raise ValueError(m.bwd_point)
+
+        # 2) staggered-stale forward + per-stage VJP backward (+ grad accumulation)
+        def lg(Wf, Wb, b):
+            return staged.staged_loss_and_grads(self.stage_fns, Wf, Wb, b)
+
+        loss, grads = staged.grad_accum(lg, Wfwd, Wbwd, batch,
+                                        unroll=self.model_cfg.unroll)
+
+        # 3) gradient forecasting corrections (baselines of Sec. 5.4)
+        new_extras = [dict(e) for e in state.extra]
+        if m.grad_forecast == "second_order":
+            grads = [
+                forecast.second_order_correct(grads[i], state.params[i], Wfwd[i])
+                if self.taus[i] > 0 else grads[i]
+                for i in range(P)
+            ]
+        elif m.grad_forecast == "polyfft":
+            h = m.forecast_hist
+            for i in range(P):
+                new_extras[i]["hist"] = forecast.push_history(state.extra[i]["hist"], grads[i], h)
+            grads = [
+                forecast.polyfft_predict(new_extras[i]["hist"], h, float(self.taus[i]))
+                if self.taus[i] > 0 else grads[i]
+                for i in range(P)
+            ]
+
+        # 4) per-stage optimizer update with Eq. 13 stage schedules
+        lr_t = self.lr_sched(t)
+        new_params, new_opts, new_stashes = [], [], []
+        aux_by_stage = []
+        for i in range(P):
+            lr_scale = lr_t
+            if m.lr_discount and self.taus[i] > 0:
+                lr_scale = lr_scale * schedules.lr_discount_factor(self.taus[i], t, m.lr_discount_T)
+            mom = None
+            if m.stage_momentum:
+                mom = schedules.stage_momentum(i + 1, P)
+            np_i, no_i, aux = self.opt.update(state.params[i], grads[i], state.opt[i],
+                                              lr_scale=lr_scale, mom=mom, t=t)
+            new_params.append(np_i)
+            new_opts.append(no_i)
+            aux_by_stage.append(aux)
+            if m.bwd_point == "pipemare_predict":
+                beta = 0.9
+                new_extras[i]["velocity"] = jax.tree.map(
+                    lambda v, s: beta * v + (1 - beta) * s,
+                    state.extra[i]["velocity"], aux["step_dir"])
+
+        # 5) stash the next tick's forward point
+        for i in range(P):
+            if m.fwd_point == "current":
+                fp = new_params[i]
+            elif m.fwd_point == "lookahead":
+                fp = aux_by_stage[i]["lookahead"]
+            elif m.fwd_point == "xpipe_predict":
+                # XPipe: predict weights tau_i updates ahead along the optimizer step
+                fp = jax.tree.map(
+                    lambda w, s: (w.astype(jnp.float32) + self.taus[i] * s).astype(w.dtype),
+                    new_params[i], aux_by_stage[i]["step_dir"])
+            else:
+                raise ValueError(m.fwd_point)
+            new_stashes.append(stash.push(state.stashes[i], fp, t + 1))
+
+        metrics = {"loss": loss, "lr": lr_t}
+        if self.ecfg.collect_metrics and not m.sync:
+            # weight discrepancy Delta_t at stage 1 (largest delay) — Fig. 4 'gap'
+            d = jax.tree.map(
+                lambda w, wb: w.astype(jnp.float32) - wb.astype(jnp.float32),
+                state.params[0], Wfwd[0])
+            sq = sum(jnp.vdot(x, x) for x in jax.tree.leaves(d))
+            n = sum(x.size for x in jax.tree.leaves(d))
+            metrics["stage1_gap_rmse"] = jnp.sqrt(sq / n)
+            # cos(Delta_t, d_bar_t): alignment of delay with the stale step (Prop. 1)
+            dbar = aux_by_stage[0]["last_step"]
+            num = sum(jnp.vdot(a, b) for a, b in zip(jax.tree.leaves(d), jax.tree.leaves(dbar)))
+            den = jnp.sqrt(sq) * jnp.sqrt(sum(jnp.vdot(x, x) for x in jax.tree.leaves(dbar)))
+            metrics["stage1_align_cos"] = num / (den + 1e-20)
+
+        new_state = AsyncState(t + 1, tuple(new_params), tuple(new_stashes),
+                               tuple(new_opts), tuple(dict(e) for e in new_extras))
+        return new_state, metrics
+
+    # -- convenience ----------------------------------------------------------
+
+    def jit_step(self, donate=True):
+        return jax.jit(self.step, donate_argnums=(0,) if donate else ())
+
+    def merge_params(self, state: AsyncState):
+        """Re-assemble the monolithic param pytree (for eval/serve/checkpoints)."""
+        merged: dict = {}
+        for sp in state.params:
+            for k, v in sp.items():
+                if k in ("scan", "enc_scan") and k in merged:
+                    merged[k] = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), merged[k], v)
+                elif k == "prelude" and k in merged:
+                    merged[k] = {**merged[k], **v}
+                elif k not in merged:
+                    merged[k] = v
+        return merged

@@ -1,0 +1,79 @@
+"""Method registry: the paper's method, its variants, and every baseline it compares
+against (Table 1, Figs. 2-8, 12).
+
+A method is a declarative recipe the engine interprets:
+  fwd_point  — what each stage stashes as the point its forward runs at
+  bwd_point  — where each stage's VJP is linearized
+  optimizer  — per-stage optimizer kind + hyperparams
+  lr_discount / stage_momentum — Eq. 13 stage-dependent corrections
+  grad_forecast — gradient forecasting transform applied to stale grads
+  sync       — synchronous (no staleness; GPipe)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    name: str
+    optimizer: str = "adamw"  # adamw | nadam | nadam_nodiscount | sgd_nag | ...
+    opt_kw: tuple = ()  # extra optimizer kwargs as a tuple of (k, v)
+    sync: bool = False
+    fwd_point: str = "current"  # current | lookahead | xpipe_predict
+    bwd_point: str = "stash"  # stash | current | pipemare_predict
+    lr_discount: bool = False
+    lr_discount_T: int = 6000
+    stage_momentum: bool = False
+    grad_forecast: Optional[str] = None  # None | second_order | polyfft
+    forecast_hist: int = 8
+    # memory class as reported in Table 1 (P = stages, N = params)
+    memory: str = "O(PN)"
+
+    def opt_kwargs(self):
+        return dict(self.opt_kw)
+
+
+METHODS = {}
+
+
+def _reg(m: Method):
+    METHODS[m.name] = m
+    return m
+
+
+# --- synchronous baseline ---------------------------------------------------
+_reg(Method("gpipe", optimizer="adamw", sync=True, memory="O(N)"))
+
+# --- async baselines ----------------------------------------------------------
+_reg(Method("pipedream", optimizer="adamw", fwd_point="current", bwd_point="stash"))
+_reg(Method("pipemare", optimizer="adamw", fwd_point="current", bwd_point="pipemare_predict",
+            lr_discount=True, memory="O(N)"))
+_reg(Method("pipedream_lr", optimizer="adamw", lr_discount=True))
+_reg(Method("lr_second_order", optimizer="adamw", lr_discount=True, grad_forecast="second_order"))
+_reg(Method("polyfft", optimizer="adamw", grad_forecast="polyfft"))
+_reg(Method("xpipe", optimizer="adamw", fwd_point="xpipe_predict", bwd_point="stash"))
+
+# --- ours --------------------------------------------------------------------
+_reg(Method("ours", optimizer="nadam", opt_kw=(("b1", 0.99),)))
+_reg(Method("ours_theory", optimizer="sgd_nag", fwd_point="lookahead"))
+_reg(Method("ours_nows", optimizer="nadam", bwd_point="current", lr_discount=True,
+            stage_momentum=True, memory="O(N)"))
+# ablations
+_reg(Method("nag_base", optimizer="nadam_nodiscount", opt_kw=(("b1", 0.99),)))
+_reg(Method("ours_adaptive_mom", optimizer="nadam", stage_momentum=True))
+# beyond-paper: delay-adaptive momentum as straggler mitigation (see ft/)
+_reg(Method("ours_delay_adaptive", optimizer="nadam", opt_kw=(("b1", 0.99),),
+            stage_momentum=True))
+# composition checks (Fig. 4: NAG + other corrections)
+_reg(Method("ours_lr", optimizer="nadam", opt_kw=(("b1", 0.99),), lr_discount=True))
+_reg(Method("ours_second_order", optimizer="nadam", opt_kw=(("b1", 0.99),),
+            grad_forecast="second_order"))
+_reg(Method("ours_polyfft", optimizer="nadam", opt_kw=(("b1", 0.99),), grad_forecast="polyfft"))
+
+
+def get_method(name: str) -> Method:
+    if name not in METHODS:
+        raise ValueError(f"unknown method {name!r}; have {sorted(METHODS)}")
+    return METHODS[name]

@@ -1,0 +1,119 @@
+"""Staged forward/backward with per-stage weight substitution.
+
+The backward pass is the manual stage-chain rule: stage i's VJP is linearized at
+(Wbwd_i, carry_i) where carry_i is the activation produced by the *forward* weights.
+- Wbwd == Wfwd        -> exact backprop through the (stale) forward weights
+                         == PipeDream weight stashing (paper Eq. 6).
+- Wbwd == current     -> the no-weight-stash idealization (paper Eq. 12).
+- Wbwd == predicted   -> PipeMare backward weight prediction.
+
+Each stage is recomputed inside its VJP, i.e. activation checkpointing at stage
+boundaries comes for free.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.layers import ModelCfg
+
+
+def make_stage_fns(cfg: ModelCfg, stage_ops: Sequence[list]):
+    """stage_fn(i): (stage_params, carry, batch) -> carry."""
+
+    def mk(ops):
+        def f(sp, carry, batch):
+            out, _ = lm.run_stage_ops(sp, ops, carry, batch, cfg)
+            return out
+
+        return f
+
+    return [mk(ops) for ops in stage_ops]
+
+
+def init_carry():
+    return {"x": None, "enc": None, "aux": jnp.zeros((), jnp.float32)}
+
+
+def staged_forward(stage_fns, Ws, batch):
+    """Returns (loss, carries): carries[i] = input carry of stage i."""
+    carry = init_carry()
+    carries = []
+    for f, w in zip(stage_fns, Ws):
+        carries.append(carry)
+        carry = f(w, carry, batch)
+    return carry["loss"], carries
+
+
+def _loss_seed(carry_out):
+    """Cotangent seeding d(loss)=1 for a stage-output carry."""
+    ct = jax.tree.map(lambda x: jnp.zeros_like(x), carry_out)
+    ct["loss"] = jnp.ones_like(carry_out["loss"])
+    return ct
+
+
+def staged_loss_and_grads(stage_fns, Wfwd, Wbwd, batch):
+    """Manual per-stage chain rule. Returns (loss, grads_list).
+
+    Two regimes:
+    - Wbwd is Wfwd (weight-stashing methods: correct backprop at the stale
+      weights): ONE-PASS — the vjp-forward itself produces the carries, so the
+      whole step costs fwd + bwd instead of 2x fwd + bwd. All stages' residuals
+      are live simultaneously, but per-block remat inside the layer scans keeps
+      that to one boundary activation per layer (§Perf H1).
+    - Wbwd != Wfwd (no-stash / PipeMare-predicted backward): forward through
+      Wfwd storing stage-boundary carries, then per-stage VJPs linearized at
+      (Wbwd_i, carry_i) — paper Eq. 12 semantics.
+    """
+    P = len(stage_fns)
+    if Wbwd is Wfwd:
+        vjps = []
+        carry = init_carry()
+        for i in range(P):
+            f = stage_fns[i]
+            carry, vjp_fn = jax.vjp(lambda w, c, f=f: f(w, c, batch), Wfwd[i], carry)
+            vjps.append(vjp_fn)
+        loss = carry["loss"]
+        ct = _loss_seed(carry)
+        grads = [None] * P
+        for i in reversed(range(P)):
+            gW, ct = vjps[i](ct)
+            grads[i] = gW
+        return loss, grads
+
+    loss, carries = staged_forward(stage_fns, Wfwd, batch)
+    grads = [None] * P
+    ct = None
+    for i in reversed(range(P)):
+        f = stage_fns[i]
+        out_i, vjp_fn = jax.vjp(lambda w, c: f(w, c, batch), Wbwd[i], carries[i])
+        if ct is None:
+            ct = _loss_seed(out_i)
+        gW, ct = vjp_fn(ct)
+        grads[i] = gW
+    return loss, grads
+
+
+def grad_accum(loss_and_grads_fn, Wfwd, Wbwd, batches, unroll=False):
+    """Accumulate over the leading microbatch axis of `batches` via scan."""
+    K = jax.tree.leaves(batches)[0].shape[0]
+    if K == 1:
+        b0 = jax.tree.map(lambda x: x[0], batches)
+        return loss_and_grads_fn(Wfwd, Wbwd, b0)
+
+    def body(acc, b):
+        loss, grads = loss_and_grads_fn(Wfwd, Wbwd, b)
+        acc_loss, acc_grads = acc
+        acc_grads = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc_grads, grads)
+        return (acc_loss + loss, acc_grads), None
+
+    b0 = jax.tree.map(lambda x: x[0], batches)
+    loss0, grads0 = loss_and_grads_fn(Wfwd, Wbwd, b0)
+    grads0 = jax.tree.map(lambda g: g.astype(jnp.float32), grads0)
+    rest = jax.tree.map(lambda x: x[1:], batches)
+    (loss, grads), _ = jax.lax.scan(body, (loss0, grads0), rest, unroll=unroll)
+    scale = 1.0 / K
+    return loss * scale, jax.tree.map(lambda g: g * scale, grads)

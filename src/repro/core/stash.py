@@ -1,0 +1,45 @@
+"""Weight-stash ring buffers: pytrees with a leading time axis, mod-indexed.
+
+PipeDream-style weight stashing made functional: `push` writes slot (t mod depth),
+`get` reads slot ((t - tau) mod depth). No rolls — O(1) writes under jit, and the
+buffers shard like the params they stash (leading axis unsharded).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_stash(tree, depth: int, dtype=None):
+    """Stash filled with `depth` copies of `tree` (warmup base case, Thm. 1)."""
+
+    def mk(x):
+        x = x.astype(dtype) if dtype is not None else x
+        return jnp.broadcast_to(x[None], (depth,) + x.shape).copy()
+
+    return jax.tree.map(mk, tree)
+
+
+def stash_depth(stash) -> int:
+    return jax.tree.leaves(stash)[0].shape[0]
+
+
+def push(stash, tree, t):
+    """Write `tree` at slot t mod depth. t: traced int32 scalar."""
+    depth = stash_depth(stash)
+    slot = jnp.mod(t, depth)
+
+    def upd(buf, x):
+        return jax.lax.dynamic_update_index_in_dim(buf, x.astype(buf.dtype), slot, 0)
+
+    return jax.tree.map(upd, stash, tree)
+
+
+def get(stash, t, tau: int, like=None):
+    """Read the entry written at tick (t - tau). If like is given, cast to its dtypes."""
+    depth = stash_depth(stash)
+    slot = jnp.mod(t - tau, depth)
+    out = jax.tree.map(lambda buf: jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False), stash)
+    if like is not None:
+        out = jax.tree.map(lambda o, l: o.astype(l.dtype), out, like)
+    return out

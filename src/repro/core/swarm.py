@@ -1,0 +1,145 @@
+"""SWARM-style stage-wise data parallelism (paper Sec. 5.7, Fig. 8).
+
+Each pipeline stage has R worker replicas; workers take async local update steps on
+their own microbatches and periodically synchronize within the stage (all-reduce
+mean), exactly SWARM's gradient-accumulation-free async variant. Three modes:
+
+  swarm        — synchronous: per-tick stage-wise mean-gradient (all-reduce) update
+  swarm_async  — async local updates + periodic stage-wise weight averaging
+  swarm_ours   — swarm_async with the paper's no-weight-stash Nesterov method
+
+Replicas are a leading axis on every stage-param leaf (vmap over the engine's
+optimizer update); cross-replica sync is a mean over that axis — on a real mesh
+that axis maps to `data` and the mean lowers to an all-reduce. Optional int8 +
+error-feedback compression models the low-bandwidth decentralized links.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import staged
+from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class SwarmCfg:
+    replicas: int = 2
+    sync_every: int = 8  # stage-wise weight sync period (async modes)
+    compress: bool = False  # int8 + error feedback on sync deltas
+
+
+class SwarmState(NamedTuple):
+    inner: object  # AsyncState with replica-leading-axis params/opt/stash
+    err: tuple  # error-feedback residuals per stage (or empty dicts)
+
+
+def _quantize_int8_ef(delta, err):
+    """int8 quantize (per-leaf scale) with error feedback. Returns (deq, new_err)."""
+
+    def q(d, e):
+        d = d + e
+        scale = jnp.maximum(jnp.max(jnp.abs(d)), 1e-12) / 127.0
+        qv = jnp.clip(jnp.round(d / scale), -127, 127)
+        deq = qv * scale
+        return deq, d - deq
+
+    flat_d, treedef = jax.tree.flatten(delta)
+    flat_e = jax.tree.leaves(err)
+    out = [q(d, e) for d, e in zip(flat_d, flat_e)]
+    deq = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_err = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return deq, new_err
+
+
+class SwarmTrainer:
+    """Wraps AsyncTrainer with a replica axis per stage."""
+
+    def __init__(self, model_cfg, ecfg: EngineCfg, method: str, scfg: SwarmCfg):
+        self.inner = AsyncTrainer(model_cfg, ecfg, method)
+        self.scfg = scfg
+
+    def init(self, key) -> SwarmState:
+        base = self.inner.init(key)
+        R = self.scfg.replicas
+
+        def rep(tree):
+            return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (R,) + x.shape).copy(), tree)
+
+        inner = base._replace(
+            params=tuple(rep(p) for p in base.params),
+            stashes=tuple(rep(s) for s in base.stashes),
+            opt=tuple(rep(o) for o in base.opt),
+            extra=tuple(rep(e) for e in base.extra),
+        )
+        err = tuple(jax.tree.map(lambda p: jnp.zeros(p.shape[1:], jnp.float32), p)
+                    for p in inner.params) if self.scfg.compress else tuple({} for _ in inner.params)
+        return SwarmState(inner, err)
+
+    def step(self, state: SwarmState, batch):
+        """batch leaves: [R, K, ...] — each replica its own microbatch stream."""
+        R = self.scfg.replicas
+        inner = state.inner
+
+        def one_replica(params, stashes, opt, extra, b):
+            st = inner._replace(params=params, stashes=stashes, opt=opt, extra=extra)
+            new_st, m = self.inner.step(st, b)
+            return new_st.params, new_st.stashes, new_st.opt, new_st.extra, m
+
+        # vmap over the replica axis of every stage tree + the batch
+        new_p, new_s, new_o, new_e, metrics = jax.vmap(
+            one_replica, in_axes=(0, 0, 0, 0, 0))(
+            inner.params, inner.stashes, inner.opt, inner.extra, batch)
+
+        t = inner.step + 1
+        do_sync = jnp.equal(jnp.mod(t, self.scfg.sync_every), 0)
+
+        def sync_stage(p, e):
+            mean = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0), p)
+            if self.scfg.compress:
+                delta = jax.tree.map(
+                    lambda mn, x: mn[None] - x.astype(jnp.float32), mean, p)
+                # each replica applies the (quantized) delta toward the mean
+                deltas, errs = [], []
+                for r in range(R):
+                    d_r = jax.tree.map(lambda d: d[r], delta)
+                    dq, ne = _quantize_int8_ef(d_r, e)
+                    deltas.append(dq)
+                    errs.append(ne)
+                newp = jax.tree.map(
+                    lambda x, *ds: (x.astype(jnp.float32) + jnp.stack(ds)).astype(x.dtype),
+                    p, *deltas)
+                new_err = jax.tree.map(lambda *es: sum(es) / R, *errs)
+                return newp, new_err
+            newp = jax.tree.map(
+                lambda x, mn: jnp.broadcast_to(mn[None], x.shape).astype(x.dtype), p, mean)
+            return newp, e
+
+        synced, errs = [], []
+        for i in range(len(new_p)):
+            sp, se = sync_stage(new_p[i], state.err[i])
+            # only apply on sync ticks
+            sp = jax.tree.map(lambda a, b: jnp.where(do_sync, a, b), sp, new_p[i])
+            if self.scfg.compress:
+                se = jax.tree.map(lambda a, b: jnp.where(do_sync, a, b), se, state.err[i])
+            synced.append(sp)
+            errs.append(se)
+
+        new_inner = inner._replace(step=t, params=tuple(synced), stashes=new_s,
+                                   opt=new_o, extra=new_e)
+        out_metrics = {k: jnp.mean(v) for k, v in metrics.items()}
+        return SwarmState(new_inner, tuple(errs)), out_metrics
+
+    def jit_step(self):
+        return jax.jit(self.step, donate_argnums=(0,))
+
+    def eval_loss(self, state: SwarmState, batch):
+        """Loss of replica-0 weights (post-sync evaluation)."""
+        params0 = tuple(jax.tree.map(lambda x: x[0], p) for p in state.inner.params)
+        loss, _ = staged.staged_forward(self.inner.stage_fns, params0,
+                                        jax.tree.map(lambda x: x[0][0], batch))
+        return loss

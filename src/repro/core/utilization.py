@@ -1,0 +1,50 @@
+"""Pipeline utilization / bubble analytics (Fig. 5 runtime model, formalized).
+
+Time units are per-stage microbatch-times; `c` is a per-stage-boundary overhead
+(activation transfer on the slow link) relative to a single layer's compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineTiming:
+    iter_time: float  # one optimizer-step wall time (arbitrary units)
+    bubble_frac: float  # idle fraction of stage-time
+    utilization: float  # 1 - bubble
+
+
+def gpipe_timing(P: int, M: int, L: int, *, t_layer: float = 1.0, c: float = 0.15):
+    """GPipe: fill/drain bubble of (P-1) stage-slots per flush."""
+    t_stage = t_layer * L / P + c
+    total = (M + P - 1) * t_stage
+    useful = M * t_stage
+    return PipelineTiming(total, (total - useful) / total, useful / total)
+
+
+def onef_oneb_sync_timing(P: int, M: int, L: int, *, t_layer: float = 1.0, c: float = 0.15):
+    """Synchronous 1F1B (PipeDream-flush): same bubble, lower activation memory."""
+    return gpipe_timing(P, M, L, t_layer=t_layer, c=c)
+
+
+def async_timing(P: int, M: int, L: int, *, t_layer: float = 1.0, c: float = 0.15):
+    """Asynchronous 1F1B (the paper): no flush, 100% utilization at steady state."""
+    t_stage = t_layer * L / P + c
+    return PipelineTiming(M * t_stage, 0.0, 1.0)
+
+
+def relative_slowdown(P: int, base_P: int, M: int, L: int, kind: str, **kw) -> float:
+    """Iteration-time ratio vs the base_P-stage run (paper Fig. 5's x-axis)."""
+    f = {"gpipe": gpipe_timing, "sync1f1b": onef_oneb_sync_timing,
+         "async": async_timing}[kind]
+    return f(P, M, L, **kw).iter_time / f(base_P, M, L, **kw).iter_time
+
+
+def straggler_effective_delay(taus: tuple, slow_stage: int, slow_factor: float) -> tuple:
+    """A stage running slow_factor x slower in async PP does not stall peers — it
+    *adds delay*: microbatches queue, so its own tau (and its upstreams') grow by
+    roughly the extra in-flight count. Returns adjusted taus (straggler model used
+    by EngineCfg.straggler_delays + ft.loop.adaptive_gamma)."""
+    extra = max(0, int(round((slow_factor - 1.0) * (len(taus) - slow_stage))))
+    return tuple(t + extra if i <= slow_stage else t for i, t in enumerate(taus))

@@ -1,0 +1,76 @@
+"""Deterministic synthetic LM data: a Zipf-unigram / permutation-bigram Markov source.
+
+token_{t+1} = perm[token_t] with prob q, else ~ Zipf(alpha).  The bigram component is
+learnable structure (a trained model approaches the analytic entropy floor), the Zipf
+component keeps the unigram distribution realistic. Fully deterministic in
+(seed, step, host shard) -> reproducible across restarts and elastic resharding.
+WikiText/BC/OWT stand-in for this offline container (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, *, alpha: float = 1.2, q: float = 0.7, seed: int = 0):
+        self.vocab_size = vocab_size
+        self.q = q
+        self.seed = seed
+        w = 1.0 / np.arange(1, vocab_size + 1, dtype=np.float64) ** alpha
+        p = w / w.sum()
+        self.cdf = jnp.asarray(np.cumsum(p), jnp.float32)
+        self.perm = jax.random.permutation(jax.random.PRNGKey(seed + 7), vocab_size)
+        # analytic floor: H = q*H(q-part) ... (reported by entropy_floor())
+        self._p = p
+
+    def entropy_floor(self) -> float:
+        """Per-token conditional entropy of the source (nats) — loss lower bound."""
+        q, p = self.q, self._p
+        # next ~ q*delta_perm + (1-q)*zipf: H = -E[log(q*1[y=perm(x)] + (1-q) p_y)]
+        # exact for the delta part; zipf part approximated by expectation over y~p
+        h_hit = -(q + (1 - q) * p) * np.log(q + (1 - q) * p)  # y == perm[x]
+        h_miss = -(1 - q) * p * np.log((1 - q) * p)
+        return float(np.sum(h_hit * p / p.sum()) + (np.sum(h_miss) - np.sum(h_miss * p)))
+
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3, 4))
+    def batch(self, step, k_micro: int, batch: int, seq: int):
+        """[K, B, S] tokens + next-token labels, deterministic in `step`."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        n = k_micro * batch
+        first = jnp.searchsorted(self.cdf, jax.random.uniform(k1, (n,)))
+        use_perm = jax.random.uniform(k2, (n, seq + 1)) < self.q
+        fresh = jnp.searchsorted(self.cdf, jax.random.uniform(k3, (n, seq + 1)))
+
+        def gen(tok, inp):
+            up, fr = inp
+            nxt = jnp.where(up, self.perm[tok], fr)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(gen, first, (use_perm.T, fresh.T))
+        toks = toks.T.reshape(k_micro, batch, seq + 1)
+        return {"tokens": toks[..., :-1].astype(jnp.int32),
+                "labels": toks[..., 1:].astype(jnp.int32)}
+
+
+def make_batch_fn(cfg, k_micro: int, batch: int, seq: int, seed: int = 0):
+    src = SyntheticLM(cfg.vocab_size, seed=seed)
+
+    def fn(step: int):
+        b = src.batch(step, k_micro, batch, seq)
+        if cfg.enc_periods:
+            key = jax.random.fold_in(jax.random.PRNGKey(seed + 13), step)
+            b["frames"] = 0.02 * jax.random.normal(
+                key, (k_micro, batch, cfg.n_frames, cfg.d_model), jnp.float32)
+        if cfg.n_prefix_img:
+            key = jax.random.fold_in(jax.random.PRNGKey(seed + 17), step)
+            b["patches"] = 0.02 * jax.random.normal(
+                key, (k_micro, batch, cfg.n_prefix_img, cfg.d_model), jnp.float32)
+        return b
+
+    return fn, src

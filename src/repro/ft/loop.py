@@ -1,0 +1,85 @@
+"""Fault-tolerant training loop: periodic checkpoints, exact resume, preemption
+simulation, and straggler handling hooks.
+
+Straggler mitigation (beyond-paper, DESIGN.md §5): in async PP a straggling stage is
+*just a larger tau_i* — there is no barrier for it to hold up. The two levers are
+(1) delay-adaptive momentum: raise gamma_i toward 1 with observed delay (Prop. 1
+says the look-ahead then keeps correcting the larger delay), implemented via
+EngineCfg.straggler_delays + Method.stage_momentum/`adaptive_gamma`;
+(2) the engine's stash depth already sizes itself to tau_i, so a straggler costs
+memory, not throughput.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+class SimulatedPreemption(Exception):
+    """Raised by a fault hook to model a node loss / SIGTERM."""
+
+
+def adaptive_gamma(tau: int, tau_max: int, lo: float = 0.9, hi: float = 0.99) -> float:
+    """Delay-adaptive momentum: larger observed delay -> gamma closer to 1."""
+    if tau_max <= 0:
+        return lo
+    return lo + (hi - lo) * min(tau / tau_max, 1.0)
+
+
+@dataclass
+class LoopResult:
+    losses: list = field(default_factory=list)
+    metrics: list = field(default_factory=list)
+    resumed_from: int = -1
+    wall_s: float = 0.0
+
+
+def train_loop(trainer, batch_fn: Callable[[int], dict], steps: int, *,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 0, keep: int = 3,
+               key=None, state=None, fault_hook: Callable[[int], None] | None = None,
+               log_every: int = 0, log_fn=print) -> tuple:
+    """Run (or resume) training. Returns (state, LoopResult).
+
+    Resume: if ckpt_dir has a checkpoint, restores it and continues from its step.
+    fault_hook(step) may raise SimulatedPreemption — the loop checkpoints on the way
+    out so a rerun resumes exactly.
+    """
+    res = LoopResult()
+    if state is None:
+        state = trainer.init(key if key is not None else jax.random.PRNGKey(0))
+    start = 0
+    if ckpt_dir:
+        path, step0 = ckpt.latest(ckpt_dir)
+        if path is not None:
+            state, meta = ckpt.restore(path, state)
+            start = meta["step"]
+            res.resumed_from = start
+    step_fn = trainer.jit_step()
+    t0 = time.time()
+    i = start
+    try:
+        while i < steps:
+            batch = batch_fn(i)
+            state, m = step_fn(state, batch)
+            res.losses.append(float(m["loss"]))
+            res.metrics.append({k: float(v) for k, v in m.items()})
+            i += 1
+            if ckpt_dir and ckpt_every and i % ckpt_every == 0:
+                ckpt.save_step(ckpt_dir, state, i, keep=keep)
+            if log_every and i % log_every == 0:
+                log_fn(f"step {i}: loss={res.losses[-1]:.4f}")
+            if fault_hook is not None:
+                fault_hook(i)
+    except SimulatedPreemption:
+        if ckpt_dir:
+            ckpt.save_step(ckpt_dir, state, i, keep=keep)
+        res.wall_s = time.time() - t0
+        raise
+    res.wall_s = time.time() - t0
+    return state, res

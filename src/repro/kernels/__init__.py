@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (validated in interpret mode against ref.py oracles):
+flash_attention, ssd_scan (Mamba-2 SSD), nag_update (fused delay-corrected NAdam),
+rmsnorm_residual. Public jit'd wrappers in ops.py."""

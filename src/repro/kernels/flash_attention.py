@@ -1,0 +1,120 @@
+"""Flash attention for TPU (Pallas): q/kv-blocked online softmax in VMEM.
+
+TPU adaptation of the IO-aware attention idea (FlashAttention, arXiv:2205.14135):
+instead of CUDA warps/shared-memory, blocks are staged HBM->VMEM by BlockSpec and
+the MXU consumes (block_q x d) @ (d x block_k) tiles; the kv-block axis is the
+*last* grid axis, which TPU iterates sequentially per core, so the running softmax
+state (m, l, acc) lives in VMEM scratch across kv steps. Supports causal masking,
+sliding windows, and gemma-style logit softcap. Block sizes default to MXU-aligned
+(128) multiples.
+
+Grid: (batch*kv_heads*group, num_q_blocks, num_kv_blocks).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, block_q, block_k, seq_len):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0].astype(jnp.float32)  # [bk, d]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128, interpret=None):
+    """q [B, H, Sq, d]; k, v [B, Hkv, Sk, d] with H = Hkv * G. Returns [B, H, Sq, d].
+
+    Sq/Sk are padded to block multiples internally; padded kv is masked out.
+    """
+    B, H, Sq, d = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if interpret is None:
+        interpret = jax.devices()[0].platform == "cpu"
+
+    block_q = min(block_q, max(8, Sq))
+    block_k = min(block_k, max(8, Sk))
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Sqp, Skp = Sq + pq, Sk + pk
+
+    qf = qp.reshape(B * H, Sqp, d)
+    kf = jnp.repeat(kp, G, axis=1).reshape(B * H, Skp, d)
+    vf = jnp.repeat(vp, G, axis=1).reshape(B * H, Skp, d)
+
+    grid = (B * H, Sqp // block_q, Skp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          softcap=softcap, block_q=block_q, block_k=block_k,
+                          seq_len=Sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sqp, d), q.dtype),
+        scratch_shapes=[  # running softmax state (m, l, acc) in VMEM
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sqp, d)[:, :, :Sq, :]

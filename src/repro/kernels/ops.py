@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels (+ dispatch into model code)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.nag_update import nag_update
+from repro.kernels.ssd_scan import ssd_scan
+
+flash_attention_op = jax.jit(
+    flash_attention,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k",
+                     "interpret"))
+
+ssd_scan_op = jax.jit(ssd_scan, static_argnames=("chunk", "interpret"))
+
+nag_update_op = jax.jit(
+    nag_update,
+    static_argnames=("b1", "b2", "eps", "wd", "discount", "block", "interpret"))
+
+
+def fused_nadam_tree(params, grads, m, v, *, lr, count, mu_prod, b1=0.99, b2=0.95,
+                     eps=1e-8, wd=0.01, psi=0.004, discount=True, interpret=None):
+    """Tree-level fused NAdam step using the Pallas kernel per leaf.
+
+    Mirrors optim.optimizers.nadam (same mu warmup bookkeeping); returns
+    (new_params, new_m, new_v, new_mu_prod).
+    """
+    c = count + 1
+    cf = c.astype(jnp.float32)
+    mu_t = b1 * (1.0 - 0.5 * 0.96 ** (cf * psi))
+    mu_next = b1 * (1.0 - 0.5 * 0.96 ** ((cf + 1) * psi))
+    mp = mu_prod * mu_t
+    mpn = mp * mu_next
+    bc2 = 1 - b2 ** cf
+
+    def leaf(p, g, m_, v_):
+        return nag_update(p, m_, v_, g, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
+                          mu_t=mu_t, mu_next=mu_next, mu_prod=mp, mu_prod_next=mpn,
+                          bc2=bc2, discount=discount, interpret=interpret)
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(m)
+    flat_v = jax.tree.leaves(v)
+    outs = [leaf(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    newp = jax.tree.unflatten(td, [o[0] for o in outs])
+    newm = jax.tree.unflatten(td, [o[1] for o in outs])
+    newv = jax.tree.unflatten(td, [o[2] for o in outs])
+    return newp, newm, newv, mp

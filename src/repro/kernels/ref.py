@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None, scale=None):
+    """q [B,H,Sq,d]; k,v [B,Hkv,Sk,d]. Dense attention, fp32 softmax."""
+    B, H, Sq, d = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kf = jnp.repeat(k, G, axis=1)
+    vf = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    ok = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B_, C_, *, h0=None):
+    """Sequential (exact) SSD recurrence. x [b,S,H,P]; dt [b,S,H]; A [H];
+    B_,C_ [b,S,G,N]. Returns (y [b,S,H,P], h_final [b,H,N,P])."""
+    b, S, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C_, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # [b,H,P], [b,H], [b,H,N], [b,H,N]
+        da = jnp.exp(dtt * A[None, :])  # [b,H]
+        h = h * da[:, :, None, None] + jnp.einsum("bh,bhn,bhp->bhnp", dtt, Bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, h)
+        return h, y
+
+    h = jnp.zeros((b, H, N, Pd), jnp.float32) if h0 is None else h0
+    h, ys = jax.lax.scan(step, h, (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                                   Bh.swapaxes(0, 1), Ch.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h
+
+
+def nag_update_ref(p, m, v, g, *, lr, b1, b2, eps, wd, mu_t, mu_next, mu_prod,
+                   mu_prod_next, bc2, discount=True):
+    """Delay-corrected NAdam (paper Eq. 10 practical form), elementwise."""
+    g = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * g
+    v_new = b2 * v + (1 - b2) * g * g
+    denom = jnp.sqrt(v_new / bc2) + eps
+    if discount:
+        mhat = mu_next * m_new / (1 - mu_prod_next) + (1 - mu_t) * g / (1 - mu_prod)
+    else:
+        mhat = mu_next * m_new / (1 - mu_prod_next) + g
+    p_new = p * (1 - lr * wd) - lr * mhat / denom
+    return p_new, m_new, v_new

@@ -1,0 +1,65 @@
+"""Fused residual-add + RMSNorm for TPU (Pallas).
+
+The pre-norm block boundary `y = rmsnorm(x + h); out = x + h` reads/writes x and h
+twice when unfused. This kernel makes one pass per (rows, d) tile: computes the
+residual sum, its RMS statistics (f32), and both outputs in VREGs.
+
+Grid: (n_row_tiles,) over flattened [tokens, d].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, h_ref, s_ref, r_ref, y_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    r = x + h
+    var = jnp.mean(r * r, axis=-1, keepdims=True)
+    y = r * jax.lax.rsqrt(var + eps) * (1.0 + s_ref[...].astype(jnp.float32))
+    r_ref[...] = r.astype(r_ref.dtype)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def rmsnorm_residual(x, h, scale, *, eps=1e-6, block_rows=8, interpret=None):
+    """x, h: [..., d]; scale: [d]. Returns (residual=x+h, y=rmsnorm(residual)*(1+scale))."""
+    if interpret is None:
+        interpret = jax.devices()[0].platform == "cpu"
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    hf = h.reshape(-1, d)
+    n = xf.shape[0]
+    block_rows = min(block_rows, n)
+    pad = (-n) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        hf = jnp.pad(hf, ((0, pad), (0, 0)))
+    nb = (n + pad) // block_rows
+    r, y = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(((n + pad), d), x.dtype)] * 2,
+        interpret=interpret,
+    )(xf, hf, scale)
+    return r[:n].reshape(shape), y[:n].reshape(shape)
+
+
+def rmsnorm_residual_ref(x, h, scale, eps=1e-6):
+    r = x.astype(jnp.float32) + h.astype(jnp.float32)
+    var = jnp.mean(r * r, axis=-1, keepdims=True)
+    y = r * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return r.astype(x.dtype), y.astype(x.dtype)

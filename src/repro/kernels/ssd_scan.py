@@ -1,0 +1,109 @@
+"""Mamba-2 SSD chunked scan for TPU (Pallas).
+
+Adaptation of the SSD block decomposition (arXiv:2405.21060 Sec. 6) to the TPU
+memory hierarchy: each grid step loads one (chunk x headdim) x-tile and the
+matching B/C/dt tiles into VMEM, does the intra-chunk quadratic part on the MXU
+(L-masked C Bᵀ), and carries the running inter-chunk state [N, P] in VMEM scratch
+across the sequential chunk axis — the CUDA version's cross-block shared-memory
+handoff becomes TPU's sequential-grid scratch persistence.
+
+Grid: (B*H, n_chunks) — chunk axis last (sequential on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, h_scr, *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # [c, P]
+    dt = dt_ref[0].astype(jnp.float32)  # [c, 1]
+    A = a_ref[0].astype(jnp.float32)  # [1, 1]
+    Bm = b_ref[0].astype(jnp.float32)  # [c, N]
+    Cm = c_ref[0].astype(jnp.float32)  # [c, N]
+
+    da = dt * A  # [c,1], negative
+    cum = jnp.cumsum(da, axis=0)  # [c,1]
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum - cum.T  # [c, c] (broadcast)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(li), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [c,c]
+    y_intra = jax.lax.dot_general(scores * L * dt.T, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # [c,P]
+
+    # inter-chunk: contribution of the incoming state
+    w_in = jnp.exp(cum)  # [c,1]
+    y_inter = w_in * jax.lax.dot_general(Cm, h_scr[...], (((1,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(cum_end) h + sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    seg_end = cum[-1:, :]  # [1,1]
+    w_end = jnp.exp(seg_end - cum) * dt  # [c,1]
+    newstate = jax.lax.dot_general(Bm * w_end, x, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)  # [N,P]
+    h_scr[...] = h_scr[...] * jnp.exp(seg_end[0]) + newstate
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        hfin_ref[0] = h_scr[...].astype(hfin_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B_, C_, *, chunk=128, interpret=None):
+    """x [b,S,H,P]; dt [b,S,H]; A [H]; B_,C_ [b,S,G,N]. Returns (y, h_final).
+
+    Matches kernels.ref.ssd_ref (sequential recurrence oracle).
+    """
+    b, S, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    if interpret is None:
+        interpret = jax.devices()[0].platform == "cpu"
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequence to a chunk multiple"
+    n_chunks = S // chunk
+
+    # flatten (b, H) into the grid's first axis; broadcast B/C per head group
+    xf = x.swapaxes(1, 2).reshape(b * H, S, Pd)
+    dtf = dt.swapaxes(1, 2).reshape(b * H, S, 1)
+    Bf = jnp.repeat(B_.swapaxes(1, 2), rep, axis=1).reshape(b * H, S, N)
+    Cf = jnp.repeat(C_.swapaxes(1, 2), rep, axis=1).reshape(b * H, S, N)
+    Af = jnp.broadcast_to(A[None, :], (b, H)).reshape(b * H, 1, 1)
+
+    y, hfin = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=(b * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Pd), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, Pd), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, N, Pd), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * H, S, Pd), x.dtype),
+            jax.ShapeDtypeStruct((b * H, N, Pd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, Pd), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, Af, Bf, Cf)
+    y = y.reshape(b, H, S, Pd).swapaxes(1, 2)
+    hfin = hfin.reshape(b, H, N, Pd)
+    return y, hfin

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import (device count locks at first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell on the
+production meshes, print memory/cost analysis, and dump roofline raw terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out report.json]
+
+Single-pod (16,16): pjit async train_step (paper method as first-class feature) or
+serve steps. Multi-pod (2,16,16): 'pod' carries cross-pod parallelism — mode 'pp'
+(default) uses the shard_map 1F1B async pipeline over the pod axis (the paper's
+setting: stages over slow links); mode 'dp' shards the global batch over
+('pod','data') as a fallback sanity path.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, ASSIGNED, SHAPES, cell_runnable, get_config, norm_name
+from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.parallel import sharding as shd
+
+
+def _maybe(spec_tree, sds_tree, mesh):
+    """Drop sharded dims that do not divide (e.g. batch=1 cells)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, sds):
+        out = []
+        for d, names in enumerate(spec):
+            if names is None:
+                out.append(None)
+                continue
+            ns = names if isinstance(names, tuple) else (names,)
+            tot = int(np.prod([sizes[n] for n in ns]))
+            out.append(names if sds.shape[d] % tot == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_train(cfg, cell, mesh, method="ours", n_stages=4, pod_mode="dp"):
+    multi = "pod" in mesh.axis_names
+    if multi and pod_mode == "pp":
+        from repro.parallel import pipeline_spmd
+        return pipeline_spmd.lower_pipeline_train(cfg, cell, mesh, method=method)
+    ecfg = EngineCfg(n_stages=n_stages, update_interval=cell.accum,
+                     collect_metrics=False, stash_dtype=jnp.bfloat16,
+                     total_steps=50000, warmup_steps=3000)
+    tr = AsyncTrainer(cfg, ecfg, method)
+    state_sds = jax.eval_shape(tr.init, jax.random.PRNGKey(0))
+    batch_sds = S.train_batch_specs(cfg, cell)
+
+    state_spec = shd.spec_for_tree(state_sds, mesh, extra_data_axis="pod" if multi else None)
+    b_spec = jax.tree.map(
+        lambda x: shd.batch_spec(mesh, len(x.shape), leading_micro=True, pod_data=multi),
+        batch_sds)
+    state_spec = _maybe(state_spec, state_sds, mesh)
+    b_spec = _maybe(b_spec, batch_sds, mesh)
+
+    with mesh:
+        jitted = jax.jit(
+            tr.step,
+            donate_argnums=(0,),
+            in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), state_spec,
+                                       is_leaf=lambda x: isinstance(x, P)),
+                          jax.tree.map(lambda s: NamedSharding(mesh, s), b_spec,
+                                       is_leaf=lambda x: isinstance(x, P))),
+        )
+        lowered = jitted.lower(state_sds, batch_sds)
+    return lowered
+
+
+def lower_prefill(cfg, cell, mesh):
+    batch_sds = S.prefill_batch_specs(cfg, cell)
+    multi = "pod" in mesh.axis_names
+    params_sds = jax.eval_shape(lambda k: lm.init_lm(k, cfg), jax.random.PRNGKey(0))
+    p_spec = _maybe(shd.spec_for_tree(params_sds, mesh), params_sds, mesh)
+    b_spec = _maybe(jax.tree.map(
+        lambda x: shd.batch_spec(mesh, len(x.shape), leading_micro=False, pod_data=multi),
+        batch_sds), batch_sds, mesh)
+
+    def fn(params, batch):
+        return lm.serve_prefill(params, batch, cfg, max_len=cell.seq)
+
+    with mesh:
+        lowered = jax.jit(
+            fn,
+            in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec,
+                                       is_leaf=lambda x: isinstance(x, P)),
+                          jax.tree.map(lambda s: NamedSharding(mesh, s), b_spec,
+                                       is_leaf=lambda x: isinstance(x, P))),
+        ).lower(params_sds, batch_sds)
+    return lowered
+
+
+def lower_decode(cfg, cell, mesh):
+    params_sds = jax.eval_shape(lambda k: lm.init_lm(k, cfg), jax.random.PRNGKey(0))
+    cache_sds = jax.eval_shape(lambda: lm.init_caches(cfg, cell.batch, cell.seq))
+    if cfg.enc_periods:
+        cache_sds["enc_out"] = jax.ShapeDtypeStruct(
+            (cell.batch, cfg.n_frames, cfg.d_model), cfg.dtype)
+    tok_sds, pos_sds = S.decode_token_specs(cell)
+
+    p_spec = _maybe(shd.spec_for_tree(params_sds, mesh), params_sds, mesh)
+    c_spec = _maybe(shd.cache_spec_tree(cache_sds, mesh), cache_sds, mesh)
+
+    def fn(params, caches, tok, pos):
+        return lm.serve_decode(params, caches, tok, cfg, pos)
+
+    with mesh:
+        lowered = jax.jit(
+            fn,
+            donate_argnums=(1,),  # caches update in place
+            in_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec,
+                             is_leaf=lambda x: isinstance(x, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), c_spec,
+                             is_leaf=lambda x: isinstance(x, P)),
+                NamedSharding(mesh, P(None, None)),
+                NamedSharding(mesh, P()),
+            ),
+        ).lower(params_sds, cache_sds, tok_sds, pos_sds)
+    return lowered
+
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?(?:\.\d+)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f64": 8,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in optimized HLO (per device).
+
+    '-done' halves of async pairs are skipped to avoid double counting.
+    """
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            nb = _DTYPE_BYTES.get(dt)
+            if nb is None:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * nb
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def analyse(lowered, label: str, n_chips: int):
+    t0 = time.time()
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # donated outputs alias their inputs: true live bytes = args + temps + (out - aliased)
+    out_extra = max(0, ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    rec = {
+        "cell": label,
+        "compile_s": round(dt, 1),
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "per_device_bytes": int(ma.argument_size_in_bytes + out_extra
+                                + ma.temp_size_in_bytes),
+        "arg_bytes": int(ma.argument_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "aliased_bytes": int(ma.alias_size_in_bytes),
+        "collective_bytes": coll,
+        "n_chips": n_chips,
+    }
+    return rec, compiled
+
+
+def run_cell(arch, shape, *, multi_pod=False, method="ours", n_stages=4,
+             pod_mode="pp", accum=None):
+    ok, reason = cell_runnable(arch, shape)
+    if not ok:
+        return {"cell": f"{arch}/{shape}", "skipped": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    cell = S.make_cell(arch, shape, accum=accum)
+    cfg = S.tune_cfg(get_config(arch), cell)
+    if cell.kind == "train":
+        lowered = lower_train(cfg, cell, mesh, method=method, n_stages=n_stages,
+                              pod_mode=pod_mode if multi_pod else "dp")
+    elif cell.kind == "prefill":
+        lowered = lower_prefill(cfg, cell, mesh)
+    else:
+        lowered = lower_decode(cfg, cell, mesh)
+    tag = "multi" if multi_pod else "single"
+    rec, compiled = analyse(lowered, f"{arch}/{shape}/{tag}", n_chips)
+    rec["kind"] = cell.kind
+    rec["accum"] = cell.accum
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--method", default="ours")
+    ap.add_argument("--n-stages", type=int, default=4)
+    ap.add_argument("--pod-mode", default="pp", choices=["pp", "dp"])
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    recs = []
+    for a, s in cells:
+        try:
+            rec = run_cell(a, s, multi_pod=args.multi_pod, method=args.method,
+                           n_stages=args.n_stages, pod_mode=args.pod_mode,
+                           accum=args.accum)
+        except Exception as e:
+            rec = {"cell": f"{a}/{s}", "error": f"{type(e).__name__}: {e}"}
+        recs.append(rec)
+        print(json.dumps(rec), flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(recs, f, indent=1)
+    nerr = sum(1 for r in recs if "error" in r)
+    print(f"# {len(recs)} cells, {nerr} errors", file=sys.stderr)
+    sys.exit(1 if nerr else 0)
+
+
+if __name__ == "__main__":
+    main()

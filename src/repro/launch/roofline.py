@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ before any jax import.
+
+"""Roofline-term extraction (single-pod production mesh).
+
+XLA's cost_analysis counts a while-loop body ONCE, so rolled scans hide
+(trip_count x) the real FLOPs/bytes. Every cost in our programs is *bilinear* in
+(n_periods P, accum K): F(P,K) = K*(alpha*P + beta) + (gamma*P + delta).
+Four small fully-unrolled compiles — (p1,K1),(p2,K1),(p1,K2),(p2,K2) — identify the
+coefficients exactly; we then evaluate at the full (P,K). Memory and the collective
+*schedule* come from the rolled full-size compile (launch.dryrun), where while-loop
+peak memory is the body's peak (accurate).
+
+Hardware model (TPU v5e-like, per chip): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+  compute term    = FLOPs_step   / (chips * 197e12)
+  memory term     = bytes_step   / (chips * 819e9)
+  collective term = coll_bytes   / (chips * 50e9)      [per-device bytes already]
+
+cost_analysis reports *per-device* flops/bytes; we keep everything per-device and
+divide only by per-chip peaks.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ASSIGNED, SHAPES, cell_runnable, get_config, norm_name
+from repro.launch import specs as S
+from repro.launch.dryrun import analyse, lower_decode, lower_prefill, lower_train
+from repro.launch.mesh import make_production_mesh
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _counts(rec):
+    coll = float(sum(rec["collective_bytes"].values()))
+    return np.array([rec["flops"], rec["bytes_accessed"], coll])
+
+
+def _small_cell(cell, batch):
+    return dataclasses.replace(cell, batch=batch, accum=1)
+
+
+def _pick_periods(cfg):
+    P_full = cfg.n_periods
+    p2 = min(4, P_full)
+    p1 = max(1, p2 // 2)
+    if p1 == p2:  # tiny models
+        p1, p2 = max(1, p2 - 1), p2
+    return p1, p2
+
+
+def measure_train(arch: str, shape: str, *, method="ours", n_stages=4, verbose=True,
+                  bilinear=False, cfg_overrides=None, accum=None):
+    """Two fully-unrolled compiles at (p1, K=1), (p2, K=1) give the exact linear
+    law F_mb(P) = a*P + b per microbatch-step; the full step is K * F_mb(P).
+    The only approximation is that the optimizer/stash update (executed once per
+    step) is counted K times — an analytically-bounded <1% overcount in FLOPs
+    (~10 flops/param vs 6*N*tokens) noted per record. With bilinear=True the K
+    dimension is identified exactly with two extra compiles (used for the
+    hillclimb cells)."""
+    mesh = make_production_mesh()
+    cell = S.make_cell(arch, shape, accum=accum)
+    cfg0 = S.tune_cfg(get_config(arch), cell)
+    if cfg_overrides:
+        cfg0 = dataclasses.replace(cfg0, **cfg_overrides)
+    P_full, K_full = cfg0.n_periods, cell.accum
+    p1, p2 = _pick_periods(cfg0)
+    mb = cell.batch // K_full
+
+    points = [(p1, 1), (p2, 1)] + ([(p1, 2), (p2, 2)] if bilinear else [])
+    pts = {}
+    for (p, k) in points:
+        c = dataclasses.replace(cell, batch=mb * k, accum=k)
+        cfg = dataclasses.replace(cfg0, unroll=True, n_periods=p)
+        if cfg.enc_periods:
+            cfg = dataclasses.replace(cfg, enc_periods=max(1, cfg.enc_periods * p // P_full))
+        st = min(n_stages, p)
+        lowered = lower_train(cfg, c, mesh, method=method, n_stages=st)
+        rec, _ = analyse(lowered, f"{arch}/{shape}/p{p}k{k}", 256)
+        pts[(p, k)] = (_counts(rec), rec)
+        if verbose:
+            print(f"  fit point p={p} K={k}: flops={rec['flops']:.3e} "
+                  f"({rec['compile_s']}s)", file=sys.stderr, flush=True)
+
+    dp = p2 - p1
+    if bilinear:
+        c11, c21, c12, c22 = (pts[(p1, 1)][0], pts[(p2, 1)][0],
+                              pts[(p1, 2)][0], pts[(p2, 2)][0])
+        a_k1 = (c21 - c11) / dp              # alpha + gamma
+        a_k2 = (c22 - c12) / dp              # 2 alpha + gamma
+        alpha = a_k2 - a_k1
+        gamma = a_k1 - alpha
+        beta = (c12 - c11) - alpha * p1
+        delta = c11 - (alpha * p1 + beta) - gamma * p1
+        full = K_full * (alpha * P_full + beta) + gamma * P_full + delta
+    else:
+        c1, c2 = pts[(p1, 1)][0], pts[(p2, 1)][0]
+        a = (c2 - c1) / dp
+        full = K_full * (c2 + a * (P_full - p2))
+    useful = model_flops_per_device(cfg0, cell, mesh)
+    rec = roofline_record(arch, shape, "train", full, useful,
+                          pts[(p2, 1)][1], K=K_full, P=P_full)
+    rec["fit"] = {"points": {f"p{p}k{k}": v[0].tolist() for (p, k), v in pts.items()},
+                  "bilinear": bilinear,
+                  "note": "opt update counted K times in linear mode (<1% flops)"}
+    return rec
+
+
+def measure_serve(arch: str, shape: str, verbose=True, cfg_overrides=None):
+    mesh = make_production_mesh()
+    cell = S.make_cell(arch, shape)
+    cfg0 = S.tune_cfg(get_config(arch), cell)
+    if cfg_overrides:
+        cfg0 = dataclasses.replace(cfg0, **cfg_overrides)
+    P_full = cfg0.n_periods
+    p1, p2 = _pick_periods(cfg0)
+    kind = cell.kind
+
+    pts = {}
+    for p in (p1, p2):
+        cfg = dataclasses.replace(cfg0, unroll=True, n_periods=p)
+        if cfg.enc_periods:
+            cfg = dataclasses.replace(cfg, enc_periods=max(1, cfg.enc_periods * p // P_full))
+        lowered = (lower_prefill if kind == "prefill" else lower_decode)(cfg, cell, mesh)
+        rec, _ = analyse(lowered, f"{arch}/{shape}/p{p}", 256)
+        pts[p] = (_counts(rec), rec)
+        if verbose:
+            print(f"  fit point p={p}: flops={rec['flops']:.3e} ({rec['compile_s']}s)",
+                  file=sys.stderr, flush=True)
+
+    a = (pts[p2][0] - pts[p1][0]) / (p2 - p1)
+    full = pts[p2][0] + a * (P_full - p2)
+    useful = model_flops_per_device(cfg0, cell, mesh)
+    return roofline_record(arch, shape, kind, full, useful, pts[p2][1], K=1, P=P_full)
+
+
+def roofline_record(arch, shape, kind, counts, useful_flops, sample_rec, *, K, P):
+    flops, bytes_, coll = [float(x) for x in counts]
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "cell": f"{arch}/{shape}",
+        "kind": kind,
+        "P_periods": P,
+        "K": K,
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_,
+        "collective_bytes_per_device": coll,
+        **{k: round(v * 1e3, 3) for k, v in
+           {"compute_ms": t_comp, "memory_ms": t_mem, "collective_ms": t_coll}.items()},
+        "dominant": dom.replace("_s", ""),
+        "model_flops_per_device": useful_flops,
+        "useful_flops_ratio": round(useful_flops / max(flops, 1.0), 4),
+        "roofline_fraction": round((useful_flops / PEAK_FLOPS) / max(bound, 1e-12), 4),
+        "collective_kinds": sample_rec["collective_bytes"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (6 N D for dense / 6 N_active D for MoE), per device
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg) -> tuple:
+    """(total_params, active_params) analytic."""
+    from repro.models import lm as lm_mod
+
+    shapes = jax.eval_shape(lambda k: lm_mod.init_lm(k, cfg), jax.random.PRNGKey(0))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    active = total
+    if cfg.moe:
+        mc = cfg.moe
+        # each token runs top_k of n_experts
+        per_expert = 3 * cfg.d_model * mc.d_ff_expert
+        n_moe_layers = sum(1 for b in cfg.pattern if b.mlp == "moe") * cfg.n_periods
+        active = total - n_moe_layers * (mc.n_experts - mc.top_k) * per_expert
+    return total, active
+
+
+def model_flops_per_device(cfg, cell, mesh) -> float:
+    """MODEL_FLOPS = 6 * N_active * tokens (train) or 2 * N_active * tokens (serve),
+    divided over all chips (matching cost_analysis' per-device convention)."""
+    total, active = count_params(cfg)
+    n_chips = int(np.prod(mesh.devices.shape))
+    if cell.kind == "train":
+        tokens = cell.batch * cell.seq
+        f = 6.0 * active * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.batch * cell.seq
+        f = 2.0 * active * tokens
+    else:  # decode: one token per sequence
+        f = 2.0 * active * cell.batch
+    return f / n_chips
+
+
+def run(arch, shape, **kw):
+    ok, reason = cell_runnable(arch, shape)
+    if not ok:
+        return {"cell": f"{arch}/{shape}", "skipped": reason}
+    kind = SHAPES[shape][2]
+    if kind == "train":
+        return measure_train(arch, shape, **kw)
+    return measure_serve(arch, shape)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cells = ([(a, s) for a in ASSIGNED for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    recs = []
+    for a, s in cells:
+        t0 = time.time()
+        try:
+            rec = run(a, s)
+        except Exception as e:
+            rec = {"cell": f"{a}/{s}", "error": f"{type(e).__name__}: {e}"}
+        rec["wall_s"] = round(time.time() - t0, 1)
+        recs.append(rec)
+        print(json.dumps(rec), flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(recs, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Serving launcher: batched prefill + decode loop with a KV/SSD cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+
+
+def generate(params, cfg, prompt_tokens, gen_len, *, temperature=0.0, key=None):
+    B, S = prompt_tokens.shape
+    max_len = S + gen_len
+    batch = {"tokens": prompt_tokens}
+    prefill = jax.jit(lambda p, b: lm.serve_prefill(p, b, cfg, max_len=max_len))
+    logits, caches = prefill(params, batch)
+    decode = jax.jit(lambda p, c, t, pos: lm.serve_decode(p, c, t, cfg, pos))
+    toks = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(gen_len):
+        toks.append(tok)
+        logits, caches = decode(params, caches, tok, jnp.asarray(S + i, jnp.int32))
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(toks, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_lm(key, cfg)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    t0 = time.time()
+    out = generate(params, cfg, prompt.astype(jnp.int32), args.gen)
+    dt = time.time() - t0
+    ntok = args.batch * args.gen
+    print(f"generated {out.shape} in {dt:.2f}s ({ntok/dt:.1f} tok/s incl. compile)")
+    print("sample:", out[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell — weak-type-correct,
+shardable, zero allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models.layers import ModelCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+    accum: int  # K microbatches per update (train only)
+
+
+def make_cell(arch: str, shape: str, accum: Optional[int] = None) -> Cell:
+    seq, batch, kind = SHAPES[shape]
+    if accum is None:
+        accum = default_accum(arch, shape) if kind == "train" else 1
+    return Cell(arch, shape, seq, batch, kind, accum)
+
+
+def default_accum(arch: str, shape: str) -> int:
+    """K chosen so the per-device microbatch activation footprint fits HBM."""
+    big = {"dbrx_132b", "internlm2_20b", "gemma3_12b", "gemma2_9b", "zamba2_7b"}
+    from repro.configs import norm_name
+
+    return 16 if norm_name(arch) in big else 8
+
+
+def tune_cfg(cfg: ModelCfg, cell: Cell) -> ModelCfg:
+    """Per-cell model knobs: q-chunk long attention, chunk big-vocab xent,
+    seq-chunk the MoE channel mix at prefill scale."""
+    upd = {}
+    if cell.kind == "prefill" and cell.seq > 8192:
+        upd["attn_q_chunk"] = 1024
+        if cfg.moe:
+            upd["mlp_s_chunk"] = 2048
+    if cell.kind == "train" and cell.seq >= 4096:
+        upd["attn_q_chunk"] = 1024
+    if cell.kind == "train" and cfg.vocab_size >= 64000 and not cfg.xent_chunk:
+        upd["xent_chunk"] = 512
+    if cfg.dtype != jnp.bfloat16:
+        upd["dtype"] = jnp.bfloat16  # TPU target dtype for dry-runs
+    return dataclasses.replace(cfg, **upd) if upd else cfg
+
+
+def train_batch_specs(cfg: ModelCfg, cell: Cell):
+    K = cell.accum
+    b = cell.batch // K
+    assert b * K == cell.batch, f"accum {K} must divide global batch {cell.batch}"
+    S = cell.seq
+    sds = {
+        "tokens": jax.ShapeDtypeStruct((K, b, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((K, b, S), jnp.int32),
+    }
+    if cfg.enc_periods:
+        sds["frames"] = jax.ShapeDtypeStruct((K, b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.n_prefix_img:
+        sds["patches"] = jax.ShapeDtypeStruct((K, b, cfg.n_prefix_img, cfg.d_model), jnp.bfloat16)
+    return sds
+
+
+def prefill_batch_specs(cfg: ModelCfg, cell: Cell):
+    sds = {"tokens": jax.ShapeDtypeStruct((cell.batch, cell.seq), jnp.int32)}
+    if cfg.enc_periods:
+        sds["frames"] = jax.ShapeDtypeStruct((cell.batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.n_prefix_img:
+        sds["patches"] = jax.ShapeDtypeStruct((cell.batch, cfg.n_prefix_img, cfg.d_model), jnp.bfloat16)
+    return sds
+
+
+def decode_token_specs(cell: Cell):
+    return (jax.ShapeDtypeStruct((cell.batch, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))

@@ -1,0 +1,682 @@
+"""Model-zoo layer library: norms, RoPE, attention variants (GQA / local / softcap /
+QK-norm / cross / MLA), MLPs, MoE (sort-based capacity dispatch), Mamba2 SSD.
+
+Pure-functional: each layer has ``init_*(key, cfg, blk) -> params`` and
+``*_apply(params, x, ...) -> y``. Params are plain dicts of jnp arrays so they stack
+cleanly for scan-over-layers and shard under pjit.
+
+Naming convention for sharding rules (see parallel/sharding.py): param key names are
+stable and matched by regex — 'wq','wk','wv','wo','w_gate','w_up','w_down','router',
+'moe_*','tok_embed','lm_head','in_proj','out_proj', etc.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import ax
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Block / model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    """One transformer-ish block: a sequence mixer + a channel mixer."""
+
+    mixer: str = "attn"  # attn | ssm | shared_attn | none
+    mlp: str = "swiglu"  # swiglu | geglu | gelu | moe | none
+    window: Optional[int] = None  # sliding-window size (local attention)
+    cross_attn: bool = False  # adds cross-attention (whisper decoder)
+    causal: bool = True  # False for encoder blocks
+    rope_theta: float = 1e4
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 0
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    d_model: int = 512
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 64
+    d_ff: int = 2048
+    vocab_size: int = 32000
+    norm_eps: float = 1e-6
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    use_post_norm: bool = False  # gemma2/3 style post-sublayer norms
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    tie_embeddings: bool = True
+    # layer program: `prelude` blocks run once, then `pattern` repeats n_periods times.
+    prelude: tuple = ()
+    pattern: tuple = (BlockDef(),)
+    n_periods: int = 4
+    # encoder (whisper): encoder blocks prepended, using precomputed frame embeddings
+    enc_pattern: tuple = ()
+    enc_periods: int = 0
+    n_frames: int = 0  # encoder sequence length (stub frontend output)
+    # vlm (paligemma): first `n_prefix_img` positions are precomputed patch embeddings
+    n_prefix_img: int = 0
+    prefix_lm: bool = False
+    moe: Optional[MoECfg] = None
+    mla: Optional[MLACfg] = None
+    ssm: Optional[SSMCfg] = None
+    dtype: Any = jnp.bfloat16
+    # training-shape knobs
+    xent_chunk: int = 0  # 0 = unchunked loss
+    attn_q_chunk: int = 0  # 0 = dense attention; else scan over q chunks
+    mlp_s_chunk: int = 0  # 0 = full-seq channel mix; else scan over seq chunks
+    remat: bool = True
+    # full-unroll of scans for dry-run cost analysis: XLA cost_analysis counts a
+    # while-loop body ONCE, so rolled scans hide n_periods x the FLOPs/bytes.
+    unroll: bool = False
+    # gather-free cross-entropy (one-hot dot): required inside partial-manual
+    # shard_map regions where XLA's gather partitioner is fragile.
+    onehot_xent: bool = False
+    # store attention scores/probs in bf16 (f32 softmax statistics): halves the
+    # dominant HBM stream of long-seq training (§Perf H2). Off = paper-faithful
+    # f32 scores.
+    attn_scores_bf16: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.prelude) + len(self.pattern) * self.n_periods
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS roofline term)."""
+        import numpy as np
+
+        key = jax.random.PRNGKey(0)
+        # cheap: init with eval_shape to avoid allocation
+        from . import lm  # local import to avoid cycle
+
+        shapes = jax.eval_shape(lambda k: lm.init_lm(k, self), key)
+        return int(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes)))
+
+
+# ---------------------------------------------------------------------------
+# Small pieces
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(jnp.float32)
+
+
+def init_rmsnorm(d):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm_apply(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"])).astype(dt)
+
+
+def rope_frequencies(head_dim, positions, theta):
+    """positions [*, S] -> (cos, sin) each [*, S, head_dim/2], fp32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [*, S, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin [..., S, D/2] (broadcast over head axis)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads: [..., S, 1, half]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA family)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelCfg, blk: BlockDef):
+    ks = jax.random.split(key, 8)
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": _dense_init(ks[0], (D, H, hd)),
+        "wk": _dense_init(ks[1], (D, Hkv, hd)),
+        "wv": _dense_init(ks[2], (D, Hkv, hd)),
+        "wo": _dense_init(ks[3], (H, hd, D), scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    if blk.cross_attn:
+        p["c_wq"] = _dense_init(ks[4], (D, H, hd))
+        p["c_wk"] = _dense_init(ks[5], (D, Hkv, hd))
+        p["c_wv"] = _dense_init(ks[6], (D, Hkv, hd))
+        p["c_wo"] = _dense_init(ks[7], (H, hd, D), scale=1.0 / math.sqrt(H * hd))
+    return p
+
+
+def _mask_bias(q_pos, k_pos, *, causal, window, prefix_len, dtype=jnp.float32):
+    """Additive mask bias [*, Sq, Sk]. q_pos [*, Sq], k_pos [*, Sk] int32."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        allow = kp <= qp
+        if prefix_len is not None:  # prefix-LM: bidirectional over the prefix
+            allow = allow | (kp < prefix_len)
+        ok = ok & allow
+    if window is not None:
+        ok = ok & (kp > qp - window)
+    return jnp.where(ok, 0.0, -1e30).astype(dtype)
+
+
+def _attend(q, k, v, bias, cap, scale, scores_bf16=False):
+    """Grouped attention core.
+
+    q: [B, Sq, Hkv, G, hd]; k,v: [B, Sk, Hkv, hd]; bias: [B, Sq, Sk] additive.
+    Returns [B, Sq, Hkv, G, hd]. Softmax statistics in fp32; with scores_bf16 the
+    stored score/prob tensors are bf16 (halves the dominant HBM stream).
+    """
+    if scores_bf16 and q.dtype == jnp.bfloat16:
+        # bf16-resident scores/probs; only the row statistics are f32
+        s = jnp.einsum("bqngd,bknd->bngqk", q, k) * jnp.asarray(scale, q.dtype)
+        if cap is not None:
+            s = softcap(s, jnp.asarray(cap, s.dtype))
+        s = s + bias[:, None, None, :, :].astype(s.dtype)
+        m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m)  # bf16, values in [0, 1]
+        denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        w = p * (1.0 / denom).astype(p.dtype)
+    else:
+        scores = jnp.einsum("bqngd,bknd->bngqk", q, k)
+        scores = scores.astype(jnp.float32) * scale
+        if cap is not None:
+            scores = softcap(scores, cap)
+        scores = scores + bias[:, None, None, :, :]
+        w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngqk,bknd->bqngd", w.astype(v.dtype), v)
+    return out
+
+
+def _attend_qchunk(q, k, v, q_pos, k_pos, mask_kw, cap, scale, q_chunk, unroll=False, scores_bf16=False):
+    """Memory-bounded attention: scan over q chunks, building the mask bias
+    per chunk ([B, q_chunk, Sk] instead of [B, Sq, Sk])."""
+    B, Sq, Hkv, G, hd = q.shape
+    n = Sq // q_chunk
+    qr = q.reshape(B, n, q_chunk, Hkv, G, hd).swapaxes(0, 1)  # [n,B,qc,Hkv,G,d]
+    pr = q_pos.reshape(B, n, q_chunk).swapaxes(0, 1)  # [n,B,qc]
+
+    def body(_, qb):
+        qi, pi = qb
+        bi = _mask_bias(pi, k_pos, **mask_kw)
+        return None, _attend(qi, k, v, bi, cap, scale, scores_bf16)
+
+    _, outs = jax.lax.scan(body, None, (qr, pr), unroll=unroll)
+    return outs.swapaxes(0, 1).reshape(B, Sq, Hkv, G, hd)
+
+
+def attention_apply(
+    p,
+    x,
+    cfg: ModelCfg,
+    blk: BlockDef,
+    *,
+    positions,
+    prefix_len=None,
+    cache=None,
+    enc_out=None,
+):
+    """Self-attention (+ optional cross-attention block for whisper decoder).
+
+    cache: None (train/prefill full-seq) or dict(k,v,pos) for one-token decode.
+    Returns (y, new_cache).
+    """
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hkv
+    cdt = cfg.dtype
+
+    bt = ax.batch_axes()
+    q = ax.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt)), bt, None, "model", None)
+    k = ax.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt)), bt, None, "model", None)
+    v = ax.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt)), bt, None, "model", None)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(p["k_norm"], k, cfg.norm_eps)
+
+    cos, sin = rope_frequencies(hd, positions, blk.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    scale = 1.0 / math.sqrt(hd)
+    mask_kw = dict(causal=blk.causal, window=blk.window, prefix_len=prefix_len)
+    if cache is not None:
+        # prefill (S>1) or one-token decode; cache k/v [B, Smax, Hkv, hd]
+        idx = cache["pos"]  # scalar int32 current length
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        new_cache = {"k": ck, "v": cv, "pos": idx + S}
+        k_pos = jnp.broadcast_to(
+            jnp.arange(ck.shape[1], dtype=jnp.int32)[None, :], (B, ck.shape[1]))
+        qq = q.reshape(B, S, Hkv, G, hd)
+        if cfg.attn_q_chunk and S % cfg.attn_q_chunk == 0 and S > cfg.attn_q_chunk:
+            out = _attend_qchunk(qq, ck, cv, positions, k_pos, mask_kw,
+                                 cfg.attn_softcap, scale, cfg.attn_q_chunk,
+                                 unroll=cfg.unroll, scores_bf16=cfg.attn_scores_bf16)
+        else:
+            bias = _mask_bias(positions, k_pos, **mask_kw)
+            out = _attend(qq, ck, cv, bias, cfg.attn_softcap, scale, cfg.attn_scores_bf16)
+    else:
+        k_pos = positions
+        qq = q.reshape(B, S, Hkv, G, hd)
+        if cfg.attn_q_chunk and S % cfg.attn_q_chunk == 0 and S > cfg.attn_q_chunk:
+            out = _attend_qchunk(qq, k, v, positions, k_pos, mask_kw,
+                                 cfg.attn_softcap, scale, cfg.attn_q_chunk,
+                                 unroll=cfg.unroll, scores_bf16=cfg.attn_scores_bf16)
+        else:
+            bias = _mask_bias(positions, k_pos, **mask_kw)
+            out = _attend(qq, k, v, bias, cfg.attn_softcap, scale, cfg.attn_scores_bf16)
+
+    out = ax.constrain(out.reshape(B, S, H, hd), bt, None, "model", None)
+    y = ax.constrain(jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt)), bt, None, None)
+
+    if blk.cross_attn:
+        assert enc_out is not None, "cross-attn block needs encoder output"
+        cq = jnp.einsum("bsd,dhk->bshk", x, p["c_wq"].astype(cdt)).reshape(B, S, Hkv, G, hd)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, p["c_wk"].astype(cdt))
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, p["c_wv"].astype(cdt))
+        zero = jnp.zeros((B, S, ck.shape[1]), jnp.float32)
+        cout = _attend(cq, ck, cv, zero, None, scale).reshape(B, S, H, hd)
+        y = y + jnp.einsum("bshk,hkd->bsd", cout, p["c_wo"].astype(cdt))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelCfg, blk: BlockDef):
+    m = cfg.mla
+    ks = jax.random.split(key, 6)
+    D, H = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": _dense_init(ks[0], (D, H, qd)),
+        "w_dkv": _dense_init(ks[1], (D, m.kv_lora + m.qk_rope_dim)),
+        "kv_norm": init_rmsnorm(m.kv_lora),
+        "w_uk": _dense_init(ks[2], (m.kv_lora, H, m.qk_nope_dim)),
+        "w_uv": _dense_init(ks[3], (m.kv_lora, H, m.v_head_dim)),
+        "wo": _dense_init(ks[4], (H, m.v_head_dim, D), scale=1.0 / math.sqrt(H * m.v_head_dim)),
+    }
+
+
+def mla_apply(p, x, cfg: ModelCfg, blk: BlockDef, *, positions, cache=None, **_):
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    cdt = cfg.dtype
+    bt = ax.batch_axes()
+    q = ax.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt)), bt, None, "model", None)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    ckv = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"].astype(cdt))
+    c_kv, k_rope = ckv[..., : m.kv_lora], ckv[..., m.kv_lora :]
+    c_kv = rmsnorm_apply(p["kv_norm"], c_kv, cfg.norm_eps)
+
+    cos, sin = rope_frequencies(m.qk_rope_dim, positions, blk.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]  # shared across heads
+
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    # Absorbed form: score = q_nope·(W_uk c) + q_rope·k_rope  — works for both
+    # train (full-seq latents) and decode (latent cache), and is the MLA memory win.
+    q_eff = jnp.einsum("bshn,khn->bshk", q_nope, p["w_uk"].astype(cdt))
+    new_cache = None
+    if cache is not None:
+        idx = cache["pos"]
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, idx, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, idx, axis=1)
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": idx + S}
+        c_all, r_all = cc, cr
+        k_pos = jnp.broadcast_to(
+            jnp.arange(cc.shape[1], dtype=jnp.int32)[None, :], (B, cc.shape[1]))
+        bias = _mask_bias(positions, k_pos, causal=True, window=None, prefix_len=None)
+    else:
+        c_all, r_all = c_kv, k_rope
+        bias = _mask_bias(positions, positions, causal=True, window=None, prefix_len=None)
+
+    def _mla_attend(q_eff_c, q_rope_c, bias_c):
+        s_nope = jnp.einsum("bshk,btk->bhst", q_eff_c, c_all)
+        s_rope = jnp.einsum("bshr,btr->bhst", q_rope_c, r_all)
+        sc = (s_nope + s_rope).astype(jnp.float32) * scale
+        sc = sc + bias_c[:, None, :, :]  # bias [B,Sq,Sk] or [B,1,Sk]
+        w = jax.nn.softmax(sc, axis=-1).astype(cdt)
+        return jnp.einsum("bhst,btk->bshk", w, c_all)  # attend over latents
+
+    qc = cfg.attn_q_chunk
+    if qc and S > qc and S % qc == 0:
+        # bound the [B,H,Sq,Sk] score working set: scan over q chunks
+        n = S // qc
+        k_pos_full = jnp.broadcast_to(
+            jnp.arange(c_all.shape[1], dtype=jnp.int32)[None, :], (B, c_all.shape[1]))
+
+        def body(_, xs):
+            qe, qr, pos_c = xs
+            b_c = _mask_bias(pos_c, k_pos_full, causal=True, window=None, prefix_len=None)
+            return None, _mla_attend(qe, qr, b_c)
+
+        qe_s = q_eff.reshape(B, n, qc, H, -1).swapaxes(0, 1)
+        qr_s = q_rope.reshape(B, n, qc, H, -1).swapaxes(0, 1)
+        pos_s = positions.reshape(B, n, qc).swapaxes(0, 1)
+        _, ctxs = jax.lax.scan(body, None, (qe_s, qr_s, pos_s), unroll=cfg.unroll)
+        ctx = ctxs.swapaxes(0, 1).reshape(B, S, H, -1)
+    else:
+        ctx = _mla_attend(q_eff, q_rope, bias)
+    out = ax.constrain(jnp.einsum("bshk,khv->bshv", ctx, p["w_uv"].astype(cdt)), bt, None, "model", None)
+    y = ax.constrain(jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(cdt)), bt, None, None)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, kind):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": _dense_init(ks[0], (d_model, d_ff)),
+            "w_up": _dense_init(ks[1], (d_model, d_ff)),
+            "w_down": _dense_init(ks[2], (d_ff, d_model)),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d_model, d_ff)),
+        "w_down": _dense_init(ks[1], (d_ff, d_model)),
+    }
+
+
+def mlp_apply(p, x, kind, dtype):
+    bt = ax.batch_axes()
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else lambda z: jax.nn.gelu(z, approximate=True)
+        g = act(ax.constrain(jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dtype)), bt, None, "model"))
+        u = ax.constrain(jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dtype)), bt, None, "model")
+        return ax.constrain(jnp.einsum("bsf,fd->bsd", g * u, p["w_down"].astype(dtype)), bt, None, None)
+    h = jax.nn.gelu(ax.constrain(jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dtype)), bt, None, "model"), approximate=True)
+    return ax.constrain(jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dtype)), bt, None, None)
+
+
+# ---------------------------------------------------------------------------
+# MoE — sort-based capacity dispatch (MegaBlocks-style, dense-shape friendly)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelCfg):
+    mc = cfg.moe
+    ks = jax.random.split(key, 5)
+    D, E, F = cfg.d_model, mc.n_experts, mc.d_ff_expert
+    p = {
+        "router": _dense_init(ks[0], (D, E)),
+        "moe_gate": _dense_init(ks[1], (E, D, F)),
+        "moe_up": _dense_init(ks[2], (E, D, F)),
+        "moe_down": _dense_init(ks[3], (E, F, D)),
+    }
+    if mc.n_shared:
+        p["shared"] = init_mlp(ks[4], D, mc.d_ff_shared, "swiglu")
+    return p
+
+
+def moe_apply(p, x, cfg: ModelCfg):
+    """Top-k token-choice MoE with capacity; sort-based dispatch (no [T,E,C] one-hot).
+
+    Returns (y, aux_loss).
+    """
+    mc = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = mc.n_experts, mc.top_k
+    cdt = cfg.dtype
+    bt = ax.batch_axes()
+    xf = ax.constrain(x.reshape(T, D), bt, None)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)  # [T,K]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = mc.router_aux_weight * E * jnp.sum(me * ce)
+
+    C = int(max(8, math.ceil(mc.capacity_factor * K * T / E)))
+    C = min(C, T)
+    flat_e = idx.reshape(-1)  # [T*K]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * K, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)  # sentinel = E*C
+    token_of = order // K
+
+    # slot -> source-token map (1D int scatter; row values never enter the scatter,
+    # so XLA does not materialize [rows, D] index maps)
+    s2src = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
+        jnp.where(keep, token_of.astype(jnp.int32), T), mode="drop")
+    xf_pad = jnp.concatenate([xf.astype(cdt), jnp.zeros((1, D), cdt)], axis=0)
+    h_in = ax.constrain(xf_pad[s2src[: E * C]].reshape(E, C, D), "model", None, None)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h_in, p["moe_gate"].astype(cdt)))
+    u = jnp.einsum("ecd,edf->ecf", h_in, p["moe_up"].astype(cdt))
+    h_out = ax.constrain(jnp.einsum("ecf,efd->ecd", g * u, p["moe_down"].astype(cdt)),
+                         "model", None, None)
+    out_all = jnp.concatenate([h_out.reshape(E * C, D), jnp.zeros((1, D), cdt)], axis=0)
+
+    # invert the sort: slot for each (t, k); row gather back to tokens
+    slot_unsorted = jnp.zeros((T * K,), jnp.int32).at[order].set(slot)
+    gathered = ax.constrain(out_all[slot_unsorted].reshape(T, K, D), bt, None, None)
+    y = ax.constrain(
+        jnp.sum(gathered.astype(jnp.float32) * gates[:, :, None], axis=1), bt, None
+    ).astype(cdt)
+    y = y.reshape(B, S, D)
+    if mc.n_shared:
+        y = y + mlp_apply(p["shared"], x, "swiglu", cdt)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block — chunked state-space duality algorithm, pure jnp
+# ---------------------------------------------------------------------------
+
+
+def ssm_dims(cfg: ModelCfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init_ssm(key, cfg: ModelCfg):
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(ks[0], (cfg.d_model, 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads)),
+        "conv_w": _dense_init(ks[1], (s.d_conv, conv_ch), scale=1.0 / math.sqrt(s.d_conv)),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "ssm_D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(ks[2], (n_heads,), jnp.float32, math.log(1e-3), math.log(1e-1))))),
+        "gate_norm": init_rmsnorm(d_inner),
+        "out_proj": _dense_init(ks[3], (d_inner, cfg.d_model)),
+    }
+
+
+def _ssd_chunked(xbc_x, B_, C_, dt, A, chunk, h0=None, unroll=False):
+    """Chunked SSD core. x [b,S,H,P]; B_,C_ [b,S,G,N]; dt [b,S,H]; A [H] (negative).
+
+    Returns (y [b,S,H,P], h_final [b,H,N,P]). fp32 state math (Mamba-2 SSD alg;
+    matmul-dominant so MXU-friendly). h0: optional initial state.
+    """
+    b, S, H, Pdim = xbc_x.shape
+    G = B_.shape[2]
+    N = B_.shape[3]
+    nc = S // chunk
+    x = xbc_x.reshape(b, nc, chunk, H, Pdim).astype(jnp.float32)
+    Bc = B_.reshape(b, nc, chunk, G, N).astype(jnp.float32)
+    Cc = C_.reshape(b, nc, chunk, G, N).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
+    rep = H // G
+
+    da = dtc * A[None, None, None, :]  # [b,nc,c,H]  (negative)
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) * (i>=j)
+    Li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,ci,cj,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(Li), 0.0)
+    # scores S_ij = C_i · B_j  (per head via group map)
+    Bh = jnp.repeat(Bc, rep, axis=3) if G != H else Bc  # [b,nc,c,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3) if G != H else Cc
+    scores = jnp.einsum("bnihs,bnjhs->bnijh", Ch, Bh)  # [b,nc,ci,cj,H]
+    y_intra = jnp.einsum("bnijh,bnjh,bnjhp->bnihp", scores * Lmat, dtc, x)
+
+    # chunk summary states: S_n = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    seg_end = cum[:, :, -1:, :]  # [b,nc,1,H]
+    w_end = jnp.exp(seg_end - cum)  # [b,nc,c,H]
+    states = jnp.einsum("bnch,bnchs,bnchp->bnhsp", w_end * dtc, Bh, x)
+    # inter-chunk recurrence over nc: H_{n+1} = exp(seg_end_n) H_n + S_n
+    decay = jnp.exp(seg_end[:, :, 0, :])  # [b,nc,H]
+
+    def scan_body(h, inp):
+        st, dc = inp  # st [b,H,N,P], dc [b,H]
+        h_new = h * dc[:, :, None, None] + st
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, N, Pdim), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        scan_body, h0, (states.swapaxes(0, 1), decay.swapaxes(0, 1)), unroll=unroll
+    )  # h_prev [nc,b,H,N,P] = state entering each chunk
+    h_prev = h_prev.swapaxes(0, 1)  # [b,nc,H,N,P]
+    w_in = jnp.exp(cum)  # decay from chunk start to position i
+    y_inter = jnp.einsum("bnch,bnchs,bnhsp->bnchp", w_in, Ch, h_prev)
+    y = (y_intra + y_inter).reshape(b, S, H, Pdim)
+    return y, h_last
+
+
+def ssm_apply(p, x, cfg: ModelCfg, *, cache=None, **_):
+    """Mamba2 block. cache: None (full seq) or dict(conv [b,d_conv-1,ch], state [b,H,N,P], pos)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    B_, S, D = x.shape
+    cdt = cfg.dtype
+    bt = ax.batch_axes()
+    zxbcdt = ax.constrain(jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cdt)), bt, None, None)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_ch]
+    dt_raw = zxbcdt[..., d_inner + conv_ch :]  # [b,S,H]
+
+    new_cache = None
+    if cache is None:
+        pad = jnp.zeros((B_, s.d_conv - 1, conv_ch), xbc.dtype)
+        xpad = jnp.concatenate([pad, xbc], axis=1)
+        conv = sum(
+            xpad[:, i : i + S, :] * p["conv_w"][i].astype(cdt) for i in range(s.d_conv)
+        ) + p["conv_b"].astype(cdt)
+    else:
+        xpad = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        conv = sum(
+            xpad[:, i : i + S, :] * p["conv_w"][i].astype(cdt) for i in range(s.d_conv)
+        ) + p["conv_b"].astype(cdt)
+        new_conv = xpad[:, S:, :]
+    xbc = jax.nn.silu(conv)
+    xs = xbc[..., :d_inner].reshape(B_, S, n_heads, s.head_dim)
+    Bmat = xbc[..., d_inner : d_inner + s.n_groups * s.d_state].reshape(B_, S, s.n_groups, s.d_state)
+    Cmat = xbc[..., d_inner + s.n_groups * s.d_state :].reshape(B_, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [b,S,H]
+    A = -jnp.exp(p["A_log"])  # [H]
+
+    if cache is None or S > 1:
+        chunk = min(s.chunk, S)
+        if S % chunk != 0:
+            chunk = S  # smoke-test sizes
+        h0 = None if cache is None else cache["state"]
+        y, new_state = _ssd_chunked(xs, Bmat, Cmat, dt, A, chunk, h0=h0, unroll=cfg.unroll)
+    else:
+        # single-step recurrence: h' = exp(dt A) h + dt B x
+        rep = n_heads // s.n_groups
+        Bh = jnp.repeat(Bmat[:, 0], rep, axis=1) if s.n_groups != n_heads else Bmat[:, 0]
+        Ch = jnp.repeat(Cmat[:, 0], rep, axis=1) if s.n_groups != n_heads else Cmat[:, 0]
+        da = jnp.exp(dt[:, 0] * A[None, :])  # [b,H]
+        h = cache["state"] * da[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhnp", dt[:, 0], Bh.astype(jnp.float32), xs[:, 0].astype(jnp.float32)
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), h)[:, None]
+        new_state = h
+    y = y + xs.astype(jnp.float32) * p["ssm_D"][None, None, :, None]
+    y = ax.constrain(y.reshape(B_, S, d_inner).astype(cdt), bt, None, "model")
+    y = rmsnorm_apply(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = ax.constrain(jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cdt)), bt, None, None)
+    if cache is not None:
+        new_cache = {"conv": new_conv, "state": new_state, "pos": cache["pos"] + S}
+    return out, new_cache

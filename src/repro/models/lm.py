@@ -1,0 +1,499 @@
+"""LM assembly: layer-program execution (prelude + scanned pattern + encoder),
+staged splitting for pipeline parallelism, loss, and serving (prefill/decode).
+
+The canonical parameter layout is *monolithic*; `split_stages` cuts it into P
+contiguous stage pytrees for the async-PP engine. Stage functions are built from a
+static "op list" so dense/moe/ssm/enc-dec/vlm archs all flow through one code path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import BlockDef, ModelCfg
+from repro.parallel import ax
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelCfg, blk: BlockDef):
+    ks = jax.random.split(key, 4)
+    p: dict = {"pre_norm": L.init_rmsnorm(cfg.d_model)}
+    if blk.mixer == "attn":
+        p["mixer"] = L.init_mla(ks[0], cfg, blk) if cfg.mla else L.init_attention(ks[0], cfg, blk)
+    elif blk.mixer == "ssm":
+        p["mixer"] = L.init_ssm(ks[0], cfg)
+    elif blk.mixer == "shared_attn":
+        # params live in the model-level 'shared' slot; per-occurrence output proj
+        p["shared_out_proj"] = L._dense_init(ks[0], (cfg.d_model, cfg.d_model))
+    if cfg.use_post_norm and blk.mixer != "none":
+        p["post_mixer_norm"] = L.init_rmsnorm(cfg.d_model)
+    if blk.mlp == "moe":
+        p["mlp_norm"] = L.init_rmsnorm(cfg.d_model)
+        p["moe"] = L.init_moe(ks[1], cfg)
+    elif blk.mlp != "none":
+        p["mlp_norm"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, blk.mlp)
+    if cfg.use_post_norm and blk.mlp != "none":
+        p["post_mlp_norm"] = L.init_rmsnorm(cfg.d_model)
+    return p
+
+
+def _has_shared(cfg: ModelCfg) -> bool:
+    return any(b.mixer == "shared_attn" for b in cfg.pattern + cfg.prelude)
+
+
+def init_lm(key, cfg: ModelCfg):
+    ks = iter(jax.random.split(key, 16 + len(cfg.prelude)))
+    D, V = cfg.d_model, cfg.vocab_size
+    # embed ~ N(0, 1/D): inputs get x*sqrt(D) scaling (unit variance) and tied
+    # logits h @ E^T stay O(1).
+    params: dict = {"tok_embed": L._dense_init(next(ks), (V, D), scale=1.0 / math.sqrt(D))}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(next(ks), (D, V))
+    params["final_norm"] = L.init_rmsnorm(D)
+
+    if cfg.enc_periods:
+        kk = next(ks)
+        def enc_one(k):
+            kb = jax.random.split(k, len(cfg.enc_pattern))
+            return {f"b{j}": init_block(kb[j], cfg, blk) for j, blk in enumerate(cfg.enc_pattern)}
+        params["enc_scan"] = jax.vmap(enc_one)(jax.random.split(kk, cfg.enc_periods))
+        params["enc_final_norm"] = L.init_rmsnorm(D)
+
+    params["prelude"] = {
+        f"p{i}": init_block(next(ks), cfg, blk) for i, blk in enumerate(cfg.prelude)
+    }
+
+    kk = next(ks)
+    def one(k):
+        kb = jax.random.split(k, len(cfg.pattern))
+        return {f"b{j}": init_block(kb[j], cfg, blk) for j, blk in enumerate(cfg.pattern)}
+    params["scan"] = jax.vmap(one)(jax.random.split(kk, cfg.n_periods))
+
+    if _has_shared(cfg):
+        shared_blk = BlockDef(mixer="attn", mlp="swiglu")
+        params["shared"] = init_block(next(ks), cfg, shared_blk)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=None,
+                enc_out=None, cache=None, shared=None):
+    """Returns (x, aux, new_cache)."""
+    x = ax.constrain(x, ax.batch_axes(), None, None)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+    if blk.mixer == "shared_attn":
+        sblk = BlockDef(mixer="attn", mlp="swiglu", rope_theta=blk.rope_theta)
+        h = L.rmsnorm_apply(shared["pre_norm"], x, cfg.norm_eps)
+        h, new_mix_cache = L.attention_apply(
+            shared["mixer"], h, cfg, sblk, positions=positions, prefix_len=prefix_len,
+            cache=None if cache is None else cache.get("mixer"))
+        h = h + L.mlp_apply(shared["mlp"], L.rmsnorm_apply(shared["mlp_norm"], h, cfg.norm_eps),
+                            "swiglu", cfg.dtype)
+        h = jnp.einsum("bsd,de->bse", h, bp["shared_out_proj"].astype(cfg.dtype))
+        x = x + h
+        if cache is not None:
+            new_cache = {"mixer": new_mix_cache}
+        return x, aux, new_cache
+
+    if blk.mixer != "none":
+        h = L.rmsnorm_apply(bp["pre_norm"], x, cfg.norm_eps)
+        if blk.mixer == "attn":
+            fn = L.mla_apply if cfg.mla else L.attention_apply
+            h, new_mix_cache = fn(bp["mixer"], h, cfg, blk, positions=positions,
+                                  prefix_len=prefix_len, enc_out=enc_out,
+                                  cache=None if cache is None else cache.get("mixer"))
+        elif blk.mixer == "ssm":
+            h, new_mix_cache = L.ssm_apply(bp["mixer"], h, cfg,
+                                           cache=None if cache is None else cache.get("mixer"))
+        if cfg.use_post_norm:
+            h = L.rmsnorm_apply(bp["post_mixer_norm"], h, cfg.norm_eps)
+        x = x + h
+    else:
+        new_mix_cache = None
+
+    if blk.mlp != "none":
+        def channel_mix(xc):
+            h = L.rmsnorm_apply(bp["mlp_norm"], xc, cfg.norm_eps)
+            if blk.mlp == "moe":
+                h, a = L.moe_apply(bp["moe"], h, cfg)
+            else:
+                h, a = L.mlp_apply(bp["mlp"], h, blk.mlp, cfg.dtype), jnp.zeros((), jnp.float32)
+            if cfg.use_post_norm:
+                h = L.rmsnorm_apply(bp["post_mlp_norm"], h, cfg.norm_eps)
+            return h, a
+
+        S = x.shape[1]
+        ck = cfg.mlp_s_chunk
+        if ck and S > ck and S % ck == 0:
+            # bound the channel-mix working set (MoE dispatch buffers scale with
+            # tokens): scan over sequence chunks; capacity becomes per-chunk.
+            xs = x.reshape(x.shape[0], S // ck, ck, -1).swapaxes(0, 1)
+            _, (hs, auxs) = jax.lax.scan(
+                lambda _, xc: (None, channel_mix(xc)), None, xs, unroll=cfg.unroll)
+            h = hs.swapaxes(0, 1).reshape(x.shape)
+            a = jnp.sum(auxs)
+        else:
+            h, a = channel_mix(x)
+        aux = aux + a
+        x = x + h
+
+    if cache is not None:
+        new_cache = {"mixer": new_mix_cache}
+    return x, aux, new_cache
+
+
+def _scan_blocks(scan_params, pattern, x, cfg, *, positions, prefix_len=None,
+                 enc_out=None, caches=None, shared=None, j0=0, j1=None):
+    """Run periods [j0, j1) of the scanned pattern. caches: stacked pytree or None."""
+    n = (j1 if j1 is not None else jax.tree.leaves(scan_params)[0].shape[0]) - j0
+    if n <= 0:
+        return x, jnp.zeros((), jnp.float32), caches
+    sl = jax.tree.map(lambda a: jax.lax.slice_in_dim(a, j0, j0 + n, axis=0), scan_params)
+    csl = None if caches is None else jax.tree.map(
+        lambda a: jax.lax.slice_in_dim(a, j0, j0 + n, axis=0), caches)
+
+    def body(carry, xs):
+        xx, aux = carry
+        bp, cc = xs
+        new_cc = {} if cc is not None else None
+        for j, blk in enumerate(pattern):
+            xx, a, nc = block_apply(bp[f"b{j}"], blk, xx, cfg, positions=positions,
+                                    prefix_len=prefix_len, enc_out=enc_out,
+                                    cache=None if cc is None else cc[f"b{j}"],
+                                    shared=shared)
+            aux = aux + a
+            if new_cc is not None:
+                new_cc[f"b{j}"] = nc
+        return (xx, aux), new_cc
+
+    if cfg.remat and caches is None:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), (sl, csl),
+                                        unroll=cfg.unroll)
+    if caches is not None:
+        caches = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_slice_in_dim(full, new, j0, axis=0),
+            caches, new_caches)
+    return x, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Stage program (op lists)
+# ---------------------------------------------------------------------------
+
+
+def build_ops(cfg: ModelCfg):
+    """Full ordered op list for the layer program."""
+    ops = []
+    if cfg.enc_periods:
+        ops.append(("frames_in",))
+        for j in range(cfg.enc_periods):
+            ops.append(("enc_blocks", j, j + 1))
+        ops.append(("enc_out",))
+    ops.append(("embed",))
+    for i in range(len(cfg.prelude)):
+        ops.append(("prelude", i))
+    for j in range(cfg.n_periods):
+        ops.append(("blocks", j, j + 1))
+    ops.append(("head",))
+    return ops
+
+
+def split_ops(cfg: ModelCfg, n_stages: int):
+    """Split op list into n_stages contiguous chunks, weighting block ops only."""
+    ops = build_ops(cfg)
+    weights = [1 if o[0] in ("enc_blocks", "prelude", "blocks") else 0 for o in ops]
+    total = sum(weights)
+    per = total / n_stages
+    chunks, cur, acc, done = [], [], 0.0, 0
+    for o, w in zip(ops, weights):
+        cur.append(o)
+        acc += w
+        if w and acc >= per * (done + 1) - 1e-9 and done < n_stages - 1:
+            chunks.append(cur)
+            cur = []
+            done += 1
+    chunks.append(cur)
+    while len(chunks) < n_stages:  # degenerate tiny models
+        chunks.append([])
+    # merge consecutive block ranges for fewer scans
+    merged = []
+    for ch in chunks:
+        m = []
+        for o in ch:
+            if m and o[0] == m[-1][0] and o[0] in ("blocks", "enc_blocks") and m[-1][2] == o[1]:
+                m[-1] = (o[0], m[-1][1], o[2])
+            else:
+                m.append(list(o) if o[0] in ("blocks", "enc_blocks") else o)
+        merged.append([tuple(o) if isinstance(o, list) else o for o in m])
+    return merged
+
+
+def stage_param_names(cfg: ModelCfg, ops):
+    names = set()
+    for o in ops:
+        if o[0] == "enc_blocks":
+            names.add("enc_scan")
+        elif o[0] == "enc_out":
+            names.add("enc_final_norm")
+        elif o[0] == "embed":
+            names.add("tok_embed")
+        elif o[0] == "prelude":
+            names.add("prelude")
+        elif o[0] == "blocks":
+            names.add("scan")
+            if _has_shared(cfg):
+                names.add("shared")
+        elif o[0] == "head":
+            names.add("final_norm")
+            if cfg.tie_embeddings:
+                names.add("tok_embed")
+            else:
+                names.add("lm_head")
+    return names
+
+
+def split_stages(params, cfg: ModelCfg, n_stages: int):
+    """Cut monolithic params into per-stage pytrees (scan leaves sliced by period).
+
+    Returns (stage_params_list, stage_ops_list). Block-op period indices in the
+    returned ops are *local* to each stage's sliced scan stack, so the op lists are
+    pure static metadata and the stage params stay clean jnp pytrees.
+    """
+    op_chunks = split_ops(cfg, n_stages)
+    stages, local_ops = [], []
+    for ops in op_chunks:
+        sp: dict = {}
+        names = stage_param_names(cfg, ops)
+        rebased = []
+        offsets = {}
+        for nm in names:
+            if nm in ("scan", "enc_scan"):
+                kind = "blocks" if nm == "scan" else "enc_blocks"
+                ranges = [(o[1], o[2]) for o in ops if o[0] == kind]
+                j0, j1 = ranges[0][0], ranges[-1][1]
+                sp[nm] = jax.tree.map(lambda a: a[j0:j1], params[nm])
+                offsets[kind] = j0
+            elif nm == "prelude":
+                idxs = [o[1] for o in ops if o[0] == "prelude"]
+                sp["prelude"] = {f"p{i}": params["prelude"][f"p{i}"] for i in idxs}
+            else:
+                sp[nm] = params[nm]
+        for o in ops:
+            if o[0] in ("blocks", "enc_blocks"):
+                rebased.append((o[0], o[1] - offsets[o[0]], o[2] - offsets[o[0]]))
+            else:
+                rebased.append(o)
+        stages.append(sp)
+        local_ops.append(rebased)
+    return stages, local_ops
+
+
+def _embed(params, cfg: ModelCfg, batch):
+    x = params["tok_embed"].astype(cfg.dtype)[batch["tokens"]] * math.sqrt(cfg.d_model)
+    if cfg.n_prefix_img and "patches" in batch:
+        n = cfg.n_prefix_img
+        x = jnp.concatenate([batch["patches"].astype(cfg.dtype), x[:, n:, :]], axis=1)
+    return ax.constrain(x, ax.batch_axes(), None, None)
+
+
+def _head_logits(sp, cfg: ModelCfg, h):
+    w = (sp["tok_embed"].T if cfg.tie_embeddings else sp["lm_head"]).astype(cfg.dtype)
+    logits = ax.constrain(jnp.einsum("bsd,dv->bsv", h, w), ax.batch_axes(), None, "model")
+    if cfg.final_softcap:
+        logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits
+
+
+def _xent(logits, labels, onehot=False):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    if onehot:  # gather-free (partial-manual shard_map safe)
+        oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+        tgt = jnp.sum(logits * oh, axis=-1)
+    else:
+        tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(lse - tgt)
+
+
+def _head_loss(sp, cfg: ModelCfg, h, batch):
+    labels = batch["labels"]
+    B, S = labels.shape
+    h = L.rmsnorm_apply(sp["final_norm"], h, cfg.norm_eps)
+    if cfg.xent_chunk and S % cfg.xent_chunk == 0 and S > cfg.xent_chunk:
+        n = S // cfg.xent_chunk
+        hs = h.reshape(B, n, cfg.xent_chunk, -1).swapaxes(0, 1)
+        ls = labels.reshape(B, n, cfg.xent_chunk).swapaxes(0, 1)
+
+        def body(tot, xs):
+            hh, ll = xs
+            return tot + _xent(_head_logits(sp, cfg, hh), ll, cfg.onehot_xent), None
+
+        body = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+        tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls), unroll=cfg.unroll)
+    else:
+        tot = _xent(_head_logits(sp, cfg, h), labels, cfg.onehot_xent)
+    return tot / (B * S)
+
+
+def run_stage_ops(sp, ops, carry, batch, cfg: ModelCfg, *, caches=None):
+    """Interpret one stage's op list. carry: dict(x, enc, aux) -> updated carry.
+
+    If the stage contains 'head', carry gains 'loss'.
+    """
+    x, enc, aux = carry.get("x"), carry.get("enc"), carry["aux"]
+    if caches is not None:
+        caches = dict(caches)  # avoid mutating caller's top-level dict
+    for o in ops:
+        if o[0] == "frames_in":
+            x = batch["frames"].astype(cfg.dtype)
+        elif o[0] == "enc_blocks":
+            B, S = x.shape[0], x.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            x, a, _ = _scan_blocks(sp["enc_scan"], cfg.enc_pattern, x, cfg,
+                                   positions=pos, j0=o[1], j1=o[2])
+            aux = aux + a
+        elif o[0] == "enc_out":
+            enc = L.rmsnorm_apply(sp["enc_final_norm"], x, cfg.norm_eps)
+            x = None
+        elif o[0] == "embed":
+            x = _embed(sp, cfg, batch)
+        elif o[0] in ("prelude", "blocks"):
+            B, S = x.shape[0], x.shape[1]
+            positions = batch.get("positions")
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            prefix_len = batch.get("prefix_len")
+            if o[0] == "prelude":
+                blk = cfg.prelude[o[1]]
+                cc = None if caches is None else caches["prelude"][f"p{o[1]}"]
+                x, a, nc = block_apply(sp["prelude"][f"p{o[1]}"], blk, x, cfg,
+                                       positions=positions, prefix_len=prefix_len,
+                                       enc_out=enc, cache=cc, shared=sp.get("shared"))
+                if caches is not None:
+                    caches["prelude"] = dict(caches["prelude"])
+                    caches["prelude"][f"p{o[1]}"] = nc
+            else:
+                cs = None if caches is None else caches["scan"]
+                x, a, cs = _scan_blocks(sp["scan"], cfg.pattern, x, cfg,
+                                        positions=positions, prefix_len=prefix_len,
+                                        enc_out=enc, caches=cs, shared=sp.get("shared"),
+                                        j0=o[1], j1=o[2])
+                if caches is not None:
+                    caches["scan"] = cs
+            aux = aux + a
+        elif o[0] == "head":
+            loss = _head_loss(sp, cfg, x, batch)
+            return {"x": None, "enc": None, "aux": aux, "loss": loss + aux}, caches
+    return {"x": x, "enc": enc, "aux": aux}, caches
+
+
+# ---------------------------------------------------------------------------
+# Monolithic convenience API
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, batch, cfg: ModelCfg):
+    """Full-model loss (single-stage path)."""
+    stages, op_chunks = split_stages(params, cfg, 1)
+    carry = {"x": None, "enc": None, "aux": jnp.zeros((), jnp.float32)}
+    carry, _ = run_stage_ops(stages[0], op_chunks[0], carry, batch, cfg)
+    return carry["loss"]
+
+
+def forward_hidden(params, batch, cfg: ModelCfg, *, caches=None):
+    """Run everything except the head; returns (h, caches)."""
+    stages, op_chunks = split_stages(params, cfg, 1)
+    ops = [o for o in op_chunks[0] if o[0] != "head"]
+    carry = {"x": None, "enc": None, "aux": jnp.zeros((), jnp.float32)}
+    carry, caches = run_stage_ops(stages[0], ops, carry, batch, cfg, caches=caches)
+    return carry["x"], carry.get("enc"), caches
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def _init_block_cache(cfg: ModelCfg, blk: BlockDef, batch_size, max_len):
+    if blk.mixer == "attn" and cfg.mla:
+        m = cfg.mla
+        return {"mixer": {
+            "c_kv": jnp.zeros((batch_size, max_len, m.kv_lora), cfg.dtype),
+            "k_rope": jnp.zeros((batch_size, max_len, m.qk_rope_dim), cfg.dtype),
+            "pos": jnp.zeros((), jnp.int32)}}
+    if blk.mixer in ("attn", "shared_attn"):
+        eff_len = max_len if blk.window is None else min(max_len, blk.window)
+        # NOTE: we do not ring-buffer windows in the baseline; window layers still
+        # allocate full cache (hillclimb target), except obvious wins could trim.
+        return {"mixer": {
+            "k": jnp.zeros((batch_size, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+            "v": jnp.zeros((batch_size, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+            "pos": jnp.zeros((), jnp.int32)}}
+    if blk.mixer == "ssm":
+        d_inner, n_heads, conv_ch = L.ssm_dims(cfg)
+        s = cfg.ssm
+        return {"mixer": {
+            "conv": jnp.zeros((batch_size, s.d_conv - 1, conv_ch), cfg.dtype),
+            "state": jnp.zeros((batch_size, n_heads, s.d_state, s.head_dim), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32)}}
+    return {"mixer": None}
+
+
+def init_caches(cfg: ModelCfg, batch_size, max_len):
+    def stack(n, mk):
+        one = mk()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy() if a is not None else None, one)
+
+    caches = {
+        "prelude": {f"p{i}": _init_block_cache(cfg, blk, batch_size, max_len)
+                    for i, blk in enumerate(cfg.prelude)},
+        "scan": stack(cfg.n_periods, lambda: {
+            f"b{j}": _init_block_cache(cfg, blk, batch_size, max_len)
+            for j, blk in enumerate(cfg.pattern)}),
+    }
+    return caches
+
+
+def serve_prefill(params, batch, cfg: ModelCfg, max_len=None):
+    """Process the full prompt, fill caches, return (last_logits, caches)."""
+    B, S = batch["tokens"].shape
+    max_len = max_len or S
+    caches = init_caches(cfg, B, max_len)
+    h, enc, caches = forward_hidden(params, batch, cfg, caches=caches)
+    h_last = h[:, -1:, :]
+    h_last = L.rmsnorm_apply(params["final_norm"], h_last, cfg.norm_eps)
+    logits = _head_logits(params, cfg, h_last)
+    if cfg.enc_periods:
+        caches["enc_out"] = enc
+    return logits, caches
+
+
+def serve_decode(params, caches, tokens, cfg: ModelCfg, pos):
+    """One-token decode. tokens [B,1]; pos scalar int32 (current length)."""
+    B = tokens.shape[0]
+    batch = {"tokens": tokens, "positions": jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)}
+    if cfg.n_prefix_img:
+        batch = dict(batch)  # patches only matter at prefill
+    stages, op_chunks = split_stages(params, cfg, 1)
+    ops = [o for o in op_chunks[0] if o[0] not in ("head", "frames_in", "enc_blocks", "enc_out")]
+    carry = {"x": None, "enc": caches.get("enc_out"), "aux": jnp.zeros((), jnp.float32)}
+    carry, caches2 = run_stage_ops(stages[0], ops, carry, batch, cfg, caches=caches)
+    h = L.rmsnorm_apply(params["final_norm"], carry["x"], cfg.norm_eps)
+    logits = _head_logits(params, cfg, h)
+    if cfg.enc_periods:
+        caches2["enc_out"] = caches.get("enc_out")
+    return logits, caches2

@@ -1,0 +1,84 @@
+"""Gradient-forecasting delay corrections (paper Sec. 5.4 baselines).
+
+- second_order: Taylor/delay compensation (Zheng et al. 2017):
+      g_hat = g + lam * g (.) g (.) (w_t - w_bar)
+  with the diagonal-Fisher Hessian approximation H ~ diag(g*g).
+
+- polyfft: time-series forecasting of the gradient: 2nd-order polynomial trend over
+  the last `hist` gradients + FFT phase-advance of the residual (Bloomfield 2004),
+  predicting the gradient tau steps ahead.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def second_order_correct(grads, params_now, params_stale, lam=1.0):
+    return jax.tree.map(
+        lambda g, w, wb: (g.astype(jnp.float32)
+                          + lam * g.astype(jnp.float32) ** 2 * (w.astype(jnp.float32) - wb.astype(jnp.float32))),
+        grads, params_now, params_stale)
+
+
+# ----- polynomial + FFT -----------------------------------------------------
+
+
+def init_history(params, hist: int):
+    return {
+        "buf": jax.tree.map(lambda p: jnp.zeros((hist,) + p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def push_history(state, grads, hist: int):
+    t = state["count"]
+    buf = jax.tree.map(
+        lambda b, g: jax.lax.dynamic_update_index_in_dim(b, g.astype(jnp.float32), t % hist, 0),
+        state["buf"], grads)
+    return {"buf": buf, "count": t + 1}
+
+
+def _poly_design(hist: int, tau: float):
+    """Least-squares quadratic fit over t=0..hist-1, evaluated at t=hist-1+tau.
+
+    Returns the weight vector w (length hist): prediction = w @ history.
+    """
+    t = np.arange(hist, dtype=np.float64)
+    X = np.stack([np.ones_like(t), t, t * t], axis=1)  # [hist, 3]
+    pinv = np.linalg.pinv(X)  # [3, hist]
+    tq = hist - 1 + tau
+    q = np.array([1.0, tq, tq * tq])  # [3]
+    return jnp.asarray(q @ pinv, jnp.float32)  # [hist]
+
+
+def polyfft_predict(state, hist: int, tau: float, fft_weight=0.5):
+    """Forecast grad tau steps ahead from the ring buffer (ordered oldest->newest)."""
+    t = state["count"]
+    w_poly = _poly_design(hist, tau)
+
+    # FFT phase advance: x(t+tau)_k = X_k * exp(i 2 pi k tau / hist)
+    k = jnp.arange(hist // 2 + 1, dtype=jnp.float32)
+    phase = jnp.exp(1j * 2 * jnp.pi * k * (tau / hist))
+
+    def pred(buf):
+        # roll so that index 0 = oldest
+        idx = (t + jnp.arange(hist)) % hist
+        ordered = buf[idx]
+        hb = ordered.reshape(hist, -1)
+        poly = jnp.einsum("h,hn->n", w_poly, hb)
+        trend = jnp.einsum("h,hn->n", w_poly * 0 + 1.0 / hist, hb)  # mean
+        resid = hb - trend[None]
+        F = jnp.fft.rfft(resid, axis=0)
+        fwd = jnp.fft.irfft(F * phase[:, None], n=hist, axis=0)[-1]
+        out = poly + fft_weight * fwd
+        return out.reshape(buf.shape[1:])
+
+    predicted = jax.tree.map(pred, state["buf"])
+    # fall back to raw newest gradient until the buffer is warm
+    def blend(p, b):
+        newest = b[(t - 1) % hist]
+        return jnp.where(t >= hist, p, newest)
+
+    return jax.tree.map(blend, predicted, state["buf"])

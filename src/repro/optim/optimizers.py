@@ -1,0 +1,178 @@
+"""Optimizers for async-PP training.
+
+Uniform interface (per-stage application by the async engine):
+
+    opt = make_optimizer(kind, lr=..., b1=..., ...)
+    state = opt.init(params)
+    new_params, new_state, aux = opt.update(params, grads, state, lr_scale=..., mom=..., t=...)
+
+`lr_scale` and `mom` are traced per-stage scalars (Eq. 13 stage-dependent schedules);
+`mom` overrides the momentum coefficient when not None. `aux` carries method hooks:
+  - 'lookahead': the point the *next* forward should be evaluated at (Eq. 10), or None
+  - 'step_dir':  the (undamped) per-step direction estimate, used by XPipe / PipeMare
+  - 'last_step': w_{t+1} - w_t (for Prop.-1 alignment metrics)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]
+    kind: str
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (baselines: GPipe, PipeDream, PipeMare, LR variants)
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    def init(params):
+        return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, *, lr_scale=1.0, mom=None, t=None):
+        c = state["count"] + 1
+        beta1 = b1 if mom is None else mom
+        m = _tmap(lambda m_, g: beta1 * m_ + (1 - beta1) * g.astype(jnp.float32), state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - beta1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        eta = lr * lr_scale
+
+        def step(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return (p.astype(jnp.float32) * (1 - eta * wd) - eta * upd).astype(p.dtype)
+
+        new_params = _tmap(step, params, m, v)
+        step_dir = _tmap(lambda np_, p: np_.astype(jnp.float32) - p.astype(jnp.float32), new_params, params)
+        aux = {"lookahead": None, "step_dir": step_dir, "last_step": step_dir}
+        return new_params, {"m": m, "v": v, "count": c}, aux
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# NAdam — THE paper's practical method ("Ours"): NAdam with beta1=0.99, decoupled wd.
+# PyTorch-faithful momentum warmup mu_t = b1 * (1 - 0.5 * 0.96^(t*psi)).
+# ---------------------------------------------------------------------------
+
+
+def nadam(lr, b1=0.99, b2=0.95, eps=1e-8, wd=0.01, psi=0.004, discount=True):
+    """discount=False gives PipeDream-NAG-Base (Fig. 7 ablation: no (1-mu) factor)."""
+
+    def _mu(c, base):
+        return base * (1.0 - 0.5 * 0.96 ** (c.astype(jnp.float32) * psi))
+
+    def init(params):
+        return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params),
+                "count": jnp.zeros((), jnp.int32),
+                "mu_prod": jnp.ones((), jnp.float32)}
+
+    def update(params, grads, state, *, lr_scale=1.0, mom=None, t=None):
+        c = state["count"] + 1
+        base = b1 if mom is None else mom
+        mu_t = _mu(c, base)
+        mu_next = _mu(c + 1, base)
+        mu_prod = state["mu_prod"] * mu_t
+        mu_prod_next = mu_prod * mu_next
+        beta1 = base
+        m = _tmap(lambda m_, g: beta1 * m_ + (1 - beta1) * g.astype(jnp.float32), state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        eta = lr * lr_scale
+
+        def step(p, m_, v_, g):
+            g = g.astype(jnp.float32)
+            denom = jnp.sqrt(v_ / bc2) + eps
+            if discount:
+                mhat = mu_next * m_ / (1 - mu_prod_next) + (1 - mu_t) * g / (1 - mu_prod)
+            else:
+                # ablation: remove the (1-mu) gradient discounting -> staleness blows up
+                mhat = mu_next * m_ / (1 - mu_prod_next) + g
+            return (p.astype(jnp.float32) * (1 - eta * wd) - eta * mhat / denom).astype(p.dtype)
+
+        new_params = _tmap(step, params, m, v, grads)
+        step_dir = _tmap(lambda np_, p: np_.astype(jnp.float32) - p.astype(jnp.float32), new_params, params)
+        aux = {"lookahead": None, "step_dir": step_dir, "last_step": step_dir}
+        return new_params, {"m": m, "v": v, "count": c, "mu_prod": mu_prod}, aux
+
+    return Optimizer(init, update, "nadam")
+
+
+# ---------------------------------------------------------------------------
+# SGD-NAG, exact Eq. (10) form — used for the convergence-theory tests and the
+# 'ours_theory' engine mode (gradients evaluated at the *stashed look-ahead*).
+# ---------------------------------------------------------------------------
+
+
+def sgd_nag(lr, gamma=None, discount=True, wd=0.0):
+    """gamma=None -> theory schedule gamma_t=(t-2)/t (clipped at 0); else constant.
+
+    update:  d_t = gamma_t (w_t - w_{t-1})
+             w_{t+1} = w_t + d_t - lr * (1-gamma_t) * g      (discount=True, Eq. 10)
+             w_{t+1} = w_t + d_t - lr * g                    (discount=False, NAG-Base)
+    aux['lookahead'] = w_{t+1} + gamma_{t+1} (w_{t+1} - w_t)
+    """
+
+    def _gamma(c):
+        cf = c.astype(jnp.float32)
+        return jnp.maximum((cf - 2.0) / jnp.maximum(cf, 1.0), 0.0) if gamma is None else jnp.asarray(gamma, jnp.float32)
+
+    def init(params):
+        # jnp.array copies, so 'prev' never aliases the live params buffer
+        return {"prev": jax.tree.map(lambda p: jnp.array(p, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, *, lr_scale=1.0, mom=None, t=None):
+        c = state["count"] + 1
+        g_t = _gamma(c) if mom is None else mom
+        g_next = _gamma(c + 1) if mom is None else mom
+        eta = lr * lr_scale
+        coef = (1 - g_t) if discount else 1.0
+
+        def step(p, pv, g):
+            p32 = p.astype(jnp.float32)
+            d = g_t * (p32 - pv)
+            return (p32 * (1 - eta * wd) + d - eta * coef * g.astype(jnp.float32)).astype(p.dtype)
+
+        new_params = _tmap(step, params, state["prev"], grads)
+        prev = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        look = _tmap(
+            lambda np_, p: (np_.astype(jnp.float32) + g_next * (np_.astype(jnp.float32) - p.astype(jnp.float32))).astype(np_.dtype),
+            new_params, params)
+        step_dir = _tmap(lambda np_, p: np_.astype(jnp.float32) - p.astype(jnp.float32), new_params, params)
+        aux = {"lookahead": look, "step_dir": step_dir, "last_step": step_dir}
+        return new_params, {"prev": prev, "count": c}, aux
+
+    return Optimizer(init, update, "sgd_nag")
+
+
+def make_optimizer(kind: str, **kw) -> Optimizer:
+    if kind == "adamw":
+        return adamw(**kw)
+    if kind == "nadam":
+        return nadam(**kw)
+    if kind == "nadam_nodiscount":
+        return nadam(discount=False, **kw)
+    if kind == "sgd_nag":
+        return sgd_nag(**kw)
+    if kind == "sgd_nag_nodiscount":
+        return sgd_nag(discount=False, **kw)
+    raise ValueError(f"unknown optimizer {kind}")

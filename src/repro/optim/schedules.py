@@ -1,0 +1,39 @@
+"""LR schedules + the paper's stage-dependent corrections (Eq. 13)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr, warmup_steps, total_steps, init_lr=1e-7, final_lr=None):
+    """Paper Sec 5.1: linear warmup from 1e-7, cosine decay to base_lr/10."""
+    final_lr = base_lr / 10 if final_lr is None else final_lr
+
+    def sched(t):
+        t = t.astype(jnp.float32) if hasattr(t, "astype") else jnp.asarray(t, jnp.float32)
+        warm = init_lr + (base_lr - init_lr) * jnp.minimum(t / max(warmup_steps, 1), 1.0)
+        frac = jnp.clip((t - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_lr + 0.5 * (base_lr - final_lr) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(t < warmup_steps, warm, cos)
+
+    return sched
+
+
+def constant(base_lr):
+    return lambda t: jnp.asarray(base_lr, jnp.float32)
+
+
+def lr_discount_factor(tau_i: int, t, T: int):
+    """Eq. 13: eta_i^t = eta / tau_i^rho_t, rho_t = 1 - min(t/T, 1).
+
+    Returns the multiplicative factor (<=1) for stage i with delay tau_i; the
+    correction anneals away over the first T steps (PipeMare / Yang et al. 2021).
+    """
+    tau = max(float(tau_i), 1.0)
+    tf = t.astype(jnp.float32) if hasattr(t, "astype") else jnp.asarray(t, jnp.float32)
+    rho = 1.0 - jnp.minimum(tf / max(T, 1), 1.0)
+    return tau ** (-rho)
+
+
+def stage_momentum(i: int, P: int, lo=0.9, hi=0.99):
+    """Eq. 13: gamma_i = lo + (hi-lo) * (P - i) / P  for stage i in 1..P."""
+    return lo + (hi - lo) * (P - i) / P

@@ -1,0 +1,78 @@
+"""Activation-sharding constraints that degrade to no-ops off-mesh.
+
+`constrain(x, 'data', None, 'model', None)` applies with_sharding_constraint when an
+ambient mesh is active (pjit tracing under `with mesh:`), keeping only the axes that
+exist in the mesh AND divide the corresponding dim. On CPU tests with no mesh it is
+an identity — model code can call it unconditionally.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from jax._src.mesh import thread_resources
+
+
+def _ambient_mesh():
+    m = thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def _usable_axes(mesh):
+    """Axis name -> size, excluding axes that are Manual in the current trace
+    (inside a shard_map region constraints may only name auto axes)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            for name, ty in zip(am.axis_names, am.axis_types):
+                if "Manual" in str(ty) and name in sizes:
+                    del sizes[name]
+    except Exception:
+        pass
+    return sizes
+
+
+def constrain(x, *spec):
+    if x is None:
+        return None
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    sizes = _usable_axes(mesh)
+    fixed = []
+    for d, names in enumerate(spec):
+        if names is None:
+            fixed.append(None)
+            continue
+        ns = names if isinstance(names, tuple) else (names,)
+        ns = tuple(n for n in ns if n in sizes)
+        if not ns:
+            fixed.append(None)
+            continue
+        tot = 1
+        for n in ns:
+            tot *= sizes[n]
+        if x.shape[d] % tot != 0:
+            # try the first axis alone
+            if x.shape[d] % sizes[ns[0]] == 0:
+                ns = (ns[0],)
+            else:
+                fixed.append(None)
+                continue
+        fixed.append(ns if len(ns) > 1 else ns[0])
+    if all(f is None for f in fixed):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*fixed))
+    except Exception:
+        # e.g. axis is manual inside a shard_map region — constraint not applicable
+        return x
+
+
+def batch_axes():
+    """Logical batch mapping: ('pod','data') when a pod axis exists, else 'data'."""
+    mesh = _ambient_mesh()
+    if mesh is not None and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return "data"

@@ -1,0 +1,376 @@
+"""Cross-pod SPMD 1F1B async pipeline (multi-pod mesh: 'pod' = pipeline axis).
+
+This is the paper's deployment setting made SPMD: pipeline stages live on separate
+pods joined by slow links; activations/errors cross pods via `jax.lax.ppermute`;
+each pod updates its stage weights *locally per microbatch* (K=1 async, no global
+barrier), with PipeDream weight stashing for correct backprop — the engine's
+semantics realized as a genuinely pipelined SPMD program.
+
+Structure: `jax.shard_map(axis_names={'pod'})` is manual over 'pod' only;
+'data'/'model' stay auto so GSPMD shards each pod's compute exactly like the
+single-pod program (FSDP x TP). Every pod runs identical code; `lax.cond` on the
+pod index activates the head/loss phase and skips fill/drain bubbles at runtime.
+
+Stage 0 (embedding + prelude + whisper encoder) runs OUTSIDE the manual region
+under plain pjit, vectorized over all M microbatches, and its parameters update
+once per tick (synchronously): XLA's gather partitioner cannot partition embedding
+lookups inside partial-manual regions (hard CHECK crash), and a full-mesh-sharded
+embedding table is the better layout anyway. The in-region cross-entropy is
+gather-free (one-hot dot). Documented in DESIGN.md §7.
+
+Slot schedule (depth-first 1F1B): fwd of microbatch m at pod p in slot m+p; bwd in
+slot m + 2(P-1) - p; each bwd applies an immediate local update, so the realized
+weight delay is tau_p = 2(P-1-p) updates — the cross-pod analogue of Eq. 5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.layers import ModelCfg
+from repro.optim import optimizers
+from repro.parallel import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+STAGE0_KEYS = ("tok_embed", "prelude", "enc_scan", "enc_final_norm")
+POD_EDGE_KEYS = ("final_norm", "lm_head", "shared")
+
+
+def build_pp_params(params, cfg: ModelCfg, n_pods: int):
+    """Monolithic -> {'stage0': pjit params, 'pod_edge': [n_pods, ...] copies,
+    'blocks': [n_pods, pp, ...], 'flags': [n_pods, pp]}."""
+    Pn = cfg.n_periods
+    pp = math.ceil(Pn / n_pods)
+    pad = n_pods * pp - Pn
+
+    def pad_stack(a):
+        if pad:
+            a = jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], axis=0)
+        return a.reshape((n_pods, pp) + a.shape[1:])
+
+    blocks = jax.tree.map(pad_stack, params["scan"])
+    flags = jnp.concatenate(
+        [jnp.ones((Pn,), jnp.float32), jnp.zeros((pad,), jnp.float32)]
+    ).reshape(n_pods, pp)
+    stage0 = {k: params[k] for k in STAGE0_KEYS if k in params}
+    edge_one = {k: params[k] for k in POD_EDGE_KEYS if k in params}
+    if cfg.tie_embeddings:
+        # the head gets its own copy of the embedding (independent under async PP)
+        edge_one["head_w"] = params["tok_embed"].T.copy()
+    edge = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape).copy(), edge_one)
+    return {"stage0": stage0, "pod_edge": edge, "blocks": blocks, "flags": flags}
+
+
+# ---------------------------------------------------------------------------
+# Phases
+# ---------------------------------------------------------------------------
+
+
+def stage0_apply(stage0, batch, cfg: ModelCfg):
+    """Embed + prelude (+ whole encoder) for ONE microbatch -> wire dict."""
+    carry = {"x": None, "enc": None, "aux": jnp.zeros((), jnp.float32)}
+    ops = []
+    if cfg.enc_periods:
+        ops += [("frames_in",), ("enc_blocks", 0, cfg.enc_periods), ("enc_out",)]
+    ops += [("embed",)] + [("prelude", i) for i in range(len(cfg.prelude))]
+    carry, _ = lm.run_stage_ops(stage0, ops, carry, batch, cfg)
+    wire = {"x": carry["x"], "aux": carry["aux"]}
+    if cfg.enc_periods:
+        wire["enc"] = carry["enc"]
+    return wire
+
+
+def _mid_blocks(blocks, flags, wire, cfg: ModelCfg, shared):
+    """Scan local (possibly padded) periods; padded periods are identity."""
+    x, enc, aux = wire["x"], wire.get("enc"), wire["aux"]
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(c, xs):
+        xx, a = c
+        bp, flag = xs
+        x_new, aux_new = xx, a
+        for j, blk in enumerate(cfg.pattern):
+            x_new, da, _ = lm.block_apply(bp[f"b{j}"], blk, x_new, cfg,
+                                          positions=positions, enc_out=enc,
+                                          shared=shared)
+            aux_new = aux_new + da
+        xx = xx + flag.astype(xx.dtype) * (x_new - xx)
+        a = a + flag * (aux_new - a)
+        return (xx, a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, aux), (blocks, flags), unroll=cfg.unroll)
+    out = {"x": x, "aux": aux}
+    if "enc" in wire:
+        out["enc"] = enc
+    return out
+
+
+def _head_phase(edge, wire, labels, cfg: ModelCfg):
+    sp = {"final_norm": edge["final_norm"]}
+    if cfg.tie_embeddings:
+        sp["lm_head"] = edge["head_w"]
+        cfg = dataclasses.replace(cfg, tie_embeddings=False)
+    else:
+        sp["lm_head"] = edge["lm_head"]
+    loss = lm._head_loss(sp, cfg, wire["x"], {"labels": labels})
+    return loss + wire["aux"]
+
+
+# ---------------------------------------------------------------------------
+# The pipelined async train step
+# ---------------------------------------------------------------------------
+
+
+class PPState(NamedTuple):
+    step: jnp.ndarray
+    pp: Any  # build_pp_params output
+    opt_s0: Any  # stage-0 optimizer state (sync, per tick)
+    opt: Any  # per-pod optimizer state over {'pod_edge','blocks'}
+    stash: Any  # per-pod weight stash ring [pod, ring, ...]
+
+
+def _wire_zero(cfg: ModelCfg, b, S):
+    w = {"x": jnp.zeros((b, S, cfg.d_model), cfg.dtype),
+         "aux": jnp.zeros((), jnp.float32)}
+    if cfg.enc_periods:
+        w["enc"] = jnp.zeros((b, cfg.n_frames, cfg.d_model), cfg.dtype)
+    return w
+
+
+def make_pipeline_step(cfg: ModelCfg, mesh, *, n_microbatches: int, method: str = "ours",
+                       lr: float = 3e-4, weight_stash: bool = True):
+    """Returns (init_fn(params)->PPState, step_fn(state, batch)->(state, metrics)).
+
+    batch: {'tokens': [M, b, S], 'labels': [M, b, S], ...}; M = n_microbatches.
+    """
+    cfg = dataclasses.replace(cfg, onehot_xent=True)
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+    M = n_microbatches
+    ring = 2 * n_pods
+    opt_kind = {"ours": "nadam", "pipedream": "adamw"}.get(method, "nadam")
+    kw = {"b1": 0.99} if opt_kind == "nadam" else {}
+    opt = optimizers.make_optimizer(opt_kind, lr=lr, **kw)
+
+    def init_fn(params):
+        pp = build_pp_params(params, cfg, n_pods)
+        wb = {"pod_edge": pp["pod_edge"], "blocks": pp["blocks"]}
+        w_one = jax.tree.map(lambda x: x[0], wb)
+        opt_one = opt.init(w_one)
+        opt_state = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape).copy(), opt_one)
+        stash = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[:, None], (n_pods, ring) + x.shape[1:]).copy(), wb)
+        opt_s0 = opt.init(pp["stage0"])
+        return PPState(jnp.zeros((), jnp.int32), pp, opt_s0, opt_state, stash)
+
+    n_slots = M + 2 * (n_pods - 1)
+
+    def pod_program(pod_edge, blocks, flags, opt_state, stash_w, x0_all, labels_all):
+        """shard_map body (manual over 'pod'; leaves carry a leading [1] pod axis)."""
+        sq = lambda t: jax.tree.map(lambda a: a[0], t)
+        pod_edge, blocks, flags = sq(pod_edge), sq(blocks), sq(flags)
+        opt_state, stash_w = sq(opt_state), sq(stash_w)
+        # x0_all / labels_all are replicated over 'pod' (in_spec P()): no pod axis
+        pod_id = jax.lax.axis_index("pod")
+        is_first = pod_id == 0
+        is_last = pod_id == n_pods - 1
+        b, S = labels_all.shape[1], labels_all.shape[2]
+        zero_wire = _wire_zero(cfg, b, S)
+
+        def idx_mb(tree, i):
+            i = jnp.clip(i, 0, M - 1)
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False), tree)
+
+        def pod_fn(w, wire_in, labels):
+            out = _mid_blocks(w["blocks"], flags, wire_in, cfg,
+                              w["pod_edge"].get("shared"))
+            loss = jax.lax.cond(
+                is_last,
+                lambda: _head_phase(w["pod_edge"], out, labels, cfg),
+                lambda: jnp.zeros((), jnp.float32))
+            return out, loss
+
+        def slot(carry, s):
+            W, opt_s, stw, x_ring, x_wire, e_wire, dx0, loss_sum = carry
+            # ---------------- forward unit ----------------
+            fwd_mb = s - pod_id
+            fwd_valid = (fwd_mb >= 0) & (fwd_mb < M)
+            x0 = idx_mb(x0_all, fwd_mb)
+            wire_in = jax.tree.map(lambda f, r: jnp.where(is_first, f, r), x0, x_wire)
+            wire_in = jax.tree.map(lambda a, z: jnp.where(fwd_valid, a, z),
+                                   wire_in, zero_wire)
+
+            def do_fwd():
+                out, _ = pod_fn({"pod_edge": W["pod_edge"], "blocks": W["blocks"]},
+                                wire_in, idx_mb(labels_all, fwd_mb))
+                return out
+
+            send = jax.lax.cond(fwd_valid & (~is_last), do_fwd, lambda: zero_wire)
+            slot_idx = jnp.mod(jnp.clip(fwd_mb, 0, M - 1), ring)
+            upd_ring = lambda r, v: jnp.where(
+                fwd_valid,
+                jax.lax.dynamic_update_index_in_dim(r, v.astype(r.dtype), slot_idx, 0), r)
+            x_ring = jax.tree.map(upd_ring, x_ring, wire_in)
+            stw = jax.tree.map(upd_ring, stw, W)
+
+            # ---------------- backward unit ----------------
+            bwd_mb = s - (2 * (n_pods - 1) - pod_id)
+            bwd_valid = (bwd_mb >= 0) & (bwd_mb < M)
+            bslot = jnp.mod(jnp.clip(bwd_mb, 0, M - 1), ring)
+            labels_b = idx_mb(labels_all, bwd_mb)
+            take = lambda r: jax.lax.dynamic_index_in_dim(r, bslot, 0, keepdims=False)
+            x_saved = jax.tree.map(take, x_ring)
+            W_b = jax.tree.map(take, stw) if weight_stash else W
+            W_b = jax.tree.map(lambda a, ref: a.astype(ref.dtype), W_b, W)
+
+            def do_bwd():
+                (out, loss), vjp = jax.vjp(
+                    lambda w, xi: pod_fn(w, xi, labels_b), W_b, x_saved)
+                zero_ct = jax.tree.map(jnp.zeros_like, out)
+                ct_wire = jax.tree.map(
+                    lambda e, z: jnp.where(is_last, z, e.astype(z.dtype)), e_wire, zero_ct)
+                gW, ge = vjp((ct_wire, jnp.ones((), jnp.float32)))
+                return gW, ge, loss
+
+            def no_bwd():
+                gW = jax.tree.map(jnp.zeros_like, W)
+                ge = jax.tree.map(jnp.zeros_like, zero_wire)
+                return gW, ge, jnp.zeros((), jnp.float32)
+
+            gW, ge, loss = jax.lax.cond(bwd_valid, do_bwd, no_bwd)
+            newW, new_opt, _ = opt.update(W, gW, opt_s)
+            W = jax.tree.map(lambda a, b_: jnp.where(bwd_valid, a, b_), newW, W)
+            opt_s = jax.tree.map(lambda a, b_: jnp.where(bwd_valid, a, b_), new_opt, opt_s)
+            loss_sum = loss_sum + jnp.where(bwd_valid & is_last, loss, 0.0)
+            # first pod's input-cotangent = stage-0 output grads: collect per mb
+            dx0 = jax.tree.map(
+                lambda buf, g: jnp.where(
+                    bwd_valid & is_first,
+                    jax.lax.dynamic_update_index_in_dim(
+                        buf, g.astype(buf.dtype), jnp.clip(bwd_mb, 0, M - 1), 0), buf),
+                dx0, ge)
+
+            # ---------------- wires ----------------
+            fwd_perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
+            bwd_perm = [(i, (i - 1) % n_pods) for i in range(n_pods)]
+            x_wire = jax.tree.map(lambda v: jax.lax.ppermute(v, "pod", fwd_perm), send)
+            e_wire = jax.tree.map(lambda v: jax.lax.ppermute(v, "pod", bwd_perm), ge)
+            return (W, opt_s, stw, x_ring, x_wire, e_wire, dx0, loss_sum), None
+
+        W0 = {"pod_edge": pod_edge, "blocks": blocks}
+        x_ring0 = jax.tree.map(lambda z: jnp.zeros((ring,) + z.shape, z.dtype), zero_wire)
+        dx0_0 = jax.tree.map(lambda z: jnp.zeros((M,) + z.shape, jnp.float32), zero_wire)
+        carry0 = (W0, opt_state, stash_w, x_ring0, zero_wire,
+                  jax.tree.map(jnp.zeros_like, zero_wire), dx0_0,
+                  jnp.zeros((), jnp.float32))
+        carry, _ = jax.lax.scan(slot, carry0, jnp.arange(n_slots), unroll=cfg.unroll)
+        W, opt_s, stw, _, _, _, dx0, loss_sum = carry
+        loss = jax.lax.psum(jnp.where(is_last, loss_sum / M, 0.0), "pod")
+        ex = lambda t: jax.tree.map(lambda a: a[None], t)
+        return (ex(W["pod_edge"]), ex(W["blocks"]), ex(opt_s), ex(stw),
+                ex(dx0), loss[None])
+
+    def step_fn(state: PPState, batch):
+        # --- stage 0 forward for all microbatches (pjit, vectorized over M) ---
+        def s0_all(stage0, b):
+            return jax.vmap(lambda mb: stage0_apply(stage0, mb, cfg))(b)
+
+        x0_all, s0_vjp = jax.vjp(lambda p: s0_all(p, batch), state.pp["stage0"])
+
+        # --- the manual-pod pipeline ---
+        fn = jax.shard_map(
+            pod_program, mesh=mesh,
+            in_specs=(P("pod"), P("pod"), P("pod"), P("pod"), P("pod"), P(), P()),
+            out_specs=(P("pod"), P("pod"), P("pod"), P("pod"), P("pod"), P("pod")),
+            check_vma=False,
+            axis_names={"pod"},
+        )
+        pod_edge, blocks, opt_s, stw, dx0, loss = fn(
+            state.pp["pod_edge"], state.pp["blocks"], state.pp["flags"],
+            state.opt, state.stash, x0_all, batch["labels"])
+
+        # --- stage 0 backward + synchronous per-tick update ---
+        dx0_first = jax.tree.map(lambda a: a[0], dx0)  # first pod's cotangents
+        dx0_cast = jax.tree.map(lambda g, x: g.astype(x.dtype), dx0_first, x0_all)
+        (g_s0,) = s0_vjp(dx0_cast)
+        g_s0 = jax.tree.map(lambda g: g / M, g_s0)
+        new_s0, new_opt_s0, _ = opt.update(state.pp["stage0"], g_s0, state.opt_s0)
+
+        pp = dict(state.pp)
+        pp["stage0"], pp["pod_edge"], pp["blocks"] = new_s0, pod_edge, blocks
+        return (PPState(state.step + 1, pp, new_opt_s0, opt_s, stw),
+                {"loss": loss.reshape(-1)[0]})
+
+    return init_fn, step_fn
+
+
+# ---------------------------------------------------------------------------
+# Dry-run integration
+# ---------------------------------------------------------------------------
+
+
+def lower_pipeline_train(cfg: ModelCfg, cell, mesh, method: str = "ours"):
+    init_fn, step_fn = make_pipeline_step(
+        cfg, mesh, n_microbatches=cell.accum, method=method)
+    params_sds = jax.eval_shape(lambda k: lm.init_lm(k, cfg), jax.random.PRNGKey(0))
+    state_sds = jax.eval_shape(init_fn, params_sds)
+
+    from repro.launch import specs as S
+    from repro.launch.dryrun import _maybe
+    from jax.tree_util import tree_flatten_with_path, keystr
+
+    batch_sds = S.train_batch_specs(cfg, cell)
+
+    def podded_spec(tree):
+        def one(path, l):
+            sp = list(shd.spec_for(path, l.shape, mesh))
+            sp[0] = "pod"
+            return P(*sp)
+
+        leaves, treedef = tree_flatten_with_path(tree)
+        return jax.tree.unflatten(treedef, [one(keystr(p), l) for p, l in leaves])
+
+    state_spec = PPState(
+        P(),
+        {
+            "stage0": shd.spec_for_tree(state_sds.pp["stage0"], mesh),
+            "pod_edge": podded_spec(state_sds.pp["pod_edge"]),
+            "blocks": podded_spec(state_sds.pp["blocks"]),
+            "flags": P("pod", None),
+        },
+        shd.spec_for_tree(state_sds.opt_s0, mesh),
+        podded_spec(state_sds.opt),
+        podded_spec(state_sds.stash),
+    )
+    state_spec = _maybe(state_spec, state_sds, mesh)
+    b_spec = _maybe(jax.tree.map(
+        lambda x: shd.batch_spec(mesh, len(x.shape), leading_micro=True), batch_sds),
+        batch_sds, mesh)
+
+    with mesh:
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), state_spec,
+                             is_leaf=lambda x: isinstance(x, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), b_spec,
+                             is_leaf=lambda x: isinstance(x, P)),
+            ),
+        ).lower(state_sds, batch_sds)
+    return lowered

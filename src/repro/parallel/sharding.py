@@ -1,0 +1,204 @@
+"""Sharding rules: param-name-keyed PartitionSpecs for FSDP ('data') x TP ('model').
+
+Strategy (MaxText-style):
+  - TP: attention heads / MoE experts / ffn hidden / vocab on 'model'
+  - FSDP: the embed/d_model axis of every weight on 'data' (params, moments, stash)
+  - a dim is sharded only if divisible by the axis size (else replicated) and no
+    mesh axis is used twice in one spec
+  - stacked leading axes (scan periods, stash time, swarm replicas) are unsharded
+
+`spec_for_tree` walks any params/opt/stash pytree and returns a matching tree of
+PartitionSpecs; `extra_leading` accounts for stash time axes etc.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_flatten_with_path, keystr
+
+
+# param-name -> per-dim logical roles, innermost dims (leading stack dims padded None)
+# roles: 'embed' (FSDP/data), 'heads','kv_heads','ffn','experts','vocab','kv_lora' (TP/model), None
+_RULES = [
+    (r"tok_embed$", ("vocab", "embed")),
+    (r"(lm_head|head_w)$", ("embed", "vocab")),
+    (r"(wq|c_wq)$", ("embed", "heads", None)),
+    (r"(wk|wv|c_wk|c_wv)$", ("embed", "kv_heads", None)),
+    (r"(wo|c_wo)$", ("heads", None, "embed")),
+    (r"(bq)$", ("heads", None)),
+    (r"(bk|bv)$", ("kv_heads", None)),
+    (r"w_dkv$", ("embed", "model_flat")),
+    (r"(w_uk|w_uv)$", ("kv_lora", "heads", None)),
+    (r"(w_gate|w_up)$", ("embed", "ffn")),
+    (r"w_down$", ("ffn", "embed")),
+    (r"router$", ("embed", None)),
+    (r"(moe_gate|moe_up)$", ("experts", "embed", None)),
+    (r"moe_down$", ("experts", None, "embed")),
+    (r"in_proj$", ("embed", "model_flat")),
+    (r"out_proj$", ("model_flat", "embed")),
+    (r"shared_out_proj$", ("embed", "model_flat")),
+    (r"conv_w$", (None, "model_flat")),
+    (r"conv_b$", ("model_flat",)),
+    (r"(A_log|ssm_D|dt_bias)$", (None,)),
+    (r"(scale)$", (None,)),  # norms
+]
+
+_ROLE_AXIS = {
+    "embed": "data",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "kv_lora": "data",
+    "model_flat": "model",
+}
+
+
+def _mesh_size(mesh: Mesh, axis: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+
+def norm_path(path: str) -> str:
+    """keystr -> slash form: ".params[0]['scan']['b0']['wq']" -> "params/0/scan/b0/wq"."""
+    p = re.sub(r"\['([^']+)'\]", r"/\1", path)
+    p = re.sub(r"\[(\d+)\]", r"/\1", p)
+    p = p.replace(".", "/")
+    return p.strip("/")
+
+
+def spec_for(path: str, shape, mesh: Mesh, *, extra_data_axis: Optional[str] = None):
+    """PartitionSpec for one param leaf identified by its key path."""
+    path = norm_path(path)
+    roles = None
+    for pat, r in _RULES:
+        if re.search(pat, path):
+            roles = r
+            break
+    nd = len(shape)
+    if roles is None:
+        return P(*([None] * nd))
+    lead = nd - len(roles)  # stacked axes (periods / stash time / replicas)
+    spec = [None] * nd
+    used = set()
+    for j, role in enumerate(roles):
+        if role is None:
+            continue
+        axis = _ROLE_AXIS[role]
+        dim = lead + j
+        size = _mesh_size(mesh, axis)
+        names = (axis,)
+        if axis == "data" and extra_data_axis and extra_data_axis in mesh.axis_names:
+            if shape[dim] % (size * _mesh_size(mesh, extra_data_axis)) == 0 and extra_data_axis not in used:
+                names = (extra_data_axis, axis)
+                size = size * _mesh_size(mesh, extra_data_axis)
+        if axis in used or any(n in used for n in names):
+            continue
+        if shape[dim] % size != 0 or shape[dim] < size:
+            # try single-axis fallback when the compound fails
+            if len(names) > 1 and shape[dim] % _mesh_size(mesh, axis) == 0 and axis not in used:
+                names = (axis,)
+            else:
+                continue
+        spec[dim] = names if len(names) > 1 else names[0]
+        used.update(names)
+    return P(*spec)
+
+
+def spec_for_tree(tree, mesh: Mesh, *, extra_data_axis: Optional[str] = None):
+    leaves, treedef = tree_flatten_with_path(tree)
+    specs = [
+        spec_for(keystr(p), np.shape(l), mesh, extra_data_axis=extra_data_axis)
+        for p, l in leaves
+    ]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def sharding_for_tree(tree, mesh: Mesh, **kw):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_for_tree(tree, mesh, **kw),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activations / batch / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, ndim: int, *, leading_micro: bool, pod_data: bool = False):
+    """tokens/labels [K?, B, S] or frames/patches [K?, B, S, D]: batch on data(+pod)."""
+    b_axes = ("pod", "data") if (pod_data and "pod" in mesh.axis_names) else "data"
+    spec = [None] * ndim
+    spec[1 if leading_micro else 0] = b_axes
+    return P(*spec)
+
+
+# Flash-decoding-style cache layout (§Perf H7): when kv_heads don't divide the
+# model axis, shard the cache *sequence* over 'model' (split-K): scores stay
+# local per shard and only softmax statistics + a [B,H,1,hd] partial all-reduce
+# cross shards — instead of all-gathering the whole cache every token.
+DECODE_SPLITK = True
+
+
+def cache_spec(path: str, shape, mesh: Mesh, batch_sharded: bool = True):
+    """KV/SSD cache leaves: batch on 'data' when divisible, else seq on 'data';
+    kv_heads on 'model' when divisible, else split-K over the sequence."""
+    path = norm_path(path)
+    nd = len(shape)
+    spec = [None] * nd
+    dsz = _mesh_size(mesh, "data")
+    msz = _mesh_size(mesh, "model")
+    if re.search(r"(/k$|/v$)", path):
+        # [periods?, B, Smax, Hkv, hd]
+        lead = nd - 4
+        B, S, H, hd = shape[lead:]
+        if B % dsz == 0:
+            spec[lead] = "data"
+        elif S % dsz == 0:
+            spec[lead + 1] = "data"
+        if H % msz == 0:
+            spec[lead + 2] = "model"
+        elif DECODE_SPLITK and S % msz == 0 and spec[lead + 1] is None:
+            spec[lead + 1] = "model"
+        elif hd % msz == 0:
+            spec[lead + 3] = "model"
+        return P(*spec)
+    if "c_kv" in path or "k_rope" in path:
+        lead = nd - 3
+        B, S, D = shape[lead:]
+        if B % dsz == 0:
+            spec[lead] = "data"
+        elif S % dsz == 0:
+            spec[lead + 1] = "data"
+        if DECODE_SPLITK and S % msz == 0 and spec[lead + 1] is None:
+            spec[lead + 1] = "model"  # split-K over latents
+        elif D % msz == 0 and "c_kv" in path:
+            spec[lead + 2] = "model"
+        return P(*spec)
+    if "state" in path:  # [periods?, B, H, N, P]
+        lead = nd - 4
+        B, H, N, Pd = shape[lead:]
+        if B % dsz == 0:
+            spec[lead] = "data"
+        if H % msz == 0:
+            spec[lead + 1] = "model"
+        return P(*spec)
+    if "conv" in path:  # [periods?, B, d_conv-1, ch]
+        lead = nd - 3
+        B, _, ch = shape[lead:]
+        if B % dsz == 0:
+            spec[lead] = "data"
+        if ch % msz == 0:
+            spec[lead + 2] = "model"
+        return P(*spec)
+    return P(*spec)
+
+
+def cache_spec_tree(tree, mesh: Mesh):
+    leaves, treedef = tree_flatten_with_path(tree)
+    specs = [cache_spec(keystr(p), np.shape(l), mesh) for p, l in leaves]
+    return jax.tree.unflatten(treedef, specs)

@@ -1,0 +1,7 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# NOTE: no xla_force_host_platform_device_count here — smoke tests see 1 device.
+# Multi-device tests spawn subprocesses (see test_dryrun.py) or request the
+# device count via their own env before importing jax in a subprocess.

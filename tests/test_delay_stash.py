@@ -1,0 +1,64 @@
+"""Unit + property tests: delay model (Eq. 5) and the weight-stash ring buffers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import delay, stash
+
+
+# ---- Eq. 5 ------------------------------------------------------------------
+
+
+def test_delay_formula_matches_paper():
+    # tau_i = floor((2(P-i)+1)/(2K))
+    assert delay.stage_delays(8, 1) == (7, 6, 5, 4, 3, 2, 1, 0)
+    assert delay.stage_delay(8, 8, 1) == 0  # last stage: no staleness
+    assert delay.stage_delay(1, 8, 1) == 7
+
+
+@given(P=st.integers(1, 64), K=st.integers(1, 8))
+def test_delay_properties(P, K):
+    taus = delay.stage_delays(P, K)
+    assert len(taus) == P
+    assert all(taus[i] >= taus[i + 1] for i in range(P - 1))  # earlier >= later
+    assert taus[-1] == 0 if K >= 1 else True
+    assert all(t == int(np.floor((2 * (P - i) + 1) / (2 * K)))
+               for i, t in zip(range(1, P + 1), taus))
+    # larger update interval K -> smaller delay
+    taus2 = delay.stage_delays(P, K + 1)
+    assert all(a >= b for a, b in zip(taus, taus2))
+
+
+# ---- stash ring buffer -------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(depth=st.integers(1, 6), n_steps=st.integers(1, 20), tau=st.integers(0, 5))
+def test_stash_replays_history(depth, n_steps, tau):
+    if tau >= depth:
+        return  # ring must be at least tau+1 deep
+    tree = {"a": jnp.zeros((3,)), "b": jnp.ones((2, 2))}
+    buf = stash.init_stash(tree, depth)
+    history = [tree]
+    for t in range(n_steps):
+        new = jax.tree.map(lambda x: x + t + 1.0, tree)
+        buf = stash.push(buf, new, jnp.asarray(t + 1))
+        history.append(new)
+    t_now = n_steps
+    want_t = max(t_now - tau, 0)
+    # entries older than the ring depth are overwritten; only valid for recent tau
+    if t_now - tau >= t_now - (depth - 1):
+        got = stash.get(buf, jnp.asarray(t_now), tau)
+        want = history[want_t] if want_t < len(history) else history[-1]
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(g, w)
+
+
+def test_stash_dtype_cast():
+    tree = {"w": jnp.ones((4,), jnp.float32)}
+    buf = stash.init_stash(tree, 2, dtype=jnp.bfloat16)
+    assert jax.tree.leaves(buf)[0].dtype == jnp.bfloat16
+    out = stash.get(buf, jnp.asarray(0), 0, like=tree)
+    assert jax.tree.leaves(out)[0].dtype == jnp.float32

@@ -1,0 +1,155 @@
+"""Distribution tests: sharding rules, multi-device dry-run + SPMD pipeline.
+
+Multi-device cases run in subprocesses so the main pytest process keeps 1 CPU
+device (jax locks the device count at first init).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_sub(code, devices=8, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_sharding_rules_unit():
+    code = """
+    import jax, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_debug_mesh
+    from repro.parallel import sharding as shd
+    mesh = make_debug_mesh(2, 2)
+    # wq [D, H, hd]: D->data, H->model
+    assert shd.spec_for(".params[0]['scan']['b0']['mixer']['wq']", (8, 4, 16), mesh) == P("data", "model", None)
+    # stacked + stash axes stay unsharded
+    assert shd.spec_for("['stash'][0]['scan']['b0']['mixer']['wq']", (3, 2, 8, 4, 16), mesh) == P(None, None, "data", "model", None)
+    # non-divisible head count falls back to replicated on that dim
+    assert shd.spec_for("['wq']", (8, 3, 16), mesh) == P("data", None, None)
+    # embedding: vocab->model, embed->data
+    assert shd.spec_for("['tok_embed']", (100, 8), mesh) == P("model", "data")
+    # norm scales replicated
+    assert shd.spec_for("['pre_norm']['scale']", (8,), mesh) == P(None)
+    # moe experts on model
+    assert shd.spec_for("['moe']['moe_gate']", (4, 8, 16), mesh) == P("model", "data", None)
+    print("rules ok")
+    """
+    assert "rules ok" in _run_sub(code, devices=4)
+
+
+def test_constrain_noop_without_mesh():
+    import jax.numpy as jnp
+
+    from repro.parallel import ax
+
+    x = jnp.ones((4, 4))
+    y = ax.constrain(x, "data", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.slow
+def test_dryrun_lowers_on_debug_mesh():
+    """lower+compile the async train step and serve steps on an 8-device mesh."""
+    code = """
+    import jax, json
+    import jax.numpy as jnp, dataclasses
+    from repro.configs import get_config
+    from repro.launch import specs as S
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.dryrun import lower_train, lower_prefill, lower_decode, analyse
+    mesh = make_debug_mesh(2, 2)
+    cell = S.Cell("qwen2-1.5b", "tiny", 64, 8, "train", 2)
+    cfg = get_config("qwen2-1.5b", reduced=True, dtype=jnp.bfloat16)
+    lowered = lower_train(cfg, cell, mesh, method="ours", n_stages=2)
+    rec, _ = analyse(lowered, "t", 4)
+    assert rec["flops"] > 0
+    cell2 = S.Cell("qwen2-1.5b", "tiny", 64, 4, "prefill", 1)
+    rec2, _ = analyse(lower_prefill(cfg, cell2, mesh), "p", 4)
+    cell3 = S.Cell("qwen2-1.5b", "tiny", 64, 4, "decode", 1)
+    rec3, _ = analyse(lower_decode(cfg, cell3, mesh), "d", 4)
+    print("dryrun ok", rec["flops"] > 0, rec2["flops"] > 0, rec3["flops"] > 0)
+    """
+    assert "dryrun ok True True True" in _run_sub(code, devices=8)
+
+
+@pytest.mark.slow
+def test_spmd_pipeline_trains_on_two_pods():
+    code = """
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.parallel.pipeline_spmd import make_pipeline_step
+    from repro.models import lm
+    from repro.data.synthetic import make_batch_fn
+    cfg = get_config("nanogpt_134m", reduced=True)
+    mesh = make_debug_mesh(2, 2, multi_pod=True)
+    init_fn, step_fn = make_pipeline_step(cfg, mesh, n_microbatches=4, lr=1e-3)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    batch_fn, _ = make_batch_fn(cfg, 4, 4, 32, seed=0)
+    with mesh:
+        state = init_fn(params)
+        step = jax.jit(step_fn)
+        losses = []
+        for i in range(8):
+            state, m = step(state, batch_fn(i))
+            losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert all(jnp.isfinite(jnp.asarray(losses)))
+    print("pp ok", round(losses[0],3), "->", round(losses[-1],3))
+    """
+    assert "pp ok" in _run_sub(code, devices=8)
+
+
+@pytest.mark.slow
+def test_spmd_pipeline_single_pod_matches_engine():
+    """n_pods=1 pipeline (zero delay) ~= engine P=1 'ours' per-microbatch updates."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.core.engine import AsyncTrainer, EngineCfg
+    from repro.launch.mesh import make_debug_mesh
+    from repro.parallel.pipeline_spmd import make_pipeline_step
+    from repro.models import lm
+    from repro.data.synthetic import make_batch_fn
+    cfg = get_config("nanogpt_134m", reduced=True)
+    mesh = jax.make_mesh((1, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    batch_fn, _ = make_batch_fn(cfg, 1, 4, 32, seed=0)
+
+    init_fn, step_fn = make_pipeline_step(cfg, mesh, n_microbatches=1, lr=1e-3)
+    with mesh:
+        s_pp = init_fn(params)
+        step_pp = jax.jit(step_fn)
+        pp_losses = []
+        for i in range(6):
+            s_pp, m = step_pp(s_pp, batch_fn(i))
+            pp_losses.append(float(m["loss"]))
+
+    tr = AsyncTrainer(cfg, EngineCfg(n_stages=1, lr=1e-3, constant_lr=True,
+                                     collect_metrics=False), "ours")
+    s_e = tr.init_from_params(params)
+    step_e = tr.jit_step(donate=False)
+    e_losses = []
+    for i in range(6):
+        s_e, m = step_e(s_e, batch_fn(i))
+        e_losses.append(float(m["loss"]))
+    print("pp:", [round(x, 4) for x in pp_losses])
+    print("en:", [round(x, 4) for x in e_losses])
+    np.testing.assert_allclose(pp_losses, e_losses, rtol=2e-2)
+    print("match ok")
+    """
+    assert "match ok" in _run_sub(code, devices=4)

@@ -1,0 +1,92 @@
+"""Tests for the beyond-paper extensions: bundled corpus, utilization analytics,
+fused rmsnorm+residual kernel, delay-adaptive straggler model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delay, utilization as U
+from repro.data.corpus import CharCorpus
+from repro.ft.loop import adaptive_gamma
+from repro.kernels.rmsnorm_residual import rmsnorm_residual, rmsnorm_residual_ref
+
+
+def test_char_corpus_roundtrip_and_batches():
+    c = CharCorpus()
+    assert 20 < c.vocab_size < 100
+    b = c.batch(3, 2, 4, 32)
+    assert b["tokens"].shape == (2, 4, 32)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][..., 1:]),
+                                  np.asarray(b["labels"][..., :-1]))
+    b2 = c.batch(3, 2, 4, 32)
+    np.testing.assert_array_equal(np.asarray(b["tokens"]), np.asarray(b2["tokens"]))
+    s = c.decode(b["tokens"][0, 0, :12])
+    assert len(s) == 12 and all(ch in c.vocab for ch in s)
+
+
+def test_char_corpus_trains():
+    from repro.configs import get_config
+    from repro.core.engine import AsyncTrainer, EngineCfg
+
+    c = CharCorpus()
+    cfg = get_config("nanogpt_134m", reduced=True, vocab_size=c.vocab_size)
+    tr = AsyncTrainer(cfg, EngineCfg(n_stages=4, lr=2e-3, constant_lr=True), "ours")
+    state = tr.init(jax.random.PRNGKey(0))
+    step = tr.jit_step()
+    losses = []
+    for i in range(25):
+        state, m = step(state, c.batch(i, 1, 8, 32))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]  # real text, learnable
+
+
+def test_utilization_model():
+    g = U.gpipe_timing(P=8, M=4, L=24)
+    a = U.async_timing(P=8, M=4, L=24)
+    assert a.utilization == 1.0 and a.bubble_frac == 0.0
+    assert g.bubble_frac == pytest.approx((8 - 1) / (4 + 8 - 1))
+    assert g.iter_time > a.iter_time
+    # paper Fig. 5 shape: gpipe slowdown grows much faster with stages than async
+    g_slow = U.relative_slowdown(24, 4, M=4, L=24, kind="gpipe")
+    a_slow = U.relative_slowdown(24, 4, M=4, L=24, kind="async")
+    assert g_slow > 2.0 * a_slow
+    assert a_slow < 1.5
+
+
+def test_straggler_effective_delay_and_gamma():
+    taus = delay.stage_delays(4, 1)  # (3, 2, 1, 0)
+    adj = U.straggler_effective_delay(taus, slow_stage=1, slow_factor=2.0)
+    assert adj[1] > taus[1] and adj[0] > taus[0] and adj[3] == taus[3]
+    # delay-adaptive momentum rises toward 0.99 with delay
+    g_small = adaptive_gamma(1, 8)
+    g_big = adaptive_gamma(8, 8)
+    assert 0.9 <= g_small < g_big <= 0.99
+
+
+@pytest.mark.parametrize("shape,d", [((4, 8, 64), 64), ((3, 128), 128), ((7, 96), 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_residual_kernel(shape, d, dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, shape).astype(dtype)
+    h = jax.random.normal(jax.random.fold_in(key, 1), shape).astype(dtype)
+    scale = jax.random.normal(jax.random.fold_in(key, 2), (d,)) * 0.1
+    r, y = rmsnorm_residual(x, h, scale)
+    rr, yr = rmsnorm_residual_ref(x, h, scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(r, np.float32), np.asarray(rr, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rmsnorm_residual_matches_model_layer():
+    """Kernel output equals models.layers.rmsnorm_apply on the summed input."""
+    from repro.models import layers as L
+
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (2, 16, 32))
+    h = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, 32))
+    scale = jax.random.normal(jax.random.fold_in(key, 2), (32,)) * 0.05
+    _, y = rmsnorm_residual(x, h, scale)
+    want = L.rmsnorm_apply({"scale": scale}, x + h)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-5, atol=2e-5)

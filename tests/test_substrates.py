@@ -1,0 +1,211 @@
+"""Data pipeline, checkpointing (exact resume / preemption / elastic), SWARM, optim."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import get_config
+from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.core.swarm import SwarmCfg, SwarmTrainer
+from repro.data.synthetic import SyntheticLM, make_batch_fn
+from repro.ft import loop as ftloop
+from repro.optim import forecast, schedules
+from repro.optim.optimizers import adamw, nadam, sgd_nag
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("nanogpt_134m", reduced=True)
+
+
+# ---- data -------------------------------------------------------------------
+
+
+def test_synthetic_deterministic_and_shaped(cfg):
+    src = SyntheticLM(cfg.vocab_size, seed=3)
+    b1 = src.batch(7, 2, 4, 16)
+    b2 = src.batch(7, 2, 4, 16)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = src.batch(8, 2, 4, 16)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    assert b1["tokens"].shape == (2, 4, 16)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][..., 1:]),
+                                  np.asarray(b1["labels"][..., :-1]))
+    assert 0.0 < src.entropy_floor() < np.log(cfg.vocab_size)
+
+
+def test_bigram_structure_is_learnable(cfg):
+    """Next-token is perm[prev] with prob q: empirical hit rate ~ q + (1-q) p_perm."""
+    src = SyntheticLM(256, q=0.7, seed=0)
+    b = src.batch(0, 1, 64, 128)
+    toks = np.asarray(b["tokens"][0])
+    perm = np.asarray(src.perm)
+    hits = (perm[toks[:, :-1]] == toks[:, 1:]).mean()
+    assert 0.6 < hits < 0.85
+
+
+# ---- checkpoint -------------------------------------------------------------
+
+
+def test_checkpoint_exact_resume(cfg):
+    ecfg = EngineCfg(n_stages=4, lr=1e-3, constant_lr=True)
+    batch_fn, _ = make_batch_fn(cfg, 1, 4, 32, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        tr = AsyncTrainer(cfg, ecfg, "ours")
+        state, _ = ftloop.train_loop(tr, batch_fn, 8, ckpt_dir=d, ckpt_every=4)
+        os.remove(os.path.join(d, "ckpt-8.npz"))
+        tr2 = AsyncTrainer(cfg, ecfg, "ours")
+        state2, res2 = ftloop.train_loop(tr2, batch_fn, 8, ckpt_dir=d)
+        assert res2.resumed_from == 4
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_preemption_recovery(cfg):
+    ecfg = EngineCfg(n_stages=2, lr=1e-3, constant_lr=True)
+    batch_fn, _ = make_batch_fn(cfg, 1, 4, 32, seed=1)
+    with tempfile.TemporaryDirectory() as d:
+        def fault(i):
+            if i == 5:
+                raise ftloop.SimulatedPreemption()
+
+        with pytest.raises(ftloop.SimulatedPreemption):
+            ftloop.train_loop(AsyncTrainer(cfg, ecfg, "ours"), batch_fn, 20,
+                              ckpt_dir=d, ckpt_every=100, fault_hook=fault)
+        assert ckpt.latest(d)[1] == 5
+        _, res = ftloop.train_loop(AsyncTrainer(cfg, ecfg, "ours"), batch_fn, 8,
+                                   ckpt_dir=d)
+        assert res.resumed_from == 5 and len(res.losses) == 3
+
+
+def test_elastic_restage(cfg):
+    """4-stage checkpoint resumes as a 2-stage run (elastic scaling)."""
+    batch_fn, _ = make_batch_fn(cfg, 1, 4, 32, seed=2)
+    e4 = EngineCfg(n_stages=4, lr=1e-3, constant_lr=True)
+    tr4 = AsyncTrainer(cfg, e4, "ours")
+    s4 = tr4.init(jax.random.PRNGKey(0))
+    step4 = tr4.jit_step(donate=False)
+    for i in range(4):
+        s4, _ = step4(s4, batch_fn(i))
+    tr2 = AsyncTrainer(cfg, EngineCfg(n_stages=2, lr=1e-3, constant_lr=True), "ours")
+    s2 = ckpt.restage(s4, tr4, tr2)
+    assert int(s2.step) == int(s4.step)
+    # merged params survive the restage exactly
+    m4 = tr4.merge_params(s4)
+    m2 = tr2.merge_params(s2)
+    for a, b in zip(jax.tree.leaves(m4), jax.tree.leaves(m2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    s2b, m = tr2.jit_step(donate=False)(s2, batch_fn(5))
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_checkpoint_shape_mismatch_rejected(cfg):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.npz")
+        ckpt.save(path, {"a": jnp.ones((3,))}, 0)
+        with pytest.raises(ValueError):
+            ckpt.restore(path, {"a": jnp.ones((4,))})
+
+
+# ---- swarm ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_swarm_stage_dp(cfg, compress):
+    sw = SwarmTrainer(cfg, EngineCfg(n_stages=2, lr=2e-3, constant_lr=True),
+                      "ours_nows", SwarmCfg(replicas=2, sync_every=3, compress=compress))
+    ss = sw.init(jax.random.PRNGKey(0))
+    step = sw.jit_step()
+    f1, _ = make_batch_fn(cfg, 1, 4, 32, seed=0)
+    f2, _ = make_batch_fn(cfg, 1, 4, 32, seed=9)
+    losses = []
+    for i in range(9):
+        b = jax.tree.map(lambda a, c: jnp.stack([a, c]), f1(i), f2(i))
+        ss, m = step(ss, b)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all() and losses[-1] < losses[0]
+    # post-sync: replicas agree (uncompressed only; EF leaves residuals)
+    if not compress:
+        for p in ss.inner.params:
+            for leaf in jax.tree.leaves(p):
+                np.testing.assert_allclose(np.asarray(leaf[0]), np.asarray(leaf[1]),
+                                           atol=1e-6)
+
+
+# ---- optimizers / schedules --------------------------------------------------
+
+
+def test_adamw_matches_closed_form():
+    opt = adamw(lr=0.1, b1=0.9, b2=0.99, eps=0.0, wd=0.0)
+    p = {"w": jnp.ones((3,))}
+    g = {"w": jnp.full((3,), 2.0)}
+    st = opt.init(p)
+    newp, st, _ = opt.update(p, g, st)
+    # first step: m_hat = g, v_hat = g^2 -> update = sign(g) * lr
+    np.testing.assert_allclose(np.asarray(newp["w"]), 1.0 - 0.1, rtol=1e-6)
+
+
+def test_nadam_discount_toggle_changes_step():
+    # NOTE: at step 1 the bias correction (1-mu_prod) exactly cancels the (1-mu_t)
+    # discount, so the variants only diverge from step 2 on.
+    p1 = p2 = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 0.5)}
+    o1 = nadam(lr=0.1, b1=0.99, discount=True)
+    o2 = nadam(lr=0.1, b1=0.99, discount=False)
+    s1, s2 = o1.init(p1), o2.init(p2)
+    for _ in range(3):
+        p1, s1, _ = o1.update(p1, g, s1)
+        p2, s2, _ = o2.update(p2, g, s2)
+    assert not np.allclose(np.asarray(p1["w"]), np.asarray(p2["w"]))
+    # the no-discount variant travels farther (undamped gradient term)
+    assert abs(float(p2["w"][0] - 1)) > abs(float(p1["w"][0] - 1))
+
+
+def test_sgd_nag_lookahead_aux():
+    opt = sgd_nag(lr=0.1, gamma=0.9)
+    p = {"w": jnp.ones((2,))}
+    g = {"w": jnp.full((2,), 1.0)}
+    st = opt.init(p)
+    p1, st, aux = opt.update(p, g, st)
+    look = aux["lookahead"]["w"]
+    np.testing.assert_allclose(np.asarray(look),
+                               np.asarray(p1["w"] + 0.9 * (p1["w"] - p["w"])), rtol=1e-6)
+
+
+def test_lr_discount_schedule():
+    t0 = schedules.lr_discount_factor(4, jnp.asarray(0), 100)
+    tT = schedules.lr_discount_factor(4, jnp.asarray(100), 100)
+    assert float(t0) == pytest.approx(0.25)  # eta / tau at t=0
+    assert float(tT) == pytest.approx(1.0)  # annealed away
+    assert schedules.stage_momentum(1, 8) == pytest.approx(0.9 + 0.09 * 7 / 8)
+    assert schedules.stage_momentum(8, 8) == pytest.approx(0.9)
+
+
+def test_warmup_cosine_shape():
+    s = schedules.warmup_cosine(3e-4, 10, 100, init_lr=1e-7)
+    assert float(s(jnp.asarray(0))) == pytest.approx(1e-7)
+    assert float(s(jnp.asarray(10))) == pytest.approx(3e-4, rel=1e-3)
+    assert float(s(jnp.asarray(100))) == pytest.approx(3e-5, rel=1e-3)
+
+
+def test_polyfft_predicts_linear_trend():
+    params = {"w": jnp.zeros((4,))}
+    hist = 8
+    st = forecast.init_history(params, hist)
+    for t in range(hist):
+        st = forecast.push_history(st, {"w": jnp.full((4,), float(t))}, hist)
+    pred = forecast.polyfft_predict(st, hist, tau=2.0, fft_weight=0.0)
+    # linear sequence 0..7, predict t=9 -> 9
+    np.testing.assert_allclose(np.asarray(pred["w"]), 9.0, atol=1e-3)
+
+
+def test_second_order_correction_direction():
+    g = {"w": jnp.asarray([1.0, -1.0])}
+    now = {"w": jnp.asarray([1.0, 1.0])}
+    stale = {"w": jnp.asarray([0.0, 0.0])}
+    out = forecast.second_order_correct(g, now, stale, lam=1.0)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 0.0])

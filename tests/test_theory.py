@@ -1,0 +1,118 @@
+"""Empirical checks of the paper's theory (Sec. 3 / Appendix A).
+
+Theorem 1 assumes convex, beta-smooth, **bounded-gradient** objectives — we test on
+log-cosh composites (exactly that class), not quadratics (unbounded gradients).
+What is measurable at finite horizons:
+  - small delays (tau <= 1) at the theorem's eta = 1/beta: clean convergence;
+  - any delay with the standard delay-scaled eta = 1/(beta(1+tau)) (the theorem's
+    constants absorb tau; the paper itself does not claim tight constants):
+    monotone-ish decrease, tau-dependent progress;
+  - Fig. 7 / the discount's necessity: without (1-gamma_t) the iterates blow up by
+    orders of magnitude at tau >= 3 — robust across seeds.
+Proposition 1 (look-ahead/delay alignment -> 1 as gamma -> 1) is checked directly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+
+def _logcosh(key, dim):
+    """Convex, beta-smooth, bounded-gradient objective: sum log cosh(A (w - opt))."""
+    a = jax.random.normal(key, (dim, dim)) / np.sqrt(dim)
+    opt = jax.random.normal(jax.random.fold_in(key, 1), (dim,))
+    f = lambda w: jnp.sum(jnp.logaddexp(a @ (w - opt), -(a @ (w - opt))) - np.log(2))
+    beta = float(jnp.linalg.eigvalsh(a.T @ a)[-1])
+    return f, jax.grad(f), beta, opt
+
+
+def _run_eq10(f, g, beta, opt, tau, steps, *, discount=True, offset=0.7,
+              delay_scale=False, gamma_const=None):
+    """Paper Eq. 10/14 with a fixed-delay gradient oracle (ring of look-aheads)."""
+    eta = 1.0 / (beta * (1 + tau)) if delay_scale else 1.0 / beta
+    w = opt + offset
+    w_prev = w
+    look = [w] * (tau + 1)
+    losses, step_norms = [], []
+    for t in range(1, steps + 1):
+        gamma = max((t - 2) / t, 0.0) if gamma_const is None else gamma_const
+        d = gamma * (w - w_prev)
+        grad = g(look[0])
+        coef = (1 - gamma) if discount else 1.0
+        w_new = w + d - eta * coef * grad
+        look = look[1:] + [w_new + gamma * (w_new - w)]
+        step_norms.append(float(jnp.linalg.norm(w_new - w)))
+        w_prev, w = w, w_new
+        losses.append(float(f(w)))
+    return losses, step_norms
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), tau=st.integers(0, 1), dim=st.integers(2, 12))
+def test_theorem1_small_delay_at_theorem_lr(seed, tau, dim):
+    """tau <= 1 at eta = 1/beta: the O(1/t) regime is visible at 600 steps."""
+    f, g, beta, opt = _logcosh(jax.random.PRNGKey(seed), dim)
+    losses, _ = _run_eq10(f, g, beta, opt, tau, 600)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < 2e-2 * losses[0]
+    # decreasing tail, unless already at float-eps convergence
+    assert losses[-1] <= max(losses[len(losses) // 4] * 0.9, 1e-6)
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), tau=st.integers(0, 6), dim=st.integers(2, 12))
+def test_theorem1_any_delay_with_scaled_lr(seed, tau, dim):
+    """Any fixed delay with delay-scaled eta: stable (no blowup) and converging.
+
+    Thm 1's bound permits an O((tau+1)^2 ln t) transient before the 1/t factor
+    wins, so we assert boundedness + net progress, not monotonicity."""
+    f, g, beta, opt = _logcosh(jax.random.PRNGKey(seed), dim)
+    losses, _ = _run_eq10(f, g, beta, opt, tau, 800, delay_scale=True)
+    assert np.isfinite(losses).all()
+    assert max(losses) < 50 * losses[0] + 1.0  # bounded (no divergence)
+    target = 0.05 if tau <= 2 else 0.75
+    assert losses[-1] < target * losses[0] + 1e-9
+
+
+def test_discount_is_necessary_under_delay():
+    """Fig. 7: without the (1-gamma_t) factor, delayed NAG blows up by orders of
+    magnitude; with it, iterates stay bounded and decrease."""
+    for seed in (0, 5):
+        f, g, beta, opt = _logcosh(jax.random.PRNGKey(seed), 8)
+        good, _ = _run_eq10(f, g, beta, opt, tau=5, steps=600, delay_scale=True)
+        bad, _ = _run_eq10(f, g, beta, opt, tau=5, steps=600, delay_scale=True,
+                           discount=False)
+        assert good[-1] < good[0]
+        assert bad[-1] > 50 * good[-1]
+
+
+def test_prop1_alignment_increases_with_gamma():
+    """cos(Delta_t, d_bar_t) approaches 1 as gamma -> 1 (Prop. 1)."""
+    f, g, beta, opt = _logcosh(jax.random.PRNGKey(1), 10)
+    tau = 4
+    eta = 1.0 / beta
+
+    def run(gamma):
+        w = opt + 1.0
+        w_prev = w
+        d_hist = [jnp.zeros((10,))] * (tau + 1)
+        w_hist = [w] * (tau + 1)
+        coss = []
+        for t in range(1, 300):
+            d = gamma * (w - w_prev)
+            u = w_hist[0] + d_hist[0]
+            w_new = w + d - eta * (1 - gamma) * g(u)
+            delta = w_new - w_hist[0]  # Delta_t = w_t - w_{t-tau}
+            dbar = d_hist[0]
+            denom = jnp.linalg.norm(delta) * jnp.linalg.norm(dbar)
+            if denom > 1e-12 and t > 50:
+                coss.append(float(delta @ dbar / denom))
+            d_hist = d_hist[1:] + [gamma * (w_new - w)]
+            w_hist = w_hist[1:] + [w_new]
+            w_prev, w = w, w_new
+        return np.mean(coss) if coss else 0.0
+
+    c_low, c_hi = run(0.5), run(0.99)
+    assert c_hi > 0.9
+    assert c_hi >= c_low - 1e-6
