@@ -1,7 +1,18 @@
-"""Kernel microbenchmarks: pallas (interpret on CPU) vs pure-jnp oracle.
+"""Kernel microbenchmarks + end-to-end engine-tick dispatch benchmark.
+
+Micro rows: pallas (interpret on CPU) vs pure-jnp oracle per kernel. The
+`engine_tick/*` rows time a full AsyncTrainer 'ours' tick with the dispatch
+layer set to 'ref' (unfused tree-map optimizer + unfused XLA model ops) vs the
+dispatched backend (fused flat-buffer nag_update + fused model kernels), so the
+fused-path win is measured end to end rather than asserted.
 
 Wall-times on CPU interpret mode are NOT TPU perf — correctness + call-overhead
-tracking only; the TPU perf story is in the roofline analysis."""
+tracking only; the TPU perf story is in the roofline analysis. On CPU the
+engine-tick comparison therefore defaults to pitting 'ref' against the fused
+path with --engine-backend=ref semantics (same backend, fused vs tree-map
+optimizer), isolating the pass-count effect the flat buffer exists for; pass
+--engine-backend=pallas on TPU for the real fused-kernel tick.
+"""
 from __future__ import annotations
 
 import argparse
@@ -14,6 +25,7 @@ from common import emit_csv
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.nag_update import nag_update
+from repro.kernels.rmsnorm_residual import rmsnorm_residual, rmsnorm_residual_ref
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -27,7 +39,7 @@ def timeit(fn, *a, n=5, **kw):
     return (time.time() - t0) / n * 1e6
 
 
-def main():
+def micro_rows():
     rows = []
     key = jax.random.PRNGKey(0)
 
@@ -65,6 +77,78 @@ def main():
     err = float(jnp.max(jnp.abs(nk(p, m, v2, g) - nr(p, m, v2, g))))
     rows.append(("kernel/nag_update", round(timeit(nk, p, m, v2, g), 1),
                  f"ref_us={timeit(nr, p, m, v2, g):.1f};maxerr={err:.1e}"))
+
+    x = jax.random.normal(key, (8, 128, 256))
+    h = jax.random.normal(jax.random.fold_in(key, 8), (8, 128, 256))
+    sc = jax.random.normal(jax.random.fold_in(key, 9), (256,)) * 0.1
+    rk = jax.jit(lambda *a_: rmsnorm_residual(*a_)[1])
+    rr = jax.jit(lambda *a_: rmsnorm_residual_ref(*a_)[1])
+    err = float(jnp.max(jnp.abs(rk(x, h, sc) - rr(x, h, sc))))
+    rows.append(("kernel/rmsnorm_residual", round(timeit(rk, x, h, sc), 1),
+                 f"ref_us={timeit(rr, x, h, sc):.1f};maxerr={err:.1e}"))
+    return rows
+
+
+def engine_tick_rows(backend: str, ticks: int = 10):
+    """Full engine ticks, dispatched vs unfused: the end-to-end number.
+
+    'ref' row: kernel_backend='ref' + tree-map optimizer (the seed hot path).
+    'dispatched' row: kernel_backend=backend, fused flat-buffer optimizer (+
+    fused model kernels when backend != 'ref').
+    """
+    import os
+
+    from repro.configs import get_config
+    from repro.core.engine import AsyncTrainer, EngineCfg
+    from repro.data.synthetic import make_batch_fn
+    from repro.kernels import dispatch as kdispatch
+
+    # the env var would override BOTH rows' cfg fields and silently turn the
+    # 'unfused' baseline into the dispatched backend — clear it for the measure
+    env_backend = os.environ.pop(kdispatch.ENV_VAR, None)
+
+    def tick_us(kernel_backend, fused):
+        cfg = get_config("nanogpt_134m", reduced=True,
+                         kernel_backend=kernel_backend)
+        ecfg = EngineCfg(n_stages=4, lr=1e-3, constant_lr=True,
+                         collect_metrics=False, kernel_backend=kernel_backend,
+                         fused_optimizer=fused)
+        tr = AsyncTrainer(cfg, ecfg, "ours")
+        state = tr.init(jax.random.PRNGKey(0))
+        step = tr.jit_step(donate=False)
+        batch_fn, _ = make_batch_fn(cfg, 1, 8, 64, seed=0)
+        state, m = step(state, batch_fn(0))  # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        for i in range(ticks):
+            state, m = step(state, batch_fn(i))
+        jax.block_until_ready(m["loss"])
+        return (time.time() - t0) / ticks * 1e6, tr.opt.kind
+
+    try:
+        base_us, base_kind = tick_us("ref", False)
+        disp_us, disp_kind = tick_us(backend, True)
+    finally:
+        if env_backend is not None:
+            os.environ[kdispatch.ENV_VAR] = env_backend
+    return [
+        ("engine_tick/unfused", round(base_us, 1), f"opt={base_kind};backend=ref"),
+        ("engine_tick/dispatched", round(disp_us, 1),
+         f"opt={disp_kind};backend={backend};speedup={base_us / disp_us:.2f}x"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine-backend", default="ref",
+                    help="dispatch backend for the engine-tick rows "
+                         "(ref on CPU; pallas on TPU; interpret = slow, debug only)")
+    ap.add_argument("--ticks", type=int, default=10)
+    ap.add_argument("--skip-engine", action="store_true")
+    args = ap.parse_args()
+    rows = micro_rows()
+    if not args.skip_engine:
+        rows += engine_tick_rows(args.engine_backend, ticks=args.ticks)
     emit_csv(rows)
     return rows
 

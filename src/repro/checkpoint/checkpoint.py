@@ -42,8 +42,7 @@ def save(path: str, state, step: int, metadata: dict | None = None):
     os.replace(tmp, path)
 
 
-def restore(path: str, like):
-    """Restore into the structure of `like` (shapes/dtypes validated)."""
+def _restore_exact(path: str, like):
     with np.load(path, allow_pickle=False) as z:
         meta = json.loads(str(z["__meta__"]))
         leaves, treedef = tree_flatten_with_path(like)
@@ -57,6 +56,61 @@ def restore(path: str, like):
                 raise ValueError(f"shape mismatch at {k}: ckpt {a.shape} vs state {l.shape}")
             out.append(jnp.asarray(a, l.dtype))
     return jax.tree.unflatten(treedef, out), meta
+
+
+def _f32_sds(tree):
+    return jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), tree)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes validated).
+
+    AsyncState checkpoints additionally restore across *optimizer layouts*: a
+    tree-map ('m'/'v') checkpoint loads into a fused flat-buffer state and vice
+    versa (the layouts are interconvertible via flatten_tree/unflatten_like), so
+    a run saved under one kernel backend resumes under another — e.g. CPU-ref
+    debugging a TPU-pallas run's checkpoint, or flipping REPRO_KERNEL_BACKEND.
+    """
+    from repro.optim import optimizers as _opt
+
+    try:
+        return _restore_exact(path, like)
+    except KeyError as e:
+        if not (hasattr(like, "opt") and hasattr(like, "params") and
+                hasattr(like, "_replace")):
+            raise
+        # only a missing optimizer-moment key signals a layout mismatch; any
+        # other missing key is a genuinely incomplete checkpoint — re-raise it
+        # rather than masking it behind an alternate-layout KeyError
+        msg = str(e)
+        if ".opt[" not in msg or not any(
+                t in msg for t in ("['m']", "['v']", "['flat']")):
+            raise
+        # build the alternate-layout template (ShapeDtypeStructs only — no
+        # model-sized allocations) and convert after loading
+        alt_opt = []
+        for o, sp in zip(like.opt, like.params):
+            oo = {k: v for k, v in o.items() if k not in ("m", "v", "flat")}
+            if "flat" in o:  # want fused; ckpt is tree-map
+                oo["m"], oo["v"] = _f32_sds(sp), _f32_sds(sp)
+            else:  # want tree-map; ckpt is fused flat
+                n = int(sum(np.prod(x.shape) for x in jax.tree.leaves(sp)))
+                flat = jax.ShapeDtypeStruct((n,), jnp.float32)
+                oo["flat"] = {"p": flat, "m": flat, "v": flat}
+            alt_opt.append(oo)
+        loaded, meta = _restore_exact(path, like._replace(opt=tuple(alt_opt)))
+        opt = []
+        for o_like, o_got, sp in zip(like.opt, loaded.opt, loaded.params):
+            oo = {k: v for k, v in o_got.items() if k not in ("m", "v", "flat")}
+            if "flat" in o_like:
+                oo["flat"] = {"p": _opt.flatten_tree(sp),
+                              "m": _opt.flatten_tree(o_got["m"]),
+                              "v": _opt.flatten_tree(o_got["v"])}
+            else:
+                oo["m"] = _opt.unflatten_like(o_got["flat"]["m"], _f32_sds(sp))
+                oo["v"] = _opt.unflatten_like(o_got["flat"]["v"], _f32_sds(sp))
+            opt.append(oo)
+        return loaded._replace(opt=tuple(opt)), meta
 
 
 def latest(ckpt_dir: str):
@@ -81,31 +135,57 @@ def save_step(ckpt_dir: str, state, step: int, keep: int = 3, metadata=None):
         os.remove(os.path.join(ckpt_dir, f"ckpt-{s}.npz"))
 
 
+def _stage_moments(state):
+    """Per-stage (m, v) as param-shaped fp32 trees, from either optimizer layout:
+    tree-map ('m'/'v' trees) or fused flat-buffer ('flat' contiguous vectors,
+    unflattened against the stage's param tree). None if neither matches."""
+    from repro.optim import optimizers as _opt
+
+    if all(("m" in o and "v" in o) for o in state.opt):
+        return [o["m"] for o in state.opt], [o["v"] for o in state.opt]
+    if all("flat" in o for o in state.opt):
+        likes = [_f32_sds(sp) for sp in state.params]  # shape templates, no alloc
+        m = [_opt.unflatten_like(o["flat"]["m"], lk) for o, lk in zip(state.opt, likes)]
+        v = [_opt.unflatten_like(o["flat"]["v"], lk) for o, lk in zip(state.opt, likes)]
+        return m, v
+    return None
+
+
 def restage(state, trainer_old, trainer_new):
     """Elastic stage-count change: old AsyncState -> new trainer's AsyncState.
 
     Params and optimizer moment buffers merge to monolithic and re-split under the
-    new stage partition. Stash ring buffers re-warm from the current weights.
+    new stage partition (fused flat-buffer optimizer states are unflattened to
+    param-shaped trees first, and re-flattened for the new trainer when it is
+    also fused). Stash ring buffers re-warm from the current weights.
     """
+    from repro.optim import optimizers as _opt
+
     merged_params = trainer_old.merge_params(state)
     new_state = trainer_new.init_from_params(merged_params)
 
     # migrate adam moments where structurally possible (same leaf paths)
-    def merge_stage_trees(trees, key_):
+    def merge_stage_trees(stage_trees):
         class _Holder:
-            params = tuple(t[key_] for t in trees)
+            params = tuple(stage_trees)
         return trainer_old.merge_params(_Holder)
 
     try:
-        if all(("m" in o and "v" in o) for o in state.opt):
-            m_merged = merge_stage_trees(list(state.opt), "m")
-            v_merged = merge_stage_trees(list(state.opt), "v")
-            new_stages, _ = _lm.split_stages(m_merged, trainer_new.model_cfg, trainer_new.P)
+        moments = _stage_moments(state)
+        if moments is not None:
+            m_merged = merge_stage_trees(moments[0])
+            v_merged = merge_stage_trees(moments[1])
+            new_m, _ = _lm.split_stages(m_merged, trainer_new.model_cfg, trainer_new.P)
             new_v, _ = _lm.split_stages(v_merged, trainer_new.model_cfg, trainer_new.P)
             opt = []
             for i, o in enumerate(new_state.opt):
                 oo = dict(o)
-                oo["m"], oo["v"] = new_stages[i], new_v[i]
+                if "flat" in oo:
+                    oo["flat"] = dict(oo["flat"])
+                    oo["flat"]["m"] = _opt.flatten_tree(new_m[i])
+                    oo["flat"]["v"] = _opt.flatten_tree(new_v[i])
+                else:
+                    oo["m"], oo["v"] = new_m[i], new_v[i]
                 oo["count"] = state.opt[0]["count"]
                 if "mu_prod" in oo:
                     oo["mu_prod"] = state.opt[0].get("mu_prod", oo["mu_prod"])

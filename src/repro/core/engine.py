@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.core import delay as delay_mod
 from repro.core import staged, stash
 from repro.core.methods import Method, get_method
+from repro.kernels import dispatch as kdispatch
 from repro.models import lm
 from repro.models.layers import ModelCfg
 from repro.optim import forecast, optimizers, schedules
@@ -45,6 +46,12 @@ class EngineCfg:
     collect_metrics: bool = True
     stash_dtype: Any = None  # e.g. jnp.bfloat16 to halve stash memory
     straggler_delays: Optional[tuple] = None  # override tau_i (straggler injection)
+    # kernel routing: backend for the fused optimizer tick (env var
+    # REPRO_KERNEL_BACKEND overrides; see kernels/dispatch.py). None = platform.
+    kernel_backend: Optional[str] = None
+    # None = auto: fuse when the backend is pallas/interpret and the method's
+    # optimizer has a fused flat-buffer implementation (nadam family).
+    fused_optimizer: Optional[bool] = None
 
 
 class AsyncTrainer:
@@ -66,7 +73,16 @@ class AsyncTrainer:
             self.taus = delay_mod.stage_delays(P, ecfg.update_interval)
         kw = dict(self.method.opt_kwargs())
         kw.setdefault("wd", ecfg.weight_decay)
-        self.opt = optimizers.make_optimizer(self.method.optimizer, lr=1.0, **kw)
+        # kernel routing: with a pallas/interpret backend, the per-stage optimizer
+        # tick runs as ONE fused nag_update pass over contiguous flat buffers
+        self.kernel_backend = kdispatch.resolve_backend(ecfg.kernel_backend)
+        fused = ecfg.fused_optimizer
+        if fused is None:
+            fused = (self.kernel_backend != "ref"
+                     and self.method.optimizer in optimizers.FUSABLE)
+        self.opt = optimizers.make_optimizer(
+            self.method.optimizer, lr=1.0, fused=fused,
+            kernel_backend=self.kernel_backend, **kw)
         # lr folded via lr_scale so schedules stay outside the optimizer
         if ecfg.constant_lr:
             self.lr_sched = schedules.constant(ecfg.lr)

@@ -1,0 +1,270 @@
+"""Kernel dispatch: one registry routing each hot-path op to a backend.
+
+Every fused Pallas kernel in this package is registered here next to its pure-XLA
+oracle (kernels/ref.py), and model/optimizer code calls ``dispatch(op, ...)``
+instead of hard-wiring an implementation. Backends:
+
+  - ``pallas``:    compiled Pallas kernel (TPU)
+  - ``interpret``: the same kernel under the Pallas interpreter (CPU-correct;
+                   used by CI and the differential parity harness)
+  - ``ref``:       the pure-jnp oracle (unfused XLA; the numerics ground truth)
+
+Selection precedence (first hit wins):
+  1. the ``REPRO_KERNEL_BACKEND`` environment variable
+  2. the ``kernel_backend`` field on ``ModelCfg`` / ``EngineCfg`` (passed in as
+     ``cfg_backend``)
+  3. platform default: ``pallas`` on TPU, ``ref`` everywhere else
+
+Resolution is plain Python (env + static config), so the chosen branch is fixed
+at trace time and jit caches per backend.
+
+Autodiff: Pallas kernels define no VJP, so training call sites use
+``dispatch_grad`` — forward through the selected backend, backward through the
+VJP of the *reference* implementation linearized at the same inputs (exact
+because the kernels are numerically faithful re-implementations of the refs;
+remat of the ref forward inside the backward is the standard cost). Dedicated
+backward kernels are future work (DESIGN.md §8).
+
+Each registry entry also carries parity cases — input builders spanning
+tile-aligned, ragged, and multi-dtype shapes — which tests/test_kernel_parity.py
+auto-discovers, so adding a kernel here buys its differential test for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.nag_update import nag_update as _nag_update
+from repro.kernels.rmsnorm_residual import rmsnorm_residual as _rmsnorm_residual
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+BACKENDS = ("pallas", "interpret", "ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParityCase:
+    """One (inputs, kwargs) builder for the differential parity harness.
+
+    ``make(key, dtype)`` returns ``(args, kwargs)``; ``dtype`` is applied to the
+    op's activation/gradient-like inputs (state stays fp32, as in training).
+    """
+
+    label: str
+    make: Callable[[jax.Array, Any], Tuple[tuple, dict]]
+    tol_f32: float = 2e-5
+    tol_bf16: float = 2e-2
+
+    def tol(self, dtype) -> float:
+        return self.tol_bf16 if dtype == jnp.bfloat16 else self.tol_f32
+
+
+@dataclasses.dataclass(frozen=True)
+class OpImpl:
+    name: str
+    pallas: Callable  # must accept interpret= kwarg
+    ref: Callable  # same signature minus interpret/blocking kwargs
+    cases: Tuple[ParityCase, ...] = ()
+
+
+_REGISTRY: Dict[str, OpImpl] = {}
+
+
+def register(name: str, *, pallas: Callable, ref: Callable,
+             cases: Tuple[ParityCase, ...] = ()) -> None:
+    if name in _REGISTRY:
+        raise ValueError(f"kernel op {name!r} already registered")
+    _REGISTRY[name] = OpImpl(name, pallas, ref, cases)
+
+
+def registered_ops():
+    return tuple(sorted(_REGISTRY))
+
+
+def get_op(name: str) -> OpImpl:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown kernel op {name!r}; have {registered_ops()}")
+    return _REGISTRY[name]
+
+
+def parity_cases(name: str) -> Tuple[ParityCase, ...]:
+    return get_op(name).cases
+
+
+def _validate(backend: str, source: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"invalid kernel backend {backend!r} (from {source}); expected one of {BACKENDS}")
+    return backend
+
+
+def resolve_backend(cfg_backend: Optional[str] = None) -> str:
+    """env var > cfg field > platform default (pallas on TPU, ref elsewhere)."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return _validate(env, f"${ENV_VAR}")
+    if cfg_backend is not None:
+        return _validate(cfg_backend, "cfg.kernel_backend")
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def dispatch(name: str, *args, backend: Optional[str] = None, **kwargs):
+    """Run op `name` on the selected backend (no autodiff support for pallas)."""
+    op = get_op(name)
+    be = resolve_backend() if backend is None else _validate(backend, "backend=")
+    if be == "ref":
+        return op.ref(*args, **kwargs)
+    return op.pallas(*args, interpret=(be == "interpret"), **kwargs)
+
+
+def dispatch_grad(name: str, *args, backend: Optional[str] = None, **kwargs):
+    """Differentiable dispatch: forward = selected backend, backward = ref VJP.
+
+    With backend 'ref' this is just the reference op (native autodiff). The
+    kwargs must be static (they select the kernel variant, not traced values).
+    """
+    op = get_op(name)
+    be = resolve_backend() if backend is None else _validate(backend, "backend=")
+    if be == "ref":
+        return op.ref(*args, **kwargs)
+    fwd_fn = functools.partial(op.pallas, interpret=(be == "interpret"), **kwargs)
+    ref_fn = functools.partial(op.ref, **kwargs)
+
+    @jax.custom_vjp
+    def f(*xs):
+        return fwd_fn(*xs)
+
+    def f_fwd(*xs):
+        return fwd_fn(*xs), xs
+
+    def f_bwd(xs, ct):
+        _, vjp = jax.vjp(lambda *ys: ref_fn(*ys), *xs)
+        return vjp(ct)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(*args)
+
+
+# ---------------------------------------------------------------------------
+# Registrations (ref wrappers normalize signatures/dtypes to the kernel's)
+# ---------------------------------------------------------------------------
+
+
+def _attention_ref(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+                   block_q=128, block_k=128):
+    del block_q, block_k  # tiling knobs are kernel-only
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale)
+
+
+def _ssd_ref(x, dt, A, B_, C_, *, chunk=128):
+    # The chunked-parallel jnp form, not the sequential ssd_ref recurrence: this
+    # function is also the training BACKWARD of the fused path (dispatch_grad),
+    # and a per-timestep lax.scan VJP would serialize over all S steps. The
+    # chunked form is itself validated against the sequential oracle in
+    # tests/test_kernels.py. Late import: layers imports this module.
+    from repro.models.layers import _ssd_chunked
+
+    y, h = _ssd_chunked(x, B_, C_, dt, A, min(chunk, x.shape[1]))
+    return y.astype(x.dtype), h  # kernel returns y in x.dtype, h_final fp32
+
+
+def _nag_ref(p, m, v, g, *, lr, b1=0.99, b2=0.95, eps=1e-8, wd=0.01, mu_t, mu_next,
+             mu_prod, mu_prod_next, bc2, discount=True, block=1024):
+    del block
+    return _ref.nag_update_ref(p, m, v, g, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
+                               mu_t=mu_t, mu_next=mu_next, mu_prod=mu_prod,
+                               mu_prod_next=mu_prod_next, bc2=bc2, discount=discount)
+
+
+def _rmsnorm_residual_ref(x, h, scale, *, eps=1e-6, block_rows=8):
+    del block_rows
+    from repro.kernels.rmsnorm_residual import rmsnorm_residual_ref
+    return rmsnorm_residual_ref(x, h, scale, eps)
+
+
+def _attn_case(B, H, Hkv, S, d, blk, **kw):
+    def make(key, dtype):
+        q = jax.random.normal(key, (B, H, S, d)).astype(dtype)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, S, d)).astype(dtype)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, S, d)).astype(dtype)
+        return (q, k, v), dict(block_q=blk, block_k=blk, **kw)
+    return make
+
+
+def _ssd_case(b, S, H, P, G, N, chunk):
+    def make(key, dtype):
+        x = jax.random.normal(key, (b, S, H, P)).astype(dtype)
+        dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (b, S, H))) * 0.1
+        A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,)) * 0.3)
+        B_ = (jax.random.normal(jax.random.fold_in(key, 3), (b, S, G, N)) * 0.3).astype(dtype)
+        C_ = (jax.random.normal(jax.random.fold_in(key, 4), (b, S, G, N)) * 0.3).astype(dtype)
+        return (x, dt, A, B_, C_), dict(chunk=chunk)
+    return make
+
+
+def _nag_case(n, block):
+    def make(key, dtype):
+        p = jax.random.normal(key, (n,))
+        m = jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 0.1
+        v = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (n,))) * 0.01
+        g = jax.random.normal(jax.random.fold_in(key, 3), (n,)).astype(dtype)  # bf16 grads
+        kw = dict(lr=1e-3, mu_t=0.95, mu_next=0.96, mu_prod=0.9,
+                  mu_prod_next=0.87, bc2=0.05, block=block)
+        return (p, m, v, g), kw
+    return make
+
+
+def _rms_case(shape, block_rows=8):
+    def make(key, dtype):
+        x = jax.random.normal(key, shape).astype(dtype)
+        h = jax.random.normal(jax.random.fold_in(key, 1), shape).astype(dtype)
+        scale = jax.random.normal(jax.random.fold_in(key, 2), (shape[-1],)) * 0.1
+        return (x, h, scale), dict(block_rows=block_rows)
+    return make
+
+
+register(
+    "flash_attention", pallas=_flash_attention, ref=_attention_ref,
+    cases=(
+        ParityCase("gqa_aligned", _attn_case(2, 4, 2, 128, 32, 64)),
+        ParityCase("mqa_ragged_seq", _attn_case(1, 4, 1, 96, 32, 64)),     # S % blk != 0
+        ParityCase("tiny_unaligned", _attn_case(1, 2, 2, 33, 16, 32)),     # non-tile rows
+        ParityCase("window_softcap", _attn_case(2, 2, 2, 64, 32, 32,
+                                                window=16, softcap=30.0)),
+        ParityCase("noncausal", _attn_case(1, 2, 2, 64, 32, 32, causal=False)),
+    ))
+
+register(
+    "ssd_scan", pallas=_ssd_scan, ref=_ssd_ref,
+    cases=(
+        ParityCase("grouped_chunked", _ssd_case(2, 64, 4, 16, 2, 8, chunk=32),
+                   tol_f32=5e-4, tol_bf16=4e-2),
+        ParityCase("single_group", _ssd_case(1, 48, 2, 8, 1, 8, chunk=16),
+                   tol_f32=5e-4, tol_bf16=4e-2),
+        ParityCase("ragged_one_chunk", _ssd_case(1, 30, 2, 8, 1, 4, chunk=30),
+                   tol_f32=5e-4, tol_bf16=4e-2),
+    ))
+
+register(
+    "nag_update", pallas=_nag_update, ref=_nag_ref,
+    cases=(
+        ParityCase("aligned", _nag_case(4096, 1024), tol_f32=2e-6),
+        ParityCase("ragged", _nag_case(5000, 1024), tol_f32=2e-6),
+        ParityCase("tiny_subblock", _nag_case(7, 8), tol_f32=2e-6),
+    ))
+
+register(
+    "rmsnorm_residual", pallas=_rmsnorm_residual, ref=_rmsnorm_residual_ref,
+    cases=(
+        ParityCase("batched_3d", _rms_case((2, 16, 64))),
+        ParityCase("ragged_rows", _rms_case((3, 5, 48))),   # rows % block_rows != 0
+        ParityCase("flat_2d", _rms_case((7, 96))),
+    ))

@@ -1,4 +1,8 @@
-"""Jit'd public wrappers for the Pallas kernels (+ dispatch into model code)."""
+"""Jit'd public wrappers for the Pallas kernels.
+
+Model/optimizer code routes through kernels/dispatch.py (backend registry);
+these wrappers are the standalone jit entry points for notebooks/benchmarks.
+"""
 from __future__ import annotations
 
 import functools

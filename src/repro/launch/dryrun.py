@@ -177,6 +177,8 @@ def analyse(lowered, label: str, n_chips: int):
     dt = time.time() - t0
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 returns [dict] per module
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     # donated outputs alias their inputs: true live bytes = args + temps + (out - aliased)

@@ -4,19 +4,27 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: axis_types= (Auto) only where supported."""
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        # older jax (< 0.5): no AxisType / axis_types kwarg; axes are Auto already
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (16,16)=('data','model') — 256 chips.
     Multi-pod:  (2,16,16)=('pod','data','model') — 512 chips, 'pod' carries the
     pipeline stages over the slow inter-pod links (DESIGN.md §5)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, multi_pod: bool = False):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     shape = ((2, n_data, n_model) if multi_pod else (n_data, n_model))
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

@@ -89,8 +89,9 @@ def init_lm(key, cfg: ModelCfg):
 
 
 def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=None,
-                enc_out=None, cache=None, shared=None):
-    """Returns (x, aux, new_cache)."""
+                enc_out=None, cache=None, shared=None, iota_positions=False):
+    """Returns (x, aux, new_cache). iota_positions: static flag — True when
+    `positions` is a generated arange (enables position-free fused attention)."""
     x = ax.constrain(x, ax.batch_axes(), None, None)
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
@@ -99,7 +100,8 @@ def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=No
         h = L.rmsnorm_apply(shared["pre_norm"], x, cfg.norm_eps)
         h, new_mix_cache = L.attention_apply(
             shared["mixer"], h, cfg, sblk, positions=positions, prefix_len=prefix_len,
-            cache=None if cache is None else cache.get("mixer"))
+            cache=None if cache is None else cache.get("mixer"),
+            iota_positions=iota_positions)
         h = h + L.mlp_apply(shared["mlp"], L.rmsnorm_apply(shared["mlp_norm"], h, cfg.norm_eps),
                             "swiglu", cfg.dtype)
         h = jnp.einsum("bsd,de->bse", h, bp["shared_out_proj"].astype(cfg.dtype))
@@ -108,23 +110,34 @@ def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=No
             new_cache = {"mixer": new_mix_cache}
         return x, aux, new_cache
 
+    mix_h = None  # mixer output, residual-add deferred so it can fuse with mlp_norm
     if blk.mixer != "none":
         h = L.rmsnorm_apply(bp["pre_norm"], x, cfg.norm_eps)
         if blk.mixer == "attn":
             fn = L.mla_apply if cfg.mla else L.attention_apply
             h, new_mix_cache = fn(bp["mixer"], h, cfg, blk, positions=positions,
                                   prefix_len=prefix_len, enc_out=enc_out,
-                                  cache=None if cache is None else cache.get("mixer"))
+                                  cache=None if cache is None else cache.get("mixer"),
+                                  iota_positions=iota_positions)
         elif blk.mixer == "ssm":
             h, new_mix_cache = L.ssm_apply(bp["mixer"], h, cfg,
                                            cache=None if cache is None else cache.get("mixer"))
         if cfg.use_post_norm:
             h = L.rmsnorm_apply(bp["post_mixer_norm"], h, cfg.norm_eps)
-        x = x + h
+        mix_h = h
     else:
         new_mix_cache = None
 
     if blk.mlp != "none":
+        S = x.shape[1]
+        ck = cfg.mlp_s_chunk
+        chunked = ck and S > ck and S % ck == 0
+        # mid-block boundary `x += mix_h; h = rmsnorm(x)` as ONE fused kernel pass
+        fuse = (mix_h is not None and not cfg.use_post_norm and not chunked
+                and blk.mlp != "moe" and L.kernel_backend(cfg) != "ref")
+        if mix_h is not None and not fuse:
+            x = x + mix_h
+
         def channel_mix(xc):
             h = L.rmsnorm_apply(bp["mlp_norm"], xc, cfg.norm_eps)
             if blk.mlp == "moe":
@@ -135,9 +148,11 @@ def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=No
                 h = L.rmsnorm_apply(bp["post_mlp_norm"], h, cfg.norm_eps)
             return h, a
 
-        S = x.shape[1]
-        ck = cfg.mlp_s_chunk
-        if ck and S > ck and S % ck == 0:
+        if fuse:
+            x, hn = L.fused_rmsnorm_residual(bp["mlp_norm"], x, mix_h, cfg)
+            h = L.mlp_apply(bp["mlp"], hn, blk.mlp, cfg.dtype)
+            a = jnp.zeros((), jnp.float32)
+        elif chunked:
             # bound the channel-mix working set (MoE dispatch buffers scale with
             # tokens): scan over sequence chunks; capacity becomes per-chunk.
             xs = x.reshape(x.shape[0], S // ck, ck, -1).swapaxes(0, 1)
@@ -149,6 +164,8 @@ def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=No
             h, a = channel_mix(x)
         aux = aux + a
         x = x + h
+    elif mix_h is not None:
+        x = x + mix_h
 
     if cache is not None:
         new_cache = {"mixer": new_mix_cache}
@@ -156,7 +173,8 @@ def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=No
 
 
 def _scan_blocks(scan_params, pattern, x, cfg, *, positions, prefix_len=None,
-                 enc_out=None, caches=None, shared=None, j0=0, j1=None):
+                 enc_out=None, caches=None, shared=None, j0=0, j1=None,
+                 iota_positions=False):
     """Run periods [j0, j1) of the scanned pattern. caches: stacked pytree or None."""
     n = (j1 if j1 is not None else jax.tree.leaves(scan_params)[0].shape[0]) - j0
     if n <= 0:
@@ -173,7 +191,7 @@ def _scan_blocks(scan_params, pattern, x, cfg, *, positions, prefix_len=None,
             xx, a, nc = block_apply(bp[f"b{j}"], blk, xx, cfg, positions=positions,
                                     prefix_len=prefix_len, enc_out=enc_out,
                                     cache=None if cc is None else cc[f"b{j}"],
-                                    shared=shared)
+                                    shared=shared, iota_positions=iota_positions)
             aux = aux + a
             if new_cc is not None:
                 new_cc[f"b{j}"] = nc
@@ -364,7 +382,8 @@ def run_stage_ops(sp, ops, carry, batch, cfg: ModelCfg, *, caches=None):
             B, S = x.shape[0], x.shape[1]
             pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
             x, a, _ = _scan_blocks(sp["enc_scan"], cfg.enc_pattern, x, cfg,
-                                   positions=pos, j0=o[1], j1=o[2])
+                                   positions=pos, j0=o[1], j1=o[2],
+                                   iota_positions=True)
             aux = aux + a
         elif o[0] == "enc_out":
             enc = L.rmsnorm_apply(sp["enc_final_norm"], x, cfg.norm_eps)
@@ -374,6 +393,8 @@ def run_stage_ops(sp, ops, carry, batch, cfg: ModelCfg, *, caches=None):
         elif o[0] in ("prelude", "blocks"):
             B, S = x.shape[0], x.shape[1]
             positions = batch.get("positions")
+            iota = positions is None  # static: batch-supplied positions may be
+            # packed/reset sequences, which the fused attention path must not see
             if positions is None:
                 positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
             prefix_len = batch.get("prefix_len")
@@ -382,7 +403,8 @@ def run_stage_ops(sp, ops, carry, batch, cfg: ModelCfg, *, caches=None):
                 cc = None if caches is None else caches["prelude"][f"p{o[1]}"]
                 x, a, nc = block_apply(sp["prelude"][f"p{o[1]}"], blk, x, cfg,
                                        positions=positions, prefix_len=prefix_len,
-                                       enc_out=enc, cache=cc, shared=sp.get("shared"))
+                                       enc_out=enc, cache=cc, shared=sp.get("shared"),
+                                       iota_positions=iota)
                 if caches is not None:
                     caches["prelude"] = dict(caches["prelude"])
                     caches["prelude"][f"p{o[1]}"] = nc
@@ -391,7 +413,7 @@ def run_stage_ops(sp, ops, carry, batch, cfg: ModelCfg, *, caches=None):
                 x, a, cs = _scan_blocks(sp["scan"], cfg.pattern, x, cfg,
                                         positions=positions, prefix_len=prefix_len,
                                         enc_out=enc, caches=cs, shared=sp.get("shared"),
-                                        j0=o[1], j1=o[2])
+                                        j0=o[1], j1=o[2], iota_positions=iota)
                 if caches is not None:
                     caches["scan"] = cs
             aux = aux + a

@@ -11,6 +11,12 @@ Uniform interface (per-stage application by the async engine):
   - 'lookahead': the point the *next* forward should be evaluated at (Eq. 10), or None
   - 'step_dir':  the (undamped) per-step direction estimate, used by XPipe / PipeMare
   - 'last_step': w_{t+1} - w_t (for Prop.-1 alignment metrics)
+
+`nadam_flat` is the kernel-fused variant of `nadam` (same math, same interface):
+per-stage params/m/v live in contiguous fp32 flat buffers built once at `init`,
+and the whole update is ONE dispatched `nag_update` kernel pass per stage per
+tick instead of a tree-map of per-leaf XLA kernels — the optimizer tick is pure
+HBM bandwidth at scale, so pass count is the cost model (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -19,6 +25,8 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import dispatch as kdispatch
 
 PyTree = Any
 
@@ -117,6 +125,85 @@ def nadam(lr, b1=0.99, b2=0.95, eps=1e-8, wd=0.01, psi=0.004, discount=True):
 
 
 # ---------------------------------------------------------------------------
+# Flat-buffer fused NAdam: contiguous fp32 p/m/v + one nag_update kernel pass.
+# ---------------------------------------------------------------------------
+
+
+def flatten_tree(tree) -> jnp.ndarray:
+    """Concatenate all leaves into one contiguous fp32 vector (fixed leaf order)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+
+def unflatten_like(flat, like):
+    """Slice a flat vector back into the shapes/dtypes of `like` (layout inverse).
+
+    `like` leaves only need .shape/.dtype (arrays or ShapeDtypeStructs).
+    """
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for l in leaves:
+        n = 1
+        for d in l.shape:
+            n *= int(d)
+        out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def nadam_flat(lr, b1=0.99, b2=0.95, eps=1e-8, wd=0.01, psi=0.004, discount=True,
+               backend="pallas", block=1024):
+    """Kernel-fused `nadam`: identical math, flat fp32 buffers, one pass per tick.
+
+    State = {'flat': {'p','m','v'}, 'count', 'mu_prod'}. The flat 'p' is the
+    master copy (params are fp32 in this repo, so it's bit-identical to the tree
+    params); `update` flattens only the incoming grads, runs the dispatched
+    `nag_update` kernel once over the stage's whole parameter vector, and
+    unflattens the result back into the caller's pytree layout.
+    """
+
+    def _mu(c, base):
+        return base * (1.0 - 0.5 * 0.96 ** (c.astype(jnp.float32) * psi))
+
+    def init(params):
+        flat = flatten_tree(params)
+        return {"flat": {"p": flat, "m": jnp.zeros_like(flat), "v": jnp.zeros_like(flat)},
+                "count": jnp.zeros((), jnp.int32),
+                "mu_prod": jnp.ones((), jnp.float32)}
+
+    def update(params, grads, state, *, lr_scale=1.0, mom=None, t=None):
+        c = state["count"] + 1
+        base = b1 if mom is None else mom
+        mu_t = _mu(c, base)
+        mu_next = _mu(c + 1, base)
+        mu_prod = state["mu_prod"] * mu_t
+        mu_prod_next = mu_prod * mu_next
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        eta = lr * lr_scale
+        pf, mf, vf = state["flat"]["p"], state["flat"]["m"], state["flat"]["v"]
+        if pf.size == 0:  # degenerate empty stage
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            aux = {"lookahead": None, "step_dir": zeros, "last_step": zeros}
+            return params, {"flat": dict(state["flat"]), "count": c, "mu_prod": mu_prod}, aux
+        gf = flatten_tree(grads)
+        p2, m2, v2 = kdispatch.dispatch(
+            "nag_update", pf, mf, vf, gf, backend=backend,
+            lr=eta, b1=base, b2=b2, eps=eps, wd=wd, mu_t=mu_t, mu_next=mu_next,
+            mu_prod=mu_prod, mu_prod_next=mu_prod_next, bc2=bc2,
+            discount=discount, block=block)
+        new_params = unflatten_like(p2, params)
+        step_dir = unflatten_like(p2 - pf, jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params))
+        aux = {"lookahead": None, "step_dir": step_dir, "last_step": step_dir}
+        return new_params, {"flat": {"p": p2, "m": m2, "v": v2},
+                            "count": c, "mu_prod": mu_prod}, aux
+
+    return Optimizer(init, update, "nadam_flat")
+
+
+# ---------------------------------------------------------------------------
 # SGD-NAG, exact Eq. (10) form — used for the convergence-theory tests and the
 # 'ours_theory' engine mode (gradients evaluated at the *stashed look-ahead*).
 # ---------------------------------------------------------------------------
@@ -164,7 +251,16 @@ def sgd_nag(lr, gamma=None, discount=True, wd=0.0):
     return Optimizer(init, update, "sgd_nag")
 
 
-def make_optimizer(kind: str, **kw) -> Optimizer:
+FUSABLE = {"nadam": nadam_flat,
+           "nadam_nodiscount": lambda **kw: nadam_flat(discount=False, **kw)}
+
+
+def make_optimizer(kind: str, *, fused: bool = False, kernel_backend: str = "pallas",
+                   **kw) -> Optimizer:
+    """`fused=True` routes fusable kinds through the flat-buffer kernel path
+    (backend per `kernel_backend`); non-fusable kinds ignore the flag."""
+    if fused and kind in FUSABLE:
+        return FUSABLE[kind](backend=kernel_backend, **kw)
     if kind == "adamw":
         return adamw(**kw)
     if kind == "nadam":

@@ -7,10 +7,31 @@ an identity — model code can call it unconditionally.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
+
 import jax
 from jax.sharding import PartitionSpec as P
 
 from jax._src.mesh import thread_resources
+
+_MANUAL = threading.local()
+
+
+@contextlib.contextmanager
+def manual_axes(*names):
+    """Declare axes manual for the enclosed trace (shard_map bodies).
+
+    Jax versions with `get_abstract_mesh` detect this automatically; on older
+    jax the lowering-time check fires *after* `constrain` returns, so partial
+    shard_map callers declare their manual axes explicitly.
+    """
+    prev = getattr(_MANUAL, "names", frozenset())
+    _MANUAL.names = frozenset(prev) | frozenset(names)
+    try:
+        yield
+    finally:
+        _MANUAL.names = prev
 
 
 def _ambient_mesh():
@@ -22,6 +43,8 @@ def _usable_axes(mesh):
     """Axis name -> size, excluding axes that are Manual in the current trace
     (inside a shard_map region constraints may only name auto axes)."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name in getattr(_MANUAL, "names", ()):
+        sizes.pop(name, None)
     try:
         am = jax.sharding.get_abstract_mesh()
         if am is not None and not am.empty:

@@ -1,15 +1,25 @@
 """Cross-pod SPMD 1F1B async pipeline (multi-pod mesh: 'pod' = pipeline axis).
 
 This is the paper's deployment setting made SPMD: pipeline stages live on separate
-pods joined by slow links; activations/errors cross pods via `jax.lax.ppermute`;
-each pod updates its stage weights *locally per microbatch* (K=1 async, no global
-barrier), with PipeDream weight stashing for correct backprop — the engine's
-semantics realized as a genuinely pipelined SPMD program.
+pods joined by slow links; each pod updates its stage weights *locally per
+microbatch* (K=1 async, no global barrier), with PipeDream weight stashing for
+correct backprop — the engine's semantics realized as a genuinely pipelined SPMD
+program.
 
-Structure: `jax.shard_map(axis_names={'pod'})` is manual over 'pod' only;
-'data'/'model' stay auto so GSPMD shards each pod's compute exactly like the
-single-pod program (FSDP x TP). Every pod runs identical code; `lax.cond` on the
-pod index activates the head/loss phase and skips fill/drain bubbles at runtime.
+Structure: pure-GSPMD collective pipelining — every per-pod tree carries a
+leading [n_pods] axis sharded on 'pod'; the per-slot compute is `jax.vmap` over
+that axis (so GSPMD places each pod's compute on its pod's devices, with
+'data'/'model' auto-sharded exactly like the single-pod program, FSDP x TP), and
+the activation/error wires are `jnp.roll` shifts of the pod axis, which XLA
+lowers to collective-permutes over the slow inter-pod links. This formulation
+avoids partial-manual shard_map entirely — XLA's manual-subgroup partitioner
+hard-CHECKs on permute collectives on several released versions — at two costs:
+fill/drain bubble slots compute on zero wires (masked out; the bubble fraction
+is the usual (P-1)/(M+2P-2)), and `lax.cond`s with pod-varying predicates lower
+to selects, so the head phase (final norm + vocab projection + xent) runs on
+every pod each slot instead of only the last (~(P-1)x redundant head FLOPs;
+hoisting the head out of the vmapped VJP via a two-stage vjp is the known
+follow-up if the head ever dominates a multi-pod profile).
 
 Stage 0 (embedding + prelude + whisper encoder) runs OUTSIDE the manual region
 under plain pjit, vectorized over all M microbatches, and its parameters update
@@ -36,6 +46,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import lm
 from repro.models.layers import ModelCfg
 from repro.optim import optimizers
+from repro.parallel import ax
 from repro.parallel import sharding as shd
 
 
@@ -105,7 +116,7 @@ def _mid_blocks(blocks, flags, wire, cfg: ModelCfg, shared):
         for j, blk in enumerate(cfg.pattern):
             x_new, da, _ = lm.block_apply(bp[f"b{j}"], blk, x_new, cfg,
                                           positions=positions, enc_out=enc,
-                                          shared=shared)
+                                          shared=shared, iota_positions=True)
             aux_new = aux_new + da
         xx = xx + flag.astype(xx.dtype) * (x_new - xx)
         a = a + flag * (aux_new - a)
@@ -180,24 +191,24 @@ def make_pipeline_step(cfg: ModelCfg, mesh, *, n_microbatches: int, method: str 
 
     n_slots = M + 2 * (n_pods - 1)
 
-    def pod_program(pod_edge, blocks, flags, opt_state, stash_w, x0_all, labels_all):
-        """shard_map body (manual over 'pod'; leaves carry a leading [1] pod axis)."""
-        sq = lambda t: jax.tree.map(lambda a: a[0], t)
-        pod_edge, blocks, flags = sq(pod_edge), sq(blocks), sq(flags)
-        opt_state, stash_w = sq(opt_state), sq(stash_w)
-        # x0_all / labels_all are replicated over 'pod' (in_spec P()): no pod axis
-        pod_id = jax.lax.axis_index("pod")
-        is_first = pod_id == 0
-        is_last = pod_id == n_pods - 1
+    def step_fn(state: PPState, batch):
+        # --- stage 0 forward for all microbatches (pjit, vectorized over M) ---
+        def s0_all(stage0, b):
+            return jax.vmap(lambda mb: stage0_apply(stage0, mb, cfg))(b)
+
+        x0_all, s0_vjp = jax.vjp(lambda p: s0_all(p, batch), state.pp["stage0"])
+        labels_all = batch["labels"]
         b, S = labels_all.shape[1], labels_all.shape[2]
         zero_wire = _wire_zero(cfg, b, S)
+        pod_ids = jnp.arange(n_pods, dtype=jnp.int32)
+        flags_all = state.pp["flags"]
 
         def idx_mb(tree, i):
             i = jnp.clip(i, 0, M - 1)
             return jax.tree.map(
                 lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False), tree)
 
-        def pod_fn(w, wire_in, labels):
+        def pod_fn(w, flags, wire_in, labels, is_last):
             out = _mid_blocks(w["blocks"], flags, wire_in, cfg,
                               w["pod_edge"].get("shared"))
             loss = jax.lax.cond(
@@ -206,8 +217,11 @@ def make_pipeline_step(cfg: ModelCfg, mesh, *, n_microbatches: int, method: str 
                 lambda: jnp.zeros((), jnp.float32))
             return out, loss
 
-        def slot(carry, s):
-            W, opt_s, stw, x_ring, x_wire, e_wire, dx0, loss_sum = carry
+        def slot_pod(W, opt_s, stw, x_ring, x_wire, e_wire, dx0, loss_sum,
+                     flags, pod_id, s):
+            """One slot of ONE pod (vmapped over the pod axis by `slot`)."""
+            is_first = pod_id == 0
+            is_last = pod_id == n_pods - 1
             # ---------------- forward unit ----------------
             fwd_mb = s - pod_id
             fwd_valid = (fwd_mb >= 0) & (fwd_mb < M)
@@ -218,7 +232,7 @@ def make_pipeline_step(cfg: ModelCfg, mesh, *, n_microbatches: int, method: str 
 
             def do_fwd():
                 out, _ = pod_fn({"pod_edge": W["pod_edge"], "blocks": W["blocks"]},
-                                wire_in, idx_mb(labels_all, fwd_mb))
+                                flags, wire_in, idx_mb(labels_all, fwd_mb), is_last)
                 return out
 
             send = jax.lax.cond(fwd_valid & (~is_last), do_fwd, lambda: zero_wire)
@@ -241,7 +255,7 @@ def make_pipeline_step(cfg: ModelCfg, mesh, *, n_microbatches: int, method: str 
 
             def do_bwd():
                 (out, loss), vjp = jax.vjp(
-                    lambda w, xi: pod_fn(w, xi, labels_b), W_b, x_saved)
+                    lambda w, xi: pod_fn(w, flags, xi, labels_b, is_last), W_b, x_saved)
                 zero_ct = jax.tree.map(jnp.zeros_like, out)
                 ct_wire = jax.tree.map(
                     lambda e, z: jnp.where(is_last, z, e.astype(z.dtype)), e_wire, zero_ct)
@@ -265,45 +279,35 @@ def make_pipeline_step(cfg: ModelCfg, mesh, *, n_microbatches: int, method: str 
                     jax.lax.dynamic_update_index_in_dim(
                         buf, g.astype(buf.dtype), jnp.clip(bwd_mb, 0, M - 1), 0), buf),
                 dx0, ge)
+            return W, opt_s, stw, x_ring, dx0, loss_sum, send, ge
 
-            # ---------------- wires ----------------
-            fwd_perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
-            bwd_perm = [(i, (i - 1) % n_pods) for i in range(n_pods)]
-            x_wire = jax.tree.map(lambda v: jax.lax.ppermute(v, "pod", fwd_perm), send)
-            e_wire = jax.tree.map(lambda v: jax.lax.ppermute(v, "pod", bwd_perm), ge)
+        def slot(carry, s):
+            W, opt_s, stw, x_ring, x_wire, e_wire, dx0, loss_sum = carry
+            W, opt_s, stw, x_ring, dx0, loss_sum, send, ge = jax.vmap(
+                lambda *a: slot_pod(*a, s)
+            )(W, opt_s, stw, x_ring, x_wire, e_wire, dx0, loss_sum, flags_all, pod_ids)
+            # wires: cyclic shift over the pod axis (XLA lowers the sharded roll
+            # to a collective-permute — the activation/error hop between pods)
+            x_wire = jax.tree.map(lambda v: jnp.roll(v, 1, axis=0), send)
+            e_wire = jax.tree.map(lambda v: jnp.roll(v, -1, axis=0), ge)
             return (W, opt_s, stw, x_ring, x_wire, e_wire, dx0, loss_sum), None
 
-        W0 = {"pod_edge": pod_edge, "blocks": blocks}
-        x_ring0 = jax.tree.map(lambda z: jnp.zeros((ring,) + z.shape, z.dtype), zero_wire)
-        dx0_0 = jax.tree.map(lambda z: jnp.zeros((M,) + z.shape, jnp.float32), zero_wire)
-        carry0 = (W0, opt_state, stash_w, x_ring0, zero_wire,
-                  jax.tree.map(jnp.zeros_like, zero_wire), dx0_0,
-                  jnp.zeros((), jnp.float32))
-        carry, _ = jax.lax.scan(slot, carry0, jnp.arange(n_slots), unroll=cfg.unroll)
+        W0 = {"pod_edge": state.pp["pod_edge"], "blocks": state.pp["blocks"]}
+        pstack = lambda z, lead: jnp.zeros((n_pods,) + lead + z.shape, z.dtype)
+        x_ring0 = jax.tree.map(lambda z: pstack(z, (ring,)), zero_wire)
+        wire0 = jax.tree.map(lambda z: pstack(z, ()), zero_wire)
+        dx0_0 = jax.tree.map(
+            lambda z: jnp.zeros((n_pods, M) + z.shape, jnp.float32), zero_wire)
+        carry0 = (W0, state.opt, state.stash, x_ring0, wire0,
+                  jax.tree.map(jnp.zeros_like, wire0), dx0_0,
+                  jnp.zeros((n_pods,), jnp.float32))
+        # 'pod' is a batched axis here, not a constrainable one: keep ax.constrain
+        # specs inside the per-pod trace to 'data'/'model' only
+        with ax.manual_axes("pod"):
+            carry, _ = jax.lax.scan(slot, carry0, jnp.arange(n_slots),
+                                    unroll=cfg.unroll)
         W, opt_s, stw, _, _, _, dx0, loss_sum = carry
-        loss = jax.lax.psum(jnp.where(is_last, loss_sum / M, 0.0), "pod")
-        ex = lambda t: jax.tree.map(lambda a: a[None], t)
-        return (ex(W["pod_edge"]), ex(W["blocks"]), ex(opt_s), ex(stw),
-                ex(dx0), loss[None])
-
-    def step_fn(state: PPState, batch):
-        # --- stage 0 forward for all microbatches (pjit, vectorized over M) ---
-        def s0_all(stage0, b):
-            return jax.vmap(lambda mb: stage0_apply(stage0, mb, cfg))(b)
-
-        x0_all, s0_vjp = jax.vjp(lambda p: s0_all(p, batch), state.pp["stage0"])
-
-        # --- the manual-pod pipeline ---
-        fn = jax.shard_map(
-            pod_program, mesh=mesh,
-            in_specs=(P("pod"), P("pod"), P("pod"), P("pod"), P("pod"), P(), P()),
-            out_specs=(P("pod"), P("pod"), P("pod"), P("pod"), P("pod"), P("pod")),
-            check_vma=False,
-            axis_names={"pod"},
-        )
-        pod_edge, blocks, opt_s, stw, dx0, loss = fn(
-            state.pp["pod_edge"], state.pp["blocks"], state.pp["flags"],
-            state.opt, state.stash, x0_all, batch["labels"])
+        loss = jnp.sum(jnp.where(pod_ids == n_pods - 1, loss_sum, 0.0)) / M
 
         # --- stage 0 backward + synchronous per-tick update ---
         dx0_first = jax.tree.map(lambda a: a[0], dx0)  # first pod's cotangents
@@ -313,9 +317,9 @@ def make_pipeline_step(cfg: ModelCfg, mesh, *, n_microbatches: int, method: str 
         new_s0, new_opt_s0, _ = opt.update(state.pp["stage0"], g_s0, state.opt_s0)
 
         pp = dict(state.pp)
-        pp["stage0"], pp["pod_edge"], pp["blocks"] = new_s0, pod_edge, blocks
+        pp["stage0"], pp["pod_edge"], pp["blocks"] = new_s0, W["pod_edge"], W["blocks"]
         return (PPState(state.step + 1, pp, new_opt_s0, opt_s, stw),
-                {"loss": loss.reshape(-1)[0]})
+                {"loss": loss})
 
     return init_fn, step_fn
 

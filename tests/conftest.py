@@ -1,7 +1,18 @@
 import os
 import sys
+import zlib
+
+import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: no xla_force_host_platform_device_count here — smoke tests see 1 device.
-# Multi-device tests spawn subprocesses (see test_dryrun.py) or request the
+# Multi-device tests spawn subprocesses (see test_distributed.py) or request the
 # device count via their own env before importing jax in a subprocess.
+
+
+@pytest.fixture
+def rng_key(request):
+    """Deterministic per-test JAX PRNG key (seeded from the test's node id)."""
+    import jax
+
+    return jax.random.PRNGKey(zlib.crc32(request.node.nodeid.encode()) & 0x7FFFFFFF)

@@ -1,0 +1,73 @@
+"""`hypothesis` when installed, else a seeded-random fallback with the same API.
+
+The property tests in this suite use only `@settings(...) @given(st.integers /
+st.sampled_from)`. When `hypothesis` is absent (clean CI containers), the
+fallback replays each property over `max_examples` deterministic samples drawn
+from a PRNG seeded by the test name — weaker than real shrinking/search, but it
+keeps the properties exercised and the suite collectable everywhere.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module surface
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # hide the strategy params from pytest's fixture resolution, but
+            # keep any remaining params (fixtures) visible for injection
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strategies])
+            wrapper._hypothesis_fallback = True
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=None, **_ignored):
+        """Accepts (and ignores) deadline/derandomize/...; keeps max_examples."""
+
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+
+        return deco

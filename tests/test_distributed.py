@@ -124,9 +124,9 @@ def test_spmd_pipeline_single_pod_matches_engine():
     from repro.parallel.pipeline_spmd import make_pipeline_step
     from repro.models import lm
     from repro.data.synthetic import make_batch_fn
+    from repro.launch.mesh import _make_mesh
     cfg = get_config("nanogpt_134m", reduced=True)
-    mesh = jax.make_mesh((1, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = _make_mesh((1, 2, 2), ("pod", "data", "model"))
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     batch_fn, _ = make_batch_fn(cfg, 1, 4, 32, seed=0)
 

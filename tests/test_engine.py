@@ -116,8 +116,59 @@ def test_grad_accum_matches_big_batch(setup):
     s2 = t2.init_from_params(params)
     s2b, m2 = t2.jit_step(donate=False)(s2, b_full)
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    # atol floor: scan-accumulated vs fused-batch grads differ in f32 summation
+    # order, and Adam's rsqrt normalizer amplifies that on near-zero entries
     for a, b in zip(jax.tree.leaves(s1b.params), jax.tree.leaves(s2b.params)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_optimizer_matches_treemap(setup, monkeypatch):
+    """REPRO_KERNEL_BACKEND=interpret routes 'ours' through the fused flat-buffer
+    nag_update kernel; losses match the tree-map nadam path within 1e-5 over 10
+    ticks (same model kernels both sides — only the optimizer path differs)."""
+    cfg, params, batch = setup
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    ecfg = EngineCfg(n_stages=2, lr=2e-3, constant_lr=True, collect_metrics=False)
+    t_fused = AsyncTrainer(cfg, ecfg, "ours")
+    assert t_fused.opt.kind == "nadam_flat"  # dispatch routed the fused kernel
+    ecfg_ref = EngineCfg(n_stages=2, lr=2e-3, constant_lr=True,
+                         collect_metrics=False, fused_optimizer=False)
+    t_ref = AsyncTrainer(cfg, ecfg_ref, "ours")
+    assert t_ref.opt.kind == "nadam"
+    s_f = t_fused.init_from_params(params)
+    s_r = t_ref.init_from_params(params)
+    step_f, step_r = t_fused.jit_step(donate=False), t_ref.jit_step(donate=False)
+    for i in range(10):
+        s_f, m_f = step_f(s_f, batch)
+        s_r, m_r = step_r(s_r, batch)
+        np.testing.assert_allclose(float(m_f["loss"]), float(m_r["loss"]),
+                                   rtol=1e-5, atol=1e-5)
+    # parameters agree too, not just losses
+    for a, b in zip(jax.tree.leaves(s_f.params), jax.tree.leaves(s_r.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    # flat fp32 master copy stays bit-consistent with the pytree params
+    from repro.optim.optimizers import flatten_tree
+    for i in range(t_fused.P):
+        np.testing.assert_array_equal(
+            np.asarray(s_f.opt[i]["flat"]["p"]),
+            np.asarray(flatten_tree(s_f.params[i])))
+
+
+def test_fused_optimizer_metrics_and_stage_momentum(setup, monkeypatch):
+    """Fused path supports Eq. 13 stage momentum + the Prop.-1 alignment metrics."""
+    cfg, params, batch = setup
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    ecfg = EngineCfg(n_stages=2, lr=2e-3, constant_lr=True, collect_metrics=True)
+    tr = AsyncTrainer(cfg, ecfg, "ours_delay_adaptive")
+    assert tr.opt.kind == "nadam_flat"
+    state = tr.init_from_params(params)
+    step = tr.jit_step(donate=False)
+    losses = []
+    for i in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(float(m["stage1_gap_rmse"]))
+    assert np.isfinite(losses).all() and losses[-1] < losses[0]
 
 
 def test_merge_params_roundtrip(setup):

@@ -103,6 +103,74 @@ def test_elastic_restage(cfg):
     assert bool(jnp.isfinite(m["loss"]))
 
 
+def test_elastic_restage_fused_optimizer(cfg, monkeypatch):
+    """Restage unflattens the fused flat-buffer moments and re-flattens them
+    for the new trainer (both trainers on the fused path)."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    batch_fn, _ = make_batch_fn(cfg, 1, 4, 32, seed=2)
+    tr4 = AsyncTrainer(cfg, EngineCfg(n_stages=4, lr=1e-3, constant_lr=True), "ours")
+    assert tr4.opt.kind == "nadam_flat"
+    s4 = tr4.init(jax.random.PRNGKey(0))
+    step4 = tr4.jit_step(donate=False)
+    for i in range(3):
+        s4, _ = step4(s4, batch_fn(i))
+    tr2 = AsyncTrainer(cfg, EngineCfg(n_stages=2, lr=1e-3, constant_lr=True), "ours")
+    s2 = ckpt.restage(s4, tr4, tr2)
+    assert int(s2.step) == int(s4.step)
+    # moments migrated, not reset
+    assert float(jnp.sum(jnp.abs(s2.opt[0]["flat"]["m"]))) > 0
+    assert int(s2.opt[0]["count"]) == int(s4.opt[0]["count"])
+    m4 = tr4.merge_params(s4)
+    m2 = tr2.merge_params(s2)
+    for a, b in zip(jax.tree.leaves(m4), jax.tree.leaves(m2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    s2b, m = tr2.jit_step(donate=False)(s2, batch_fn(5))
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_checkpoint_restores_across_optimizer_layouts(cfg, monkeypatch):
+    """A tree-map checkpoint resumes under the fused backend and vice versa
+    (same config trained under a different REPRO_KERNEL_BACKEND)."""
+    import tempfile as _tf
+
+    ecfg = EngineCfg(n_stages=2, lr=1e-3, constant_lr=True)
+    batch_fn, _ = make_batch_fn(cfg, 1, 4, 32, seed=3)
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    tr_tree = AsyncTrainer(cfg, ecfg, "ours")  # CPU default: tree-map nadam
+    s_tree = tr_tree.init(jax.random.PRNGKey(0))
+    step = tr_tree.jit_step(donate=False)
+    for i in range(3):
+        s_tree, _ = step(s_tree, batch_fn(i))
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    tr_flat = AsyncTrainer(cfg, ecfg, "ours")
+    assert tr_flat.opt.kind == "nadam_flat"
+    s_flat_like = tr_flat.init_from_params(tr_tree.merge_params(s_tree))
+    with _tf.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.npz")
+        # tree-map ckpt -> fused state
+        ckpt.save(path, s_tree, 3)
+        restored, meta = ckpt.restore(path, s_flat_like)
+        assert meta["step"] == 3
+        from repro.optim.optimizers import flatten_tree
+        for i in range(2):
+            np.testing.assert_allclose(
+                np.asarray(restored.opt[i]["flat"]["m"]),
+                np.asarray(flatten_tree(s_tree.opt[i]["m"])), atol=1e-7)
+            np.testing.assert_allclose(
+                np.asarray(restored.opt[i]["flat"]["p"]),
+                np.asarray(flatten_tree(restored.params[i])), atol=1e-7)
+        # and back: fused ckpt -> tree-map state
+        ckpt.save(path, restored, 4)
+        back, _ = ckpt.restore(path, s_tree)
+        for i in range(2):
+            for a, b in zip(jax.tree.leaves(back.opt[i]["m"]),
+                            jax.tree.leaves(s_tree.opt[i]["m"])):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+        # fused run continues from the converted state
+        s_next, m = tr_flat.jit_step(donate=False)(restored, batch_fn(9))
+        assert bool(jnp.isfinite(m["loss"]))
+
+
 def test_checkpoint_shape_mismatch_rejected(cfg):
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "x.npz")
