@@ -21,6 +21,7 @@ def main() -> None:
     steps = 60 if args.quick else args.steps
 
     import kernel_bench
+    import runtime_bench
     import table1_methods
     import fig4_delay_correction
     import fig5_stage_scaling
@@ -31,6 +32,8 @@ def main() -> None:
 
     print("# === kernels (interpret mode) ===")
     kernel_bench.main()
+    print("# === runtime: event-driven vs jit engine ===")
+    runtime_bench.main(steps=max(20, steps // 4))
     print("# === Table 1: methods ===")
     table1_methods.main(steps=steps)
     print("# === Fig 4: delay-correction mechanisms ===")

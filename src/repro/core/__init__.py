@@ -1,3 +1,5 @@
 """The paper's contribution: async-PP engine (engine.py), stage-delay model
 (delay.py), weight-stash rings (stash.py), staged VJP (staged.py), method registry
-(methods.py), SWARM stage-DP (swarm.py), utilization analytics (utilization.py)."""
+(methods.py), SWARM stage-DP (swarm.py), utilization analytics (utilization.py),
+and the event-driven async runtime (runtime.py + events.py: discrete-event 1F1B
+with sampled delays and observed-staleness feedback — DESIGN.md §9)."""

@@ -16,3 +16,16 @@ def stage_delays(P: int, K: int = 1) -> tuple:
 
 def max_delay(P: int, K: int = 1) -> int:
     return stage_delay(1, P, K)
+
+
+def validate_taus(taus, P: int) -> tuple:
+    """Validate a per-stage delay vector (EngineCfg.straggler_delays — the
+    static override of the event runtime's DelayModel; see core/events.py)."""
+    taus = tuple(int(t) for t in taus)
+    if len(taus) != P:
+        raise ValueError(
+            f"straggler_delays must have one entry per pipeline stage: "
+            f"got {len(taus)} entries for P={P} stages")
+    if any(t < 0 for t in taus):
+        raise ValueError(f"stage delays must be >= 0, got {taus}")
+    return taus

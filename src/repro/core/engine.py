@@ -26,6 +26,15 @@ from repro.models.layers import ModelCfg
 from repro.optim import forecast, optimizers, schedules
 
 
+def _where_tau(tau, if_stale, if_fresh):
+    """Select between two pytrees on tau > 0. Static tau folds at trace time
+    (preserving the fixed-schedule engine's exact program); traced tau lowers
+    to a per-leaf jnp.where (the dynamic/observed-delay path)."""
+    if isinstance(tau, (int, float)):
+        return if_stale if tau > 0 else if_fresh
+    return jax.tree.map(lambda a, b: jnp.where(tau > 0, a, b), if_stale, if_fresh)
+
+
 class AsyncState(NamedTuple):
     step: jnp.ndarray  # int32 scalar: tick counter t
     params: tuple  # per-stage current weights w_i^t
@@ -45,7 +54,17 @@ class EngineCfg:
     constant_lr: bool = False
     collect_metrics: bool = True
     stash_dtype: Any = None  # e.g. jnp.bfloat16 to halve stash memory
-    straggler_delays: Optional[tuple] = None  # override tau_i (straggler injection)
+    # Static per-stage override of the Eq. 5 schedule (straggler injection).
+    # Must have exactly one entry per pipeline stage (length == P after the
+    # model-unit clamp). This is the *static* counterpart of the event
+    # runtime's DelayModel (core/events.py): the DelayModel samples latencies
+    # and the runtime feeds the *observed* tau back per tick, while this field
+    # pins a fixed tau vector into the single-jit engine.
+    straggler_delays: Optional[tuple] = None
+    # Upper bound on per-tick dynamic delays for step(..., taus=...): stash
+    # ring depth becomes max_dynamic_delay + 1 on every stage so any observed
+    # tau <= max_dynamic_delay replays exactly. None = static schedule depth.
+    max_dynamic_delay: Optional[int] = None
     # kernel routing: backend for the fused optimizer tick (env var
     # REPRO_KERNEL_BACKEND overrides; see kernels/dispatch.py). None = platform.
     kernel_backend: Optional[str] = None
@@ -68,7 +87,7 @@ class AsyncTrainer:
         if self.method.sync:
             self.taus = tuple(0 for _ in range(P))
         elif ecfg.straggler_delays is not None:
-            self.taus = tuple(ecfg.straggler_delays)
+            self.taus = delay_mod.validate_taus(ecfg.straggler_delays, P)
         else:
             self.taus = delay_mod.stage_delays(P, ecfg.update_interval)
         kw = dict(self.method.opt_kwargs())
@@ -116,7 +135,7 @@ class AsyncTrainer:
         self._stage_ops = stage_ops
         self.stage_fns = staged.make_stage_fns(self.model_cfg, stage_ops)
         stashes = tuple(
-            stash.init_stash(sp, self.taus[i] + 1, dtype=self.ecfg.stash_dtype)
+            stash.init_stash(sp, self._stash_depth(i), dtype=self.ecfg.stash_dtype)
             for i, sp in enumerate(stages_p)
         )
         opt_states = tuple(self.opt.init(sp) for sp in stages_p)
@@ -131,13 +150,98 @@ class AsyncTrainer:
             e["velocity"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), sp)
         return e
 
+    def _stash_depth(self, i: int) -> int:
+        if self.ecfg.max_dynamic_delay is not None:
+            return stash.depth_for(self.ecfg.max_dynamic_delay)
+        return self.taus[i] + 1
+
+    # -- per-stage method semantics (shared by the jit engine and the event
+    #    runtime, so both execution paths apply bit-identical update math) -----
+
+    def _bwd_weights(self, i: int, params, extra, W_stale, tau):
+        """Where stage i's VJP is linearized. tau: static int or traced/observed."""
+        m = self.method
+        if m.bwd_point == "stash":
+            return W_stale
+        if m.bwd_point == "current":
+            return params
+        if m.bwd_point == "pipemare_predict":
+            # PipeMare: estimate the weights the forward used via update velocity:
+            # w_hat_i = w_t - tau_i * velocity_i  (identity at tau == 0)
+            v = extra.get("velocity") if extra else None
+            if v is None:
+                return params
+            tau_f = jnp.asarray(tau, jnp.float32)
+            return jax.tree.map(
+                lambda w, vv: (w.astype(jnp.float32) - tau_f * vv).astype(w.dtype),
+                params, v)
+        raise ValueError(m.bwd_point)
+
+    def _stage_update(self, i: int, params, grads, opt_state, extra, tau, t, *,
+                      W_stale=None, lr_t=None):
+        """One stage's method-interpreted update at (possibly dynamic) delay tau.
+
+        Returns (new_params, new_opt, new_extra, fwd_point, aux). tau may be a
+        python number (static Eq. 5 schedule — branches fold at trace time) or
+        a traced scalar (live observed delay from the event runtime).
+        """
+        m = self.method
+        if lr_t is None:
+            lr_t = self.lr_sched(t)
+        new_extra = dict(extra)
+        # gradient forecasting corrections (baselines of Sec. 5.4)
+        if m.grad_forecast == "second_order":
+            corrected = forecast.second_order_correct(grads, params, W_stale)
+            grads = _where_tau(tau, corrected, grads)
+        elif m.grad_forecast == "polyfft":
+            h = m.forecast_hist
+            new_extra["hist"] = forecast.push_history(extra["hist"], grads, h)
+            predicted = forecast.polyfft_predict(new_extra["hist"], h, tau)
+            grads = _where_tau(tau, predicted, grads)
+        # Eq. 13 stage schedules
+        lr_scale = lr_t
+        if m.lr_discount:
+            lr_scale = lr_scale * schedules.lr_discount_factor(tau, t, m.lr_discount_T)
+        mom = schedules.stage_momentum(i + 1, self.P) if m.stage_momentum else None
+        new_params, new_opt, aux = self.opt.update(params, grads, opt_state,
+                                                   lr_scale=lr_scale, mom=mom, t=t)
+        if m.bwd_point == "pipemare_predict":
+            beta = 0.9
+            new_extra["velocity"] = jax.tree.map(
+                lambda v, s: beta * v + (1 - beta) * s,
+                extra["velocity"], aux["step_dir"])
+        # the point the *next* forward runs at
+        if m.fwd_point == "current":
+            fp = new_params
+        elif m.fwd_point == "lookahead":
+            fp = aux["lookahead"]
+        elif m.fwd_point == "xpipe_predict":
+            # XPipe: predict weights tau updates ahead along the optimizer step
+            tau_f = jnp.asarray(tau, jnp.float32)
+            fp = jax.tree.map(
+                lambda w, s: (w.astype(jnp.float32) + tau_f * s).astype(w.dtype),
+                new_params, aux["step_dir"])
+        else:
+            raise ValueError(m.fwd_point)
+        return new_params, new_opt, new_extra, fp, aux
+
     # -- one tick -------------------------------------------------------------
 
-    def step(self, state: AsyncState, batch) -> tuple:
-        """batch: pytree with leading microbatch axis [K, ...] (K = update_interval)."""
+    def step(self, state: AsyncState, batch, taus=None) -> tuple:
+        """batch: pytree with leading microbatch axis [K, ...] (K = update_interval).
+
+        taus: optional per-tick delay vector (length-P sequence or int32 [P]
+        array, possibly traced) overriding the static schedule — the dynamic-tau
+        path driven by the event runtime's observed staleness. Every entry must
+        be <= the stash depth bound (EngineCfg.max_dynamic_delay).
+        """
         m = self.method
         t = state.step
         P = self.P
+        if taus is None:
+            taus_t = list(self.taus)
+        else:
+            taus_t = [taus[i] for i in range(P)]
 
         # 1) forward/backward points per stage
         Wfwd = []
@@ -145,23 +249,10 @@ class AsyncTrainer:
             if m.sync:
                 Wfwd.append(state.params[i])
             else:
-                Wfwd.append(stash.get(state.stashes[i], t, self.taus[i], like=state.params[i]))
-        if m.bwd_point == "stash":
-            Wbwd = Wfwd
-        elif m.bwd_point == "current":
-            Wbwd = list(state.params)
-        elif m.bwd_point == "pipemare_predict":
-            # PipeMare: estimate the weights the forward used via update velocity:
-            # w_hat_i = w_t - tau_i * velocity_i
-            Wbwd = [
-                jax.tree.map(
-                    lambda w, v: (w.astype(jnp.float32) - self.taus[i] * v).astype(w.dtype),
-                    state.params[i], state.extra[i].get("velocity"))
-                if self.taus[i] > 0 and state.extra[i] else state.params[i]
-                for i in range(P)
-            ]
-        else:
-            raise ValueError(m.bwd_point)
+                Wfwd.append(stash.get(state.stashes[i], t, taus_t[i], like=state.params[i]))
+        Wbwd = ([self._bwd_weights(i, state.params[i], state.extra[i], Wfwd[i], taus_t[i])
+                 for i in range(P)]
+                if m.bwd_point != "stash" else Wfwd)
 
         # 2) staggered-stale forward + per-stage VJP backward (+ grad accumulation)
         def lg(Wf, Wb, b):
@@ -170,60 +261,20 @@ class AsyncTrainer:
         loss, grads = staged.grad_accum(lg, Wfwd, Wbwd, batch,
                                         unroll=self.model_cfg.unroll)
 
-        # 3) gradient forecasting corrections (baselines of Sec. 5.4)
-        new_extras = [dict(e) for e in state.extra]
-        if m.grad_forecast == "second_order":
-            grads = [
-                forecast.second_order_correct(grads[i], state.params[i], Wfwd[i])
-                if self.taus[i] > 0 else grads[i]
-                for i in range(P)
-            ]
-        elif m.grad_forecast == "polyfft":
-            h = m.forecast_hist
-            for i in range(P):
-                new_extras[i]["hist"] = forecast.push_history(state.extra[i]["hist"], grads[i], h)
-            grads = [
-                forecast.polyfft_predict(new_extras[i]["hist"], h, float(self.taus[i]))
-                if self.taus[i] > 0 else grads[i]
-                for i in range(P)
-            ]
-
-        # 4) per-stage optimizer update with Eq. 13 stage schedules
+        # 3-5) per-stage method update (Sec. 5.4 corrections + Eq. 13 schedules),
+        # then stash the next tick's forward point
         lr_t = self.lr_sched(t)
-        new_params, new_opts, new_stashes = [], [], []
+        new_params, new_opts, new_stashes, new_extras = [], [], [], []
         aux_by_stage = []
         for i in range(P):
-            lr_scale = lr_t
-            if m.lr_discount and self.taus[i] > 0:
-                lr_scale = lr_scale * schedules.lr_discount_factor(self.taus[i], t, m.lr_discount_T)
-            mom = None
-            if m.stage_momentum:
-                mom = schedules.stage_momentum(i + 1, P)
-            np_i, no_i, aux = self.opt.update(state.params[i], grads[i], state.opt[i],
-                                              lr_scale=lr_scale, mom=mom, t=t)
+            np_i, no_i, ne_i, fp_i, aux = self._stage_update(
+                i, state.params[i], grads[i], state.opt[i], state.extra[i],
+                taus_t[i], t, W_stale=Wfwd[i], lr_t=lr_t)
             new_params.append(np_i)
             new_opts.append(no_i)
+            new_extras.append(ne_i)
             aux_by_stage.append(aux)
-            if m.bwd_point == "pipemare_predict":
-                beta = 0.9
-                new_extras[i]["velocity"] = jax.tree.map(
-                    lambda v, s: beta * v + (1 - beta) * s,
-                    state.extra[i]["velocity"], aux["step_dir"])
-
-        # 5) stash the next tick's forward point
-        for i in range(P):
-            if m.fwd_point == "current":
-                fp = new_params[i]
-            elif m.fwd_point == "lookahead":
-                fp = aux_by_stage[i]["lookahead"]
-            elif m.fwd_point == "xpipe_predict":
-                # XPipe: predict weights tau_i updates ahead along the optimizer step
-                fp = jax.tree.map(
-                    lambda w, s: (w.astype(jnp.float32) + self.taus[i] * s).astype(w.dtype),
-                    new_params[i], aux_by_stage[i]["step_dir"])
-            else:
-                raise ValueError(m.fwd_point)
-            new_stashes.append(stash.push(state.stashes[i], fp, t + 1))
+            new_stashes.append(stash.push(state.stashes[i], fp_i, t + 1))
 
         metrics = {"loss": loss, "lr": lr_t}
         if self.ecfg.collect_metrics and not m.sync:

@@ -1,0 +1,253 @@
+"""Discrete-event primitives for the asynchronous pipeline runtime.
+
+Three pieces, deliberately free of any jax dependency so the same machinery can
+drive both the full training runtime (`core/runtime.py`) and compute-free
+schedule simulations (`runtime.simulate_schedule`, used by the dryrun launcher):
+
+- `EventQueue` — a wall-clock priority queue with deterministic FIFO
+  tie-breaking at equal timestamps (insertion order), so a given (delay model,
+  seed) always replays the identical execution order.
+- `Mailbox`   — an in-order microbatch mailbox. Links may reorder deliveries
+  (jittery comm latencies), but 1F1B consumes microbatches strictly in order;
+  the mailbox buffers early arrivals until the expected index shows up.
+- `DelayModel` — per-(stage, op, microbatch) latency sampler. Sampling is
+  *keyed* (counter-based PRNG on (seed, stage, op, mb)), not sequential, so a
+  latency does not depend on the order the simulator happens to ask for it.
+
+The closed-form schedule tau_i = floor((2(P-i)+1)/2K) in `core/delay.py` is the
+fixed-delay special case of this model; `EngineCfg.straggler_delays` remains the
+static override for the jit engine (see `core/engine.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+# Minimum latency for any compute op: the event loop advances time only through
+# op completions, so a zero compute latency could livelock the simulation.
+MIN_LATENCY = 1e-6
+
+_OP_IDS = {"fwd": 0, "bwd": 1, "comm_fwd": 2, "comm_bwd": 3, "update": 4}
+
+
+# ---------------------------------------------------------------------------
+# event queue
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Event:
+    time: float
+    kind: str  # "fwd_arrive" | "bwd_arrive" | "free"
+    stage: int
+    mb: int = -1
+    payload: Any = None
+
+
+class EventQueue:
+    """Priority queue over (time, seq). seq = insertion order -> deterministic."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = 0
+
+    def push(self, time: float, kind: str, stage: int, mb: int = -1, payload=None):
+        heapq.heappush(self._heap, (time, self._seq, Event(time, kind, stage, mb, payload)))
+        self._seq += 1
+
+    def pop_batch(self) -> list:
+        """Pop ALL events sharing the earliest timestamp (arrivals must be fully
+        ingested before any scheduling decision at that instant — otherwise a
+        same-time cotangent could lose its backward-priority to a forward)."""
+        if not self._heap:
+            return []
+        t0 = self._heap[0][0]
+        out = []
+        while self._heap and self._heap[0][0] == t0:
+            out.append(heapq.heappop(self._heap)[2])
+        return out
+
+    def __len__(self):
+        return len(self._heap)
+
+    def __bool__(self):
+        return bool(self._heap)
+
+
+# ---------------------------------------------------------------------------
+# in-order mailbox
+# ---------------------------------------------------------------------------
+
+
+class Mailbox:
+    """Buffers (mb -> item) deliveries; `take(mb)` only yields the asked index.
+
+    Contract (DESIGN.md §9): deliveries may arrive out of order; consumption is
+    strictly in microbatch order; an item is delivered exactly once. `high_water`
+    tracks the peak number of buffered items (mailbox memory pressure).
+    """
+
+    def __init__(self):
+        self._items: dict = {}
+        self.high_water = 0
+
+    def put(self, mb: int, item):
+        if mb in self._items:
+            raise RuntimeError(f"duplicate delivery for microbatch {mb}")
+        self._items[mb] = item
+        self.high_water = max(self.high_water, len(self._items))
+
+    def ready(self, mb: int) -> bool:
+        return mb in self._items
+
+    def take(self, mb: int):
+        return self._items.pop(mb)
+
+    def __len__(self):
+        return len(self._items)
+
+
+# ---------------------------------------------------------------------------
+# delay models
+# ---------------------------------------------------------------------------
+
+
+class DelayModel:
+    """latency(stage, op, mb) -> float seconds (arbitrary units).
+
+    op in {"fwd", "bwd", "comm_fwd", "comm_bwd"}; comm ops are sampled at the
+    *sending* stage. Subclasses override `_latency`; the base class clamps
+    compute ops to MIN_LATENCY (comm may be exactly 0 = on-chip neighbour).
+    """
+
+    def latency(self, stage: int, op: str, mb: int) -> float:
+        lat = float(self._latency(stage, op, mb))
+        if op in ("fwd", "bwd"):
+            return max(lat, MIN_LATENCY)
+        return max(lat, 0.0)
+
+    def _latency(self, stage: int, op: str, mb: int) -> float:
+        raise NotImplementedError
+
+    def _rng(self, seed: int, stage: int, op: str, mb: int) -> np.random.Generator:
+        """Counter-based keyed PRNG: the draw for (stage, op, mb) is independent
+        of simulation order, so runs with the same seed are exactly repeatable
+        even when the event interleaving changes."""
+        word = (stage << 40) | (_OP_IDS[op] << 36) | (mb & 0xFFFFFFFF)
+        return np.random.Generator(np.random.Philox(
+            key=np.array([seed & 0xFFFFFFFFFFFFFFFF, word], dtype=np.uint64)))
+
+
+@dataclasses.dataclass
+class FixedDelay(DelayModel):
+    """Uniform deterministic latencies — the regime of paper Eq. 5. Under this
+    model the event runtime's 1F1B discipline reproduces the closed-form
+    tau_i = floor((2(P-i)+1)/2K) exactly (tests/test_runtime.py)."""
+
+    fwd: float = 1.0
+    bwd: float = 2.0
+    comm: float = 0.0
+
+    def _latency(self, stage, op, mb):
+        if op == "fwd":
+            return self.fwd
+        if op == "bwd":
+            return self.bwd
+        return self.comm
+
+
+@dataclasses.dataclass
+class JitterDelay(DelayModel):
+    """Log-normal multiplicative jitter on every op: base * exp(N(0, sigma)).
+
+    Models jittery links / noisy neighbours; sigma ~ 0.2-0.5 is mild-to-rough.
+    """
+
+    sigma: float = 0.25
+    fwd: float = 1.0
+    bwd: float = 2.0
+    comm: float = 0.1
+    seed: int = 0
+
+    def _latency(self, stage, op, mb):
+        base = {"fwd": self.fwd, "bwd": self.bwd}.get(op, self.comm)
+        z = self._rng(self.seed, stage, op, mb).normal(0.0, self.sigma)
+        return base * float(np.exp(z))
+
+
+@dataclasses.dataclass
+class StragglerDelay(DelayModel):
+    """One stage runs `factor`x slower — permanently, or in on/off windows of
+    `period` microbatches (an elastic worker degrading and recovering)."""
+
+    slow_stage: int = 0
+    factor: float = 4.0
+    period: Optional[int] = None  # None = always slow; else alternate windows
+    fwd: float = 1.0
+    bwd: float = 2.0
+    comm: float = 0.0
+
+    def _latency(self, stage, op, mb):
+        base = {"fwd": self.fwd, "bwd": self.bwd}.get(op, self.comm)
+        if stage != self.slow_stage or op not in ("fwd", "bwd"):
+            return base
+        slow = self.period is None or (mb // self.period) % 2 == 0
+        return base * self.factor if slow else base
+
+
+class TraceDelay(DelayModel):
+    """Replay measured latencies: traces[op][stage] is a list cycled over mb.
+
+    `from_json(path)` loads {"fwd": [[...], ...], "bwd": ..., "comm": ...}.
+    """
+
+    def __init__(self, traces: dict):
+        self.traces = traces
+
+    @classmethod
+    def from_json(cls, path: str) -> "TraceDelay":
+        with open(path) as f:
+            return cls(json.load(f))
+
+    def _latency(self, stage, op, mb):
+        key = "comm" if op.startswith("comm") else op
+        per_stage = self.traces.get(key)
+        if not per_stage:
+            return 0.0 if key == "comm" else 1.0
+        row = per_stage[stage % len(per_stage)]
+        return float(row[mb % len(row)])
+
+
+def make_delay_model(spec: str | DelayModel | None, seed: int = 0) -> DelayModel:
+    """Parse a CLI-friendly spec:
+
+      "fixed" | "fixed:FWD,BWD,COMM" | "jitter:SIGMA" | "straggler:STAGE,FACTOR"
+      | "straggler:STAGE,FACTOR,PERIOD" | "trace:/path/to/traces.json"
+    """
+    if spec is None:
+        return FixedDelay()
+    if isinstance(spec, DelayModel):
+        return spec
+    name, _, args = spec.partition(":")
+    if name == "fixed":
+        vals = [float(x) for x in args.split(",")] if args else []
+        return FixedDelay(*vals)
+    if name == "jitter":
+        return JitterDelay(sigma=float(args) if args else 0.25, seed=seed)
+    if name == "straggler":
+        vals = args.split(",") if args else []
+        kw = {}
+        if len(vals) > 0:
+            kw["slow_stage"] = int(vals[0])
+        if len(vals) > 1:
+            kw["factor"] = float(vals[1])
+        if len(vals) > 2:
+            kw["period"] = int(vals[2])
+        return StragglerDelay(**kw)
+    if name == "trace":
+        return TraceDelay.from_json(args)
+    raise ValueError(f"unknown delay model spec {spec!r}")

@@ -34,6 +34,17 @@ class Method:
     def opt_kwargs(self):
         return dict(self.opt_kw)
 
+    @property
+    def tau_consuming(self) -> bool:
+        """True when the update math consumes the delay VALUE itself (not just
+        the stash selection): these methods react to the event runtime's
+        observed per-tick staleness, so their event-driven trajectories diverge
+        from the fixed-schedule jit engine during warmup/stragglers unless the
+        engine is driven with the same dynamic tau vector (step(..., taus=...))."""
+        return bool(self.lr_discount or self.grad_forecast
+                    or self.bwd_point == "pipemare_predict"
+                    or self.fwd_point == "xpipe_predict")
+
 
 METHODS = {}
 

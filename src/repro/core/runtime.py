@@ -1,0 +1,504 @@
+"""Event-driven asynchronous pipeline runtime (discrete-event execution).
+
+The jit engine (`core/engine.py`) replays the paper's *fixed* 1F1B staleness
+schedule tau_i = floor((2(P-i)+1)/2K) inside one compiled program. This module
+executes the pipeline the way a real deployment runs it:
+
+- per-stage workers with activation/cotangent mailboxes (`core/events.Mailbox`)
+  driven by a wall-clock event queue,
+- compute/communication latencies sampled from a `DelayModel`
+  (fixed | jitter | straggler | trace-replay),
+- in-order 1F1B scheduling with backward priority and per-stage in-flight
+  capacity P - s (microbatch units),
+- per-microbatch weight stashing (a dict keyed by microbatch id — the
+  real-system analogue of the engine's ring buffer; its peak size IS the
+  max observed delay + 1), and
+- the *observed* staleness of every update fed back into the method
+  (`AsyncTrainer._stage_update` with a live tau), so lr discounting, PipeMare
+  prediction and gradient forecasting react to stragglers and jitter instead
+  of assuming the closed-form schedule.
+
+Under a uniform `FixedDelay` model and K=1 the discipline reproduces the
+closed-form schedule exactly, so the runtime matches `AsyncTrainer`
+tick-for-tick (tests/test_runtime.py) — every paper result transfers to the
+event-driven execution path. `simulate_schedule` is the compute-free twin used
+for schedule dry-runs (launch/dryrun.py --sim-schedule) and benchmarks.
+
+Checkpointing: `export_state()` packs the runtime into an engine-compatible
+`AsyncState` (stashes re-warmed from the live forward point, runtime counters
+under a per-stage `extra["rt"]` dict), so `checkpoint.save/restore` round-trips
+and a run can resume under either execution path (staleness history resets on
+the switch, like `checkpoint.restage`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events, staged
+from repro.core import stash as stash_mod
+from repro.core.engine import AsyncState, AsyncTrainer
+
+
+@dataclasses.dataclass
+class RuntimeCfg:
+    # None -> events.FixedDelay(); or any events.DelayModel / spec string
+    delay_model: Optional[object] = None
+    # per-stage in-flight microbatch capacity: None -> 1F1B (P - s; 1 for sync
+    # methods). An int or tuple raises the buffer bound — elastic mailboxes let
+    # observed delays GROW behind a straggler instead of stalling the pipe.
+    in_flight: Optional[object] = None
+    record_timeline: bool = False
+    seed: int = 0  # forwarded to spec-string delay models
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    losses: list  # per tick (mean over the K microbatches of the update)
+    metrics: list  # per tick: {"loss", "lr", "tau_obs"}
+    taus: list  # per tick: tuple of per-stage observed delays (update units)
+    makespan: float  # simulated wall-clock of this run() call
+    utilization: tuple  # per-stage busy fraction of the makespan
+    max_stash: tuple  # per-stage peak stash entries (== max observed tau + 1)
+    max_tau_obs: tuple  # per-stage peak observed delay
+    timeline: Optional[list] = None  # (stage, op, mb, start, end) if recorded
+
+
+_SEED_CT = object()  # last stage's backward seeds its own cotangent
+
+
+class _StageWorker:
+    def __init__(self, idx, params, opt_state, extra, fwd_point, n_updates):
+        self.idx = idx
+        self.params = params
+        self.opt = opt_state
+        self.extra = extra
+        self.fwd_point = fwd_point  # latest stashed forward point
+        self.stash = {}  # mb -> (W_used, tau_obs): PipeDream stash, dict form
+        self.carries = {}  # mb -> input carry (VJP linearization point)
+        self.fwd_box = events.Mailbox()
+        self.bwd_box = events.Mailbox()
+        self.next_fwd = 0  # overwritten by the runtime (global mb index)
+        self.next_bwd = 0
+        self.n_updates = n_updates  # global update count (== engine tick)
+        self.acc = None  # gradient accumulator (K > 1)
+        self.acc_n = 0
+        self.acc_tau = []
+        self.busy_until = 0.0
+        self.busy_time = 0.0
+        self.max_stash = 0
+        self.max_tau = 0.0
+
+    @property
+    def in_flight(self):
+        return self.next_fwd - self.next_bwd
+
+
+class EventRuntime:
+    """Drives an AsyncTrainer's stages through the discrete-event loop.
+
+    The trainer supplies the math (stage fns, optimizer, method semantics via
+    `_stage_update`/`_bwd_weights`); the runtime supplies the execution order.
+    """
+
+    def __init__(self, trainer: AsyncTrainer, rcfg: Optional[RuntimeCfg] = None):
+        self.trainer = trainer
+        self.rcfg = rcfg or RuntimeCfg()
+        self.dm = events.make_delay_model(self.rcfg.delay_model, seed=self.rcfg.seed)
+        self.P = trainer.P
+        self.K = trainer.ecfg.update_interval
+        self.caps = self._resolve_caps()
+        self._stages = None
+        self._clock = 0.0
+        self._u_done = 0
+
+    def _resolve_caps(self) -> tuple:
+        P = self.P
+        if self.rcfg.in_flight is not None:
+            c = self.rcfg.in_flight
+            caps = tuple(int(x) for x in (c if isinstance(c, (tuple, list)) else (c,) * P))
+            if len(caps) != P or any(x < 1 for x in caps):
+                raise ValueError(f"in_flight must be {P} positive entries, got {caps}")
+            return caps
+        if self.trainer.method.sync:
+            return (1,) * P  # global barrier: one microbatch in the pipe
+        return tuple(P - s for s in range(P))  # 1F1B steady-state buffers
+
+    # -- state ----------------------------------------------------------------
+
+    def init(self, key) -> "EventRuntime":
+        return self.init_from_state(self.trainer.init(key))
+
+    def init_from_params(self, params) -> "EventRuntime":
+        return self.init_from_state(self.trainer.init_from_params(params))
+
+    def init_from_state(self, state: AsyncState) -> "EventRuntime":
+        """Adopt a drained AsyncState (fresh init or restored checkpoint)."""
+        if not hasattr(self.trainer, "stage_fns"):
+            raise RuntimeError(
+                "trainer has no stage fns; build the state via runtime.init / "
+                "init_from_params, or call trainer.init first when restoring")
+        t = int(state.step)
+        self._u_done = t
+        self._stages = []
+        for i in range(self.P):
+            extra = dict(state.extra[i])
+            rt = extra.pop("rt", None)
+            if rt is not None:
+                self._clock = float(rt["clock"])
+            # the engine pushes the tick-t forward point at slot t: that is the
+            # newest stash entry, i.e. the live forward point of this worker
+            fp = stash_mod.get(state.stashes[i], jnp.asarray(t, jnp.int32), 0,
+                               like=state.params[i])
+            st = _StageWorker(i, state.params[i], state.opt[i], extra, fp, t)
+            st.next_fwd = st.next_bwd = t * self.K
+            self._stages.append(st)
+        self._build_jits()
+        return self
+
+    def export_state(self, include_runtime: bool = True) -> AsyncState:
+        """Engine-compatible AsyncState (pipeline must be drained). Stashes are
+        re-warmed from the live forward point — staleness history resets, the
+        same documented behaviour as checkpoint.restage on elastic events."""
+        for st in self._stages:
+            if st.in_flight or st.stash or st.acc_n:
+                raise RuntimeError("export_state requires a drained pipeline")
+        params, stashes, opts, extras = [], [], [], []
+        for i, st in enumerate(self._stages):
+            params.append(st.params)
+            buf = stash_mod.init_stash(st.fwd_point, self.trainer._stash_depth(i),
+                                       dtype=self.trainer.ecfg.stash_dtype)
+            stashes.append(buf)
+            opts.append(st.opt)
+            e = dict(st.extra)
+            if include_runtime:
+                e["rt"] = {"n_updates": jnp.asarray(st.n_updates, jnp.int32),
+                           "max_tau_obs": jnp.asarray(st.max_tau, jnp.float32),
+                           "clock": jnp.asarray(self._clock, jnp.float32)}
+            extras.append(e)
+        return AsyncState(jnp.asarray(self._u_done, jnp.int32), tuple(params),
+                          tuple(stashes), tuple(opts), tuple(extras))
+
+    # -- jitted per-stage kernels ---------------------------------------------
+
+    def _build_jits(self):
+        fns = self.trainer.stage_fns
+        tr = self.trainer
+
+        def mk_fwd(f):
+            return jax.jit(lambda w, c, b: f(w, c, b))
+
+        def mk_bwd_mid(f):
+            def bwd(w, c, b, ct):
+                _, vjp = jax.vjp(lambda w_, c_: f(w_, c_, b), w, c)
+                gW, ct_in = vjp(ct)
+                return gW, ct_in
+
+            return jax.jit(bwd)
+
+        def mk_bwd_last(f):
+            def bwd(w, c, b):
+                out, vjp = jax.vjp(lambda w_, c_: f(w_, c_, b), w, c)
+                gW, ct_in = vjp(staged._loss_seed(out))
+                return gW, ct_in
+
+            return jax.jit(bwd)
+
+        def mk_upd(s):
+            def upd(params, grads, opt_state, extra, tau, t, W_stale):
+                return tr._stage_update(s, params, grads, opt_state, extra,
+                                        tau, t, W_stale=W_stale)
+
+            return jax.jit(upd)
+
+        self._fwd = [mk_fwd(f) for f in fns]
+        self._bwd_mid = [mk_bwd_mid(f) for f in fns]
+        self._bwd_last = mk_bwd_last(fns[-1])
+        self._upd = [mk_upd(s) for s in range(self.P)]
+
+    # -- microbatch plumbing ---------------------------------------------------
+
+    def _mb_batch(self, g: int):
+        u = g // self.K
+        ent = self._tick_batches.get(u)
+        if ent is None:
+            b = self._batch_fn(u)
+            slices = [jax.tree.map(lambda x: x[k], b) for k in range(self.K)]
+            ent = self._tick_batches[u] = [slices, self.K]
+        return ent[0][g - u * self.K]
+
+    def _release(self, g: int):
+        u = g // self.K
+        ent = self._tick_batches.get(u)
+        if ent is not None:
+            ent[1] -= 1
+            if ent[1] <= 0:
+                del self._tick_batches[u]
+
+    # -- the event loop --------------------------------------------------------
+
+    def run(self, batch_fn: Callable[[int], dict], n_ticks: int) -> RuntimeResult:
+        """Process n_ticks update intervals (n_ticks * K microbatches) through
+        completion. batch_fn(t) returns the engine-shaped per-tick batch with a
+        leading [K, ...] microbatch axis, so the two execution paths share data
+        pipelines. The pipeline drains before returning."""
+        if self._stages is None:
+            raise RuntimeError("call init/init_from_params/init_from_state first")
+        P, K = self.P, self.K
+        self._batch_fn = batch_fn
+        self._tick_batches = {}
+        self._losses = {}
+        self._taus_by_u = {}
+        self._timeline = [] if self.rcfg.record_timeline else None
+        u0 = self._u_done
+        g_end = (u0 + n_ticks) * K
+        t_start = self._clock
+        busy0 = [st.busy_time for st in self._stages]
+
+        q = events.EventQueue()
+        src = self._stages[0]
+        for g in range(u0 * K, g_end):
+            src.fwd_box.put(g, None)  # stage-0 input carry is synthesized fresh
+        q.push(self._clock, "free", 0)
+
+        while q:
+            batch_evs = q.pop_batch()
+            now = batch_evs[0].time
+            touched = set()
+            for ev in batch_evs:
+                st = self._stages[ev.stage]
+                if ev.kind == "fwd_arrive":
+                    st.fwd_box.put(ev.mb, ev.payload)
+                elif ev.kind == "bwd_arrive":
+                    st.bwd_box.put(ev.mb, ev.payload)
+                touched.add(ev.stage)
+            for s in sorted(touched):
+                self._dispatch(s, now, q, g_end)
+        self._clock = max(self._clock, max(st.busy_until for st in self._stages))
+
+        for st in self._stages:
+            if st.n_updates != u0 + n_ticks or st.in_flight or st.acc_n:
+                raise RuntimeError(
+                    f"stage {st.idx} ended at update {st.n_updates} with "
+                    f"{st.in_flight} in flight (expected {u0 + n_ticks}, 0): "
+                    "event loop did not drain")
+        self._u_done = u0 + n_ticks
+
+        losses, metrics, taus = [], [], []
+        for u in range(u0, u0 + n_ticks):
+            group = [self._losses[g] for g in range(u * K, (u + 1) * K)]
+            loss_u = float(np.mean(group))
+            tau_u = tuple(self._taus_by_u[u])
+            losses.append(loss_u)
+            taus.append(tau_u)
+            metrics.append({"loss": loss_u,
+                            "lr": float(self.trainer.lr_sched(jnp.asarray(u))),
+                            "tau_obs": tau_u})
+        span = self._clock - t_start
+        util = tuple((st.busy_time - b0) / span if span > 0 else 0.0
+                     for st, b0 in zip(self._stages, busy0))
+        return RuntimeResult(
+            losses=losses, metrics=metrics, taus=taus, makespan=span,
+            utilization=util,
+            max_stash=tuple(st.max_stash for st in self._stages),
+            max_tau_obs=tuple(st.max_tau for st in self._stages),
+            timeline=self._timeline)
+
+    def _dispatch(self, s: int, now: float, q: events.EventQueue, g_end: int):
+        st = self._stages[s]
+        if st.busy_until > now:
+            return
+        tr = self.trainer
+        # 1) backward priority, strictly in microbatch order
+        g = st.next_bwd
+        if st.bwd_box.ready(g):
+            ct = st.bwd_box.take(g)
+            W_used, tau_g = st.stash.pop(g)
+            carry_in = st.carries.pop(g)
+            b = self._mb_batch(g)
+            Wb = (W_used if tr.method.bwd_point == "stash"
+                  else tr._bwd_weights(s, st.params, st.extra, W_used, float(tau_g)))
+            if s == self.P - 1:
+                gW, ct_in = self._bwd_last(Wb, carry_in, b)
+            else:
+                gW, ct_in = self._bwd_mid[s](Wb, carry_in, b, ct)
+            st.next_bwd += 1
+            # accumulate exactly like staged.grad_accum: K == 1 passes grads
+            # through untouched; K > 1 casts to f32, sums in order, scales 1/K
+            if self.K == 1:
+                grads, ready = gW, True
+            else:
+                if st.acc is None:
+                    st.acc = jax.tree.map(lambda x: x.astype(jnp.float32), gW)
+                else:
+                    st.acc = jax.tree.map(lambda a, x: a + x.astype(a.dtype),
+                                          st.acc, gW)
+                st.acc_n += 1
+                ready = st.acc_n == self.K
+                grads = (jax.tree.map(lambda a: a * (1.0 / self.K), st.acc)
+                         if ready else None)
+            st.acc_tau.append(float(tau_g))
+            if ready:
+                u = st.n_updates
+                tau_u = float(np.mean(st.acc_tau))
+                np_, no_, ne_, fp_, _aux = self._upd[s](
+                    st.params, grads, st.opt, st.extra,
+                    jnp.asarray(tau_u, jnp.float32), jnp.asarray(u, jnp.int32),
+                    W_used)
+                st.params, st.opt, st.extra, st.fwd_point = np_, no_, dict(ne_), fp_
+                st.n_updates = u + 1
+                st.acc, st.acc_n, st.acc_tau = None, 0, []
+                self._taus_by_u.setdefault(u, [0.0] * self.P)[s] = tau_u
+            lat = self.dm.latency(s, "bwd", g)
+            done = now + lat
+            st.busy_until = done
+            st.busy_time += lat
+            q.push(done, "free", s)
+            if s > 0:
+                q.push(done + self.dm.latency(s, "comm_bwd", g),
+                       "bwd_arrive", s - 1, g, ct_in)
+            else:
+                self._release(g)
+            if self._timeline is not None:
+                self._timeline.append((s, "bwd", g, now, done))
+            return
+        # 2) forward: next expected microbatch, gated by in-flight capacity
+        g = st.next_fwd
+        if g < g_end and st.fwd_box.ready(g) and st.in_flight < self.caps[s]:
+            item = st.fwd_box.take(g)
+            carry_in = staged.init_carry() if s == 0 else item
+            b = self._mb_batch(g)
+            W = st.params if tr.method.sync else st.fwd_point
+            tau_g = g // self.K - st.n_updates  # observed staleness, update units
+            carry_out = self._fwd[s](W, carry_in, b)
+            st.stash[g] = (W, tau_g)
+            st.carries[g] = carry_in
+            st.max_stash = max(st.max_stash, len(st.stash))
+            st.max_tau = max(st.max_tau, float(tau_g))
+            st.next_fwd += 1
+            lat = self.dm.latency(s, "fwd", g)
+            done = now + lat
+            st.busy_until = done
+            st.busy_time += lat
+            q.push(done, "free", s)
+            if s < self.P - 1:
+                q.push(done + self.dm.latency(s, "comm_fwd", g),
+                       "fwd_arrive", s + 1, g, carry_out)
+            else:
+                self._losses[g] = float(carry_out["loss"])
+                q.push(done, "bwd_arrive", s, g, _SEED_CT)
+            if self._timeline is not None:
+                self._timeline.append((s, "fwd", g, now, done))
+
+
+# ---------------------------------------------------------------------------
+# compute-free schedule simulation (dryrun / capacity planning)
+# ---------------------------------------------------------------------------
+
+
+def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
+                      in_flight=None, sync: bool = False, seed: int = 0) -> dict:
+    """Run the runtime's 1F1B event discipline with no tensor math: returns
+    {"makespan", "utilization", "taus" (per-update per-stage observed),
+    "max_tau_obs", "max_stash"}. Same capacity and priority rules as
+    EventRuntime, so its fixed-delay taus equal core/delay.stage_delays
+    (asserted in tests/test_runtime.py); used by `launch/dryrun.py
+    --sim-schedule` to estimate straggler/jitter throughput without compiling
+    a model."""
+    dm = events.make_delay_model(delay_model, seed=seed)
+    if in_flight is not None:
+        caps = tuple(int(x) for x in (in_flight if isinstance(in_flight, (tuple, list))
+                                      else (in_flight,) * P))
+    else:
+        caps = (1,) * P if sync else tuple(P - s for s in range(P))
+    g_end = n_ticks * K
+
+    class _S:
+        __slots__ = ("next_fwd", "next_bwd", "n_updates", "busy_until",
+                     "busy_time", "fwd_box", "bwd_box", "stash", "acc_tau",
+                     "max_stash", "max_tau")
+
+        def __init__(self):
+            self.next_fwd = self.next_bwd = self.n_updates = 0
+            self.busy_until = self.busy_time = 0.0
+            self.fwd_box, self.bwd_box = events.Mailbox(), events.Mailbox()
+            self.stash = set()
+            self.acc_tau = []
+            self.max_stash, self.max_tau = 0, 0.0
+
+    stages = [_S() for _ in range(P)]
+    taus_by_u = {}
+    q = events.EventQueue()
+    tau_of = {}  # (stage, mb) -> observed tau at forward
+    for g in range(g_end):
+        stages[0].fwd_box.put(g, None)
+    q.push(0.0, "free", 0)
+
+    def dispatch(s, now):
+        st = stages[s]
+        if st.busy_until > now:
+            return
+        g = st.next_bwd
+        if st.bwd_box.ready(g):
+            st.bwd_box.take(g)
+            st.stash.discard(g)
+            st.next_bwd += 1
+            st.acc_tau.append(tau_of.pop((s, g)))
+            if len(st.acc_tau) == K:
+                taus_by_u.setdefault(st.n_updates, [0.0] * P)[s] = float(
+                    np.mean(st.acc_tau))
+                st.n_updates += 1
+                st.acc_tau = []
+            lat = dm.latency(s, "bwd", g)
+            st.busy_until = now + lat
+            st.busy_time += lat
+            q.push(st.busy_until, "free", s)
+            if s > 0:
+                q.push(st.busy_until + dm.latency(s, "comm_bwd", g),
+                       "bwd_arrive", s - 1, g)
+            return
+        g = st.next_fwd
+        if g < g_end and st.fwd_box.ready(g) and st.next_fwd - st.next_bwd < caps[s]:
+            st.fwd_box.take(g)
+            tau = g // K - st.n_updates
+            tau_of[(s, g)] = tau
+            st.stash.add(g)
+            st.max_stash = max(st.max_stash, len(st.stash))
+            st.max_tau = max(st.max_tau, float(tau))
+            st.next_fwd += 1
+            lat = dm.latency(s, "fwd", g)
+            st.busy_until = now + lat
+            st.busy_time += lat
+            q.push(st.busy_until, "free", s)
+            if s < P - 1:
+                q.push(st.busy_until + dm.latency(s, "comm_fwd", g),
+                       "fwd_arrive", s + 1, g)
+            else:
+                q.push(st.busy_until, "bwd_arrive", s, g)
+
+    while q:
+        evs = q.pop_batch()
+        now = evs[0].time
+        touched = set()
+        for ev in evs:
+            if ev.kind == "fwd_arrive":
+                stages[ev.stage].fwd_box.put(ev.mb, None)
+            elif ev.kind == "bwd_arrive":
+                stages[ev.stage].bwd_box.put(ev.mb, None)
+            touched.add(ev.stage)
+        for s in sorted(touched):
+            dispatch(s, now)
+
+    makespan = max(st.busy_until for st in stages)
+    return {
+        "makespan": makespan,
+        "utilization": tuple(st.busy_time / makespan if makespan else 0.0
+                             for st in stages),
+        "taus": [tuple(taus_by_u[u]) for u in range(n_ticks)],
+        "max_tau_obs": tuple(st.max_tau for st in stages),
+        "max_stash": tuple(st.max_stash for st in stages),
+    }

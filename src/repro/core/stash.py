@@ -3,6 +3,13 @@
 PipeDream-style weight stashing made functional: `push` writes slot (t mod depth),
 `get` reads slot ((t - tau) mod depth). No rolls — O(1) writes under jit, and the
 buffers shard like the params they stash (leading axis unsharded).
+
+Dynamic delays: `t` and `tau` may both be traced scalars, so one compiled
+program serves any per-tick tau_t <= depth - 1 — the jit engine's dynamic-tau
+path (`AsyncTrainer.step(..., taus=...)`) indexes the same ring with a live
+delay vector. Size the ring with `depth_for(max_tau)`; a tau larger than
+depth - 1 silently aliases a newer slot, so the depth bound is the caller's
+contract (EngineCfg.max_dynamic_delay).
 """
 from __future__ import annotations
 
@@ -22,6 +29,11 @@ def init_stash(tree, depth: int, dtype=None):
 
 def stash_depth(stash) -> int:
     return jax.tree.leaves(stash)[0].shape[0]
+
+
+def depth_for(max_tau: int) -> int:
+    """Ring depth covering every delay in 0..max_tau (= max observed delay)."""
+    return int(max_tau) + 1
 
 
 def push(stash, tree, t):

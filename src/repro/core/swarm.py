@@ -137,6 +137,87 @@ class SwarmTrainer:
     def jit_step(self):
         return jax.jit(self.step, donate_argnums=(0,))
 
+    # -- event-driven async mode ----------------------------------------------
+
+    def run_event(self, batch_fns, n_ticks: int, *, key=None, delay_models=None,
+                  rcfg=None, in_flight=None):
+        """Route the async SWARM modes through the event-driven runtime
+        (core/runtime.py): each replica is its own EventRuntime — its own
+        DelayModel, its own observed staleness — and every `sync_every` updates
+        the replica pipelines drain and stage weights average across replicas
+        (int8+error-feedback compressed when scfg.compress). This is the
+        deployment-shaped counterpart of the vmap jit path: heterogeneous
+        workers, real stragglers, periodic decentralized sync.
+
+        batch_fns: one batch_fn(t) -> [K, ...] per replica.
+        delay_models: optional per-replica DelayModel / spec string.
+        Returns {"losses": [R][n_ticks], "taus": [R] per-tick tuples,
+                 "n_syncs", "runtimes": the live EventRuntime objects}.
+        """
+        from repro.core import events as events_mod
+        from repro.core import runtime as rt_mod
+
+        R = self.scfg.replicas
+        if len(batch_fns) != R:
+            raise ValueError(f"need {R} batch fns, got {len(batch_fns)}")
+        base = self.inner.init(key if key is not None else jax.random.PRNGKey(0))
+        rts = []
+        for r in range(R):
+            if rcfg is not None:
+                # rcfg carries the shared knobs; per-replica delay model/seed
+                # still apply on top so heterogeneous workers stay heterogeneous
+                cfg_r = dataclasses.replace(rcfg, seed=r)
+                if delay_models is not None:
+                    cfg_r = dataclasses.replace(
+                        cfg_r, delay_model=events_mod.make_delay_model(
+                            delay_models[r], seed=r))
+            else:
+                cfg_r = rt_mod.RuntimeCfg(
+                    delay_model=events_mod.make_delay_model(
+                        delay_models[r] if delay_models else None, seed=r),
+                    in_flight=in_flight, seed=r)
+            rts.append(rt_mod.EventRuntime(self.inner, cfg_r).init_from_state(base))
+
+        err = [tuple(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), p)
+                     for p in base.params) if self.scfg.compress else
+               tuple({} for _ in base.params) for _ in range(R)]
+        losses = [[] for _ in range(R)]
+        taus = [[] for _ in range(R)]
+        n_syncs = 0
+        done = 0
+        while done < n_ticks:
+            chunk = min(self.scfg.sync_every, n_ticks - done)
+            for r in range(R):
+                res = rts[r].run(batch_fns[r], chunk)
+                losses[r].extend(res.losses)
+                taus[r].extend(res.taus)
+            done += chunk
+            # stage-wise weight averaging across the (drained) replicas
+            for i in range(self.inner.P):
+                stage_params = [rts[r]._stages[i].params for r in range(R)]
+                mean = jax.tree.map(
+                    lambda *xs: sum(x.astype(jnp.float32) for x in xs) / R,
+                    *stage_params)
+                for r in range(R):
+                    if self.scfg.compress:
+                        d_r = jax.tree.map(
+                            lambda mn, x: mn - x.astype(jnp.float32),
+                            mean, stage_params[r])
+                        dq, err_r = _quantize_int8_ef(d_r, err[r][i])
+                        newp = jax.tree.map(
+                            lambda x, d: (x.astype(jnp.float32) + d).astype(x.dtype),
+                            stage_params[r], dq)
+                        err[r] = err[r][:i] + (err_r,) + err[r][i + 1:]
+                    else:
+                        newp = jax.tree.map(
+                            lambda x, mn: mn.astype(x.dtype), stage_params[r], mean)
+                    rts[r]._stages[i].params = newp
+                    # the drained stash re-warms from the synced weights
+                    rts[r]._stages[i].fwd_point = newp
+            n_syncs += 1
+        return {"losses": losses, "taus": taus, "n_syncs": n_syncs,
+                "runtimes": rts, "err": err}
+
     def eval_loss(self, state: SwarmState, batch):
         """Loss of replica-0 weights (post-sync evaluation)."""
         params0 = tuple(jax.tree.map(lambda x: x[0], p) for p in state.inner.params)

@@ -222,6 +222,29 @@ def run_cell(arch, shape, *, multi_pod=False, method="ours", n_stages=4,
     return rec
 
 
+def sim_schedule_report(n_stages: int, accum: int, ticks: int, models: list) -> list:
+    """Compute-free pipeline-schedule dry-run: run the event runtime's 1F1B
+    discipline (core/runtime.simulate_schedule) under each delay model and
+    report makespan / per-stage utilization / observed-staleness envelope —
+    capacity planning for stragglers and jittery links without compiling a
+    single HLO."""
+    from repro.core.runtime import simulate_schedule
+
+    recs = []
+    for spec in models:
+        r = simulate_schedule(P=n_stages, K=accum, n_ticks=ticks, delay_model=spec)
+        recs.append({
+            "delay_model": spec,
+            "P": n_stages, "K": accum, "ticks": ticks,
+            "makespan": round(r["makespan"], 3),
+            "ticks_per_time": round(ticks / r["makespan"], 4),
+            "utilization": [round(u, 3) for u in r["utilization"]],
+            "max_tau_obs": list(r["max_tau_obs"]),
+            "max_stash": list(r["max_stash"]),
+        })
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -233,7 +256,22 @@ def main():
     ap.add_argument("--pod-mode", default="pp", choices=["pp", "dp"])
     ap.add_argument("--accum", type=int, default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--sim-schedule", action="store_true",
+                    help="event-runtime schedule simulation only (no compiles)")
+    ap.add_argument("--sim-ticks", type=int, default=100)
+    ap.add_argument("--sim-models", default="fixed;jitter:0.3;straggler:0,4.0",
+                    help="';'-separated delay-model specs (see core/events.py)")
     args = ap.parse_args()
+
+    if args.sim_schedule:
+        recs = sim_schedule_report(args.n_stages, args.accum or 1, args.sim_ticks,
+                                   args.sim_models.split(";"))
+        for rec in recs:
+            print(json.dumps(rec), flush=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(recs, f, indent=1)
+        return
 
     cells = []
     if args.all:

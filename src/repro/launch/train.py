@@ -7,12 +7,18 @@ Runs the async-PP engine on the available devices (CPU-friendly at reduced scale
 pjit-sharded under the production mesh when launched on a real TPU slice). All the
 fault-tolerance machinery is on: periodic checkpoints, exact resume, preemption-safe
 exit. On a multi-pod mesh, pass --multi-pod to use the cross-pod SPMD 1F1B pipeline.
+
+--runtime event swaps the single-jit stash-replay engine for the event-driven
+asynchronous runtime (core/runtime.py): per-stage workers, sampled latencies
+(--delay-model fixed|jitter:S|straggler:STAGE,FACTOR[,PERIOD]|trace:PATH), and
+observed-staleness feedback. Checkpoints remain engine-compatible AsyncStates.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import time
 
 import jax
 
@@ -20,6 +26,52 @@ from repro.configs import get_config
 from repro.core.engine import AsyncTrainer, EngineCfg
 from repro.data.synthetic import make_batch_fn
 from repro.ft import loop as ftloop
+
+
+def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None,
+                   seed=0, ckpt_dir=None, ckpt_every=0, log_every=0, log_fn=print):
+    """Event-runtime counterpart of ft.loop.train_loop: resume + periodic ckpt."""
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.core.runtime import EventRuntime, RuntimeCfg
+
+    import math
+
+    rt = EventRuntime(trainer, RuntimeCfg(delay_model=delay_model,
+                                          in_flight=in_flight, seed=seed))
+    rt.init(jax.random.PRNGKey(seed))
+    resumed_from = -1
+    if ckpt_dir:
+        path, step0 = ckpt.latest(ckpt_dir)
+        if path is not None:
+            # restore against the runtime-counter-free template so checkpoints
+            # written by EITHER execution path load (the jit engine's ckpts have
+            # no extra['rt']; init_from_state treats it as optional either way —
+            # only the simulated clock resets when resuming a jit-engine ckpt)
+            restored, meta = ckpt.restore(
+                path, rt.export_state(include_runtime=False))
+            rt.init_from_state(restored)
+            resumed_from = meta["step"]
+    res = ftloop.LoopResult(resumed_from=resumed_from)
+    t0 = time.time()
+    done = rt._u_done
+    # chunk at the gcd of the cadences so `done` lands exactly on every
+    # checkpoint/log boundary; save/log only on their own boundaries
+    cadence = math.gcd(ckpt_every if ckpt_dir else 0, log_every) or 25
+    while done < steps:
+        # align to the cadence grid (a resumed step may start off-boundary)
+        chunk = min(cadence - done % cadence, steps - done)
+        r = rt.run(batch_fn, chunk)
+        res.losses.extend(r.losses)
+        res.metrics.extend(r.metrics)
+        done = rt._u_done
+        at_end = done >= steps
+        if ckpt_dir and ckpt_every and (done % ckpt_every == 0 or at_end):
+            ckpt.save_step(ckpt_dir, rt.export_state(), done)
+        if log_every and (done % log_every == 0 or at_end):
+            log_fn(f"step {done}: loss={res.losses[-1]:.4f} "
+                   f"tau_obs={r.taus[-1]} util={tuple(round(u, 2) for u in r.utilization)}")
+    res.wall_s = time.time() - t0
+    return rt, res
 
 
 def main():
@@ -39,18 +91,33 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--runtime", default="jit", choices=["jit", "event"],
+                    help="jit = single-program stash-replay engine; "
+                         "event = discrete-event async runtime")
+    ap.add_argument("--delay-model", default="fixed",
+                    help="event runtime latency model (see core/events.py)")
+    ap.add_argument("--in-flight", type=int, default=None,
+                    help="event runtime per-stage buffer override (elastic)")
+    ap.add_argument("--max-dynamic-delay", type=int, default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     seq = args.seq or (64 if args.reduced else 512)
     ecfg = EngineCfg(n_stages=args.stages, update_interval=args.accum, lr=args.lr,
-                     warmup_steps=args.warmup, total_steps=args.steps)
+                     warmup_steps=args.warmup, total_steps=args.steps,
+                     max_dynamic_delay=args.max_dynamic_delay)
     trainer = AsyncTrainer(cfg, ecfg, args.method)
     batch_fn, src = make_batch_fn(cfg, args.accum, args.batch, seq, seed=args.seed)
-    state, res = ftloop.train_loop(
-        trainer, batch_fn, args.steps, ckpt_dir=args.ckpt_dir,
-        ckpt_every=args.ckpt_every, key=jax.random.PRNGKey(args.seed),
-        log_every=args.log_every)
+    if args.runtime == "event":
+        _, res = run_event_loop(
+            trainer, batch_fn, args.steps, delay_model=args.delay_model,
+            in_flight=args.in_flight, seed=args.seed, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, log_every=args.log_every)
+    else:
+        state, res = ftloop.train_loop(
+            trainer, batch_fn, args.steps, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, key=jax.random.PRNGKey(args.seed),
+            log_every=args.log_every)
     print(f"final loss: {res.losses[-1]:.4f}  (entropy floor ~{src.entropy_floor():.3f}, "
           f"{res.wall_s:.1f}s, resumed_from={res.resumed_from})")
     if args.out:

@@ -40,17 +40,24 @@ def push_history(state, grads, hist: int):
     return {"buf": buf, "count": t + 1}
 
 
-def _poly_design(hist: int, tau: float):
+def _poly_design(hist: int, tau):
     """Least-squares quadratic fit over t=0..hist-1, evaluated at t=hist-1+tau.
 
     Returns the weight vector w (length hist): prediction = w @ history.
+    tau may be a static number (design folded into a constant at trace time,
+    float64 numpy path — unchanged numerics) or a traced scalar (dynamic
+    per-tick delay: the evaluation point moves with tau inside the program).
     """
     t = np.arange(hist, dtype=np.float64)
     X = np.stack([np.ones_like(t), t, t * t], axis=1)  # [hist, 3]
     pinv = np.linalg.pinv(X)  # [3, hist]
-    tq = hist - 1 + tau
-    q = np.array([1.0, tq, tq * tq])  # [3]
-    return jnp.asarray(q @ pinv, jnp.float32)  # [hist]
+    if isinstance(tau, (int, float)):
+        tq = hist - 1 + float(tau)
+        q = np.array([1.0, tq, tq * tq])  # [3]
+        return jnp.asarray(q @ pinv, jnp.float32)  # [hist]
+    tq = jnp.asarray(tau, jnp.float32) + (hist - 1)
+    q = jnp.stack([jnp.ones_like(tq), tq, tq * tq])  # [3]
+    return q @ jnp.asarray(pinv, jnp.float32)  # [hist]
 
 
 def polyfft_predict(state, hist: int, tau: float, fft_weight=0.5):

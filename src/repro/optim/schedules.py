@@ -22,13 +22,16 @@ def constant(base_lr):
     return lambda t: jnp.asarray(base_lr, jnp.float32)
 
 
-def lr_discount_factor(tau_i: int, t, T: int):
+def lr_discount_factor(tau_i, t, T: int):
     """Eq. 13: eta_i^t = eta / tau_i^rho_t, rho_t = 1 - min(t/T, 1).
 
     Returns the multiplicative factor (<=1) for stage i with delay tau_i; the
     correction anneals away over the first T steps (PipeMare / Yang et al. 2021).
+    tau_i may be a static int (fixed Eq. 5 schedule) or a traced scalar (the
+    per-tick observed delay fed back by the event runtime); tau_i <= 1 is a
+    no-op factor of 1 either way.
     """
-    tau = max(float(tau_i), 1.0)
+    tau = jnp.maximum(jnp.asarray(tau_i, jnp.float32), 1.0)
     tf = t.astype(jnp.float32) if hasattr(t, "astype") else jnp.asarray(t, jnp.float32)
     rho = 1.0 - jnp.minimum(tf / max(T, 1), 1.0)
     return tau ** (-rho)

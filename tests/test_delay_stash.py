@@ -56,6 +56,49 @@ def test_stash_replays_history(depth, n_steps, tau):
             np.testing.assert_allclose(g, w)
 
 
+@settings(max_examples=20, deadline=None)
+@given(P=st.integers(1, 8), K=st.integers(1, 4), seed=st.integers(0, 99999))
+def test_dynamic_tau_stash_replay_matches_eq7(P, K, seed):
+    """Eq. 7 generalized to ARBITRARY dynamic delay sequences: with one ring per
+    stage (depth = max schedule delay + 1, pushes every tick like the engine),
+    get(t, tau_i^t) returns EXACTLY the forward point pushed at tick t - tau_i^t
+    for any per-tick tau vector bounded by the ring depth — the staggered stale
+    weights w^{t-tau_1}, ..., w^{t-tau_P}, warmup-clamped to the init point."""
+    rng = np.random.default_rng(seed)
+    depth = delay.max_delay(P, K) + 1
+    base = {"w": jnp.arange(3.0), "b": {"x": jnp.ones((2, 2))}}
+
+    def version(v):  # distinct, recognisable content per pushed tick
+        return jax.tree.map(lambda x: x + 10.0 * v, base)
+
+    bufs = [stash.init_stash(base, depth) for _ in range(P)]
+    n_steps = int(rng.integers(3, 3 * depth + 4))
+    for t in range(n_steps):
+        # an arbitrary dynamic tau vector for this tick (any value the ring can
+        # hold — not required to follow the Eq. 5 schedule or be monotone)
+        tau_t = rng.integers(0, depth, size=P)
+        for i in range(P):
+            got = stash.get(bufs[i], jnp.asarray(t), jnp.asarray(int(tau_t[i])))
+            want = version(max(t - int(tau_t[i]), 0))
+            for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        for i in range(P):
+            bufs[i] = stash.push(bufs[i], version(t + 1), jnp.asarray(t + 1))
+
+
+def test_validate_taus():
+    assert delay.validate_taus((3, 2, 1, 0), 4) == (3, 2, 1, 0)
+    with pytest.raises(ValueError, match="one entry per pipeline stage"):
+        delay.validate_taus((1, 0), 4)
+    with pytest.raises(ValueError, match=">= 0"):
+        delay.validate_taus((1, -1), 2)
+
+
+def test_depth_for():
+    assert stash.depth_for(0) == 1
+    assert stash.depth_for(7) == 8
+
+
 def test_stash_dtype_cast():
     tree = {"w": jnp.ones((4,), jnp.float32)}
     buf = stash.init_stash(tree, 2, dtype=jnp.bfloat16)

@@ -1,0 +1,296 @@
+"""Event-driven runtime: simulation-vs-engine equivalence suite.
+
+The headline contract (ISSUE 2): under a *fixed* uniform DelayModel the
+discrete-event 1F1B runtime reproduces the single-jit stash-replay engine
+tick-for-tick — identical loss/parameter trajectories within fp tolerance — so
+every paper result transfers to the event-driven execution path. Stochastic
+delay models then exercise the dynamic-tau machinery: observed staleness varies
+per tick, the per-microbatch stash grows exactly to the max observed delay + 1,
+and the jit engine's dynamic-tau path (step(..., taus=...)) replays the
+runtime's observed schedule bit-for-bit through the same ring buffers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import delay
+from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.core.events import (FixedDelay, JitterDelay, StragglerDelay,
+                               make_delay_model)
+from repro.core.runtime import EventRuntime, RuntimeCfg, simulate_schedule
+from repro.models import lm
+
+N_TICKS = 20
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("nanogpt_134m", reduced=True)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 4, 33), 0, cfg.vocab_size)
+    batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    return cfg, params, batch
+
+
+def _ecfg(**kw):
+    kw.setdefault("n_stages", 4)
+    kw.setdefault("lr", 1e-3)
+    kw.setdefault("constant_lr", True)
+    kw.setdefault("collect_metrics", False)
+    return EngineCfg(**kw)
+
+
+# ---- schedule-level equivalence ---------------------------------------------
+
+
+@pytest.mark.parametrize("P,K", [(1, 1), (2, 1), (4, 1), (8, 1), (4, 2), (8, 4)])
+def test_schedule_sim_reaches_eq5_steady_state(P, K):
+    """Fixed uniform delays: the event discipline's steady-state observed taus
+    are exactly the closed-form schedule of Eq. 5 (K=1; within the accumulation
+    floor for K>1), and peak stash size is tau_i + 1 (the engine's ring depth)."""
+    sim = simulate_schedule(P=P, K=K, n_ticks=4 * P + 8)
+    want = delay.stage_delays(P, K)
+    got = sim["taus"][-1]
+    if K == 1:
+        assert tuple(int(t) for t in got) == want
+        assert sim["max_stash"] == tuple(t + 1 for t in want)
+    else:
+        # accumulation averages the microbatch delays: within 1 update of Eq. 5
+        assert all(abs(g - w) <= 1.0 for g, w in zip(got, want))
+    assert all(0.0 < u <= 1.0 + 1e-9 for u in sim["utilization"])
+    # observed staleness is monotone non-increasing along the pipeline
+    assert all(got[s] >= got[s + 1] for s in range(P - 1))
+
+
+def test_schedule_sim_straggler_grows_delay():
+    """A straggling stage with elastic buffers converts slowness into observed
+    delay (the async-PP story): upstream taus grow past the Eq. 5 schedule."""
+    base = simulate_schedule(P=4, n_ticks=40)
+    slow = simulate_schedule(P=4, n_ticks=40, delay_model="straggler:1,5.0",
+                             in_flight=8)
+    assert max(slow["max_tau_obs"]) > max(base["max_tau_obs"])
+    assert slow["max_stash"][0] == slow["max_tau_obs"][0] + 1
+    # the straggler itself is the busy one; everyone else waits
+    assert slow["utilization"][1] > slow["utilization"][0]
+
+
+# ---- engine equivalence (the headline test) ---------------------------------
+
+
+@pytest.mark.parametrize("method", ["ours", "pipedream", "gpipe"])
+def test_event_runtime_matches_engine_fixed_delays(setup, method):
+    """FixedDelay + K=1: event-driven losses == jit-engine losses over
+    N_TICKS >= 20 ticks (atol 1e-5), and final params agree."""
+    cfg, params, batch = setup
+    ecfg = _ecfg()
+    tr = AsyncTrainer(cfg, ecfg, method)
+    s = tr.init_from_params(params)
+    step = tr.jit_step(donate=False)
+    eng_losses = []
+    for _ in range(N_TICKS):
+        s, m = step(s, batch)
+        eng_losses.append(float(m["loss"]))
+
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, method))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, N_TICKS)
+
+    np.testing.assert_allclose(res.losses, eng_losses, rtol=1e-5, atol=1e-5)
+    if method != "gpipe":
+        # steady-state observed schedule == Eq. 5
+        assert tuple(int(t) for t in res.taus[-1]) == tr.taus
+        assert res.max_stash == tuple(t + 1 for t in tr.taus)
+    for a, b in zip(jax.tree.leaves(s.params),
+                    jax.tree.leaves(rt.export_state(include_runtime=False).params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_bwd_heavy_latencies_preserve_equivalence(setup):
+    """The discipline (capacity + backward priority + in-order), not the exact
+    latencies, pins the schedule: a 3x-backward-cost fixed model still matches."""
+    cfg, params, batch = setup
+    ecfg = _ecfg()
+    tr = AsyncTrainer(cfg, ecfg, "ours")
+    s = tr.init_from_params(params)
+    step = tr.jit_step(donate=False)
+    eng = []
+    for _ in range(10):
+        s, m = step(s, batch)
+        eng.append(float(m["loss"]))
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
+                      RuntimeCfg(delay_model=FixedDelay(fwd=1.0, bwd=3.0, comm=0.5)))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 10)
+    np.testing.assert_allclose(res.losses, eng, rtol=1e-5, atol=1e-5)
+
+
+def test_observed_taus_drive_dynamic_engine(setup):
+    """Tau-consuming method (lr discount): the jit engine's dynamic-tau path,
+    fed the runtime's OBSERVED per-tick schedule (warmup included), reproduces
+    the event-driven trajectory — the generalized stash replays Eq. 7 under
+    arbitrary tau_t."""
+    cfg, params, batch = setup
+    ecfg = _ecfg(max_dynamic_delay=4)
+    assert AsyncTrainer(cfg, ecfg, "ours_lr").method.tau_consuming
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours_lr"))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 12)
+    # warmup: observed staleness ramps 0 -> tau_i instead of assuming Eq. 5
+    assert tuple(res.taus[0]) == (0.0, 0.0, 0.0, 0.0)
+    assert tuple(int(t) for t in res.taus[-1]) == (3, 2, 1, 0)
+
+    tr = AsyncTrainer(cfg, ecfg, "ours_lr")
+    s = tr.init_from_params(params)
+    step = tr.jit_step(donate=False)
+    eng = []
+    for t in range(12):
+        taus_t = jnp.asarray(np.array(res.taus[t]), jnp.int32)
+        s, m = step(s, batch, taus_t)
+        eng.append(float(m["loss"]))
+    np.testing.assert_allclose(res.losses, eng, rtol=1e-5, atol=1e-5)
+
+
+# ---- stochastic delays: dynamic tau + stash-depth contract ------------------
+
+
+@pytest.mark.parametrize("dm,in_flight", [
+    (JitterDelay(sigma=0.5, seed=3), None),
+    (StragglerDelay(slow_stage=1, factor=5.0), 8),
+    (make_delay_model("straggler:0,3.0,6"), 6),
+])
+def test_stochastic_delays_dynamic_tau(setup, dm, in_flight):
+    cfg, params, batch = setup
+    rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                      RuntimeCfg(delay_model=dm, in_flight=in_flight))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 14)
+    assert np.isfinite(res.losses).all()
+    # stash depth == max observed delay + 1, per stage, never beyond capacity
+    caps = rt.caps
+    for s in range(4):
+        assert res.max_stash[s] == int(res.max_tau_obs[s]) + 1
+        assert res.max_stash[s] <= caps[s]
+    # delays actually moved (a straggler/jitter run is not the fixed schedule)
+    flat = {tuple(t) for t in res.taus}
+    assert len(flat) > 1
+
+
+def test_straggler_grows_observed_delay_beyond_schedule(setup):
+    cfg, params, batch = setup
+    rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                      RuntimeCfg(delay_model=StragglerDelay(slow_stage=1, factor=5.0),
+                                 in_flight=8))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 14)
+    assert res.max_tau_obs[0] > delay.max_delay(4, 1)  # beyond Eq. 5's tau_1
+    assert res.max_stash[0] == int(res.max_tau_obs[0]) + 1
+
+
+def test_grad_accum_runtime_runs(setup):
+    """K=2 accumulation: per-stage grads accumulate over K microbatches before
+    each update; observed taus shrink toward Eq. 5's 1/K scaling."""
+    cfg, params, _ = setup
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 4, 33), 0, cfg.vocab_size)
+    batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    ecfg = _ecfg(update_interval=2)
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 8)
+    assert np.isfinite(res.losses).all()
+    want = delay.stage_delays(4, 2)
+    got = res.taus[-1]
+    assert all(abs(g - w) <= 1.0 for g, w in zip(got, want))
+    assert all(got[s] >= got[s + 1] for s in range(3))
+
+
+# ---- checkpointing ----------------------------------------------------------
+
+
+def test_runtime_checkpoint_roundtrip(setup, tmp_path):
+    """Runtime state (counters in AsyncState.extra['rt']) save/restores exactly;
+    the resumed run replays the original trajectory bit-for-bit."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    cfg, params, batch = setup
+    ecfg = _ecfg()
+    batch_fn = lambda t: batch
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
+    rt.init_from_params(params)
+    rt.run(batch_fn, 4)
+    path = str(tmp_path / "rt.npz")
+    ckpt.save(path, rt.export_state(), 4)
+
+    rt2 = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
+    template = rt2.init_from_params(params).export_state()
+    restored, meta = ckpt.restore(path, template)
+    assert meta["step"] == 4
+    rt2.init_from_state(restored)
+    assert rt2._u_done == 4
+    r1 = rt.run(batch_fn, 4)
+    r2 = rt2.run(batch_fn, 4)
+    np.testing.assert_array_equal(r1.losses, r2.losses)
+
+
+def test_simulate_schedule_agrees_with_runtime_under_jitter(setup):
+    """The compute-free planner and the real runtime implement ONE discipline:
+    under the same keyed stochastic delay model they produce identical observed
+    tau schedules and stash high-water marks, event for event."""
+    cfg, params, batch = setup
+    dm = JitterDelay(sigma=0.6, seed=11)
+    rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                      RuntimeCfg(delay_model=dm))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 12)
+    sim = simulate_schedule(P=4, K=1, n_ticks=12, delay_model=dm)
+    assert [tuple(t) for t in sim["taus"]] == [tuple(t) for t in res.taus]
+    assert tuple(sim["max_stash"]) == res.max_stash
+    assert tuple(sim["max_tau_obs"]) == res.max_tau_obs
+    np.testing.assert_allclose(sim["makespan"], res.makespan, rtol=1e-9)
+
+
+def test_jit_engine_checkpoint_resumes_under_event_runtime(setup, tmp_path):
+    """Cross-path resume: a checkpoint written by the jit-engine loop (no
+    extra['rt'] counters) restores into the event runtime via the
+    counter-free template, exactly as launch/train.py --runtime event does."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    cfg, params, batch = setup
+    ecfg = _ecfg()
+    tr = AsyncTrainer(cfg, ecfg, "ours")
+    s = tr.init_from_params(params)
+    step = tr.jit_step(donate=False)
+    for _ in range(3):
+        s, _ = step(s, batch)
+    ckpt.save_step(str(tmp_path), s, 3)
+
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
+    rt.init_from_params(params)
+    path, _ = ckpt.latest(str(tmp_path))
+    restored, meta = ckpt.restore(path, rt.export_state(include_runtime=False))
+    assert meta["step"] == 3
+    rt.init_from_state(restored)
+    assert rt._u_done == 3
+    res = rt.run(lambda t: batch, 3)
+    assert np.isfinite(res.losses).all()
+
+
+def test_runtime_state_loads_into_jit_engine(setup):
+    """export_state(include_runtime=False) is a plain engine AsyncState: the
+    jit engine resumes from an event-runtime run (staleness history re-warmed,
+    like checkpoint.restage on elastic events)."""
+    cfg, params, batch = setup
+    ecfg = _ecfg()
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
+    rt.init_from_params(params)
+    rt.run(lambda t: batch, 5)
+    state = rt.export_state(include_runtime=False)
+    tr = AsyncTrainer(cfg, ecfg, "ours")
+    tr.init_from_params(params)  # builds stage fns
+    step = tr.jit_step(donate=False)
+    assert int(state.step) == 5
+    for _ in range(3):
+        state, m = step(state, batch)
+        assert np.isfinite(float(m["loss"]))
