@@ -1,10 +1,13 @@
 """Kernel microbenchmarks + end-to-end engine-tick dispatch benchmark.
 
-Micro rows: pallas (interpret on CPU) vs pure-jnp oracle per kernel. The
-`engine_tick/*` rows time a full AsyncTrainer 'ours' tick with the dispatch
-layer set to 'ref' (unfused tree-map optimizer + unfused XLA model ops) vs the
-dispatched backend (fused flat-buffer nag_update + fused model kernels), so the
-fused-path win is measured end to end rather than asserted.
+Micro rows: per kernel, a ``fwd`` row (pallas interpret on CPU vs the pure-jnp
+oracle) and a ``bwd`` row (jax.grad through dispatch_grad — the dedicated
+backward kernels where registered — vs ref autodiff). The ``engine_tick_fwd_bwd/*``
+rows time a full AsyncTrainer 'ours' tick — forward AND backward AND optimizer
+— with the dispatch layer set to 'ref' (unfused tree-map optimizer + unfused
+XLA model ops) vs the dispatched backend (fused flat-buffer nag_update + fused
+model kernels fwd+bwd), so the fused-path win is measured end to end rather
+than asserted.
 
 Wall-times on CPU interpret mode are NOT TPU perf — correctness + call-overhead
 tracking only; the TPU perf story is in the roofline analysis. On CPU the
@@ -12,6 +15,9 @@ engine-tick comparison therefore defaults to pitting 'ref' against the fused
 path with --engine-backend=ref semantics (same backend, fused vs tree-map
 optimizer), isolating the pass-count effect the flat buffer exists for; pass
 --engine-backend=pallas on TPU for the real fused-kernel tick.
+
+Every run also writes ``artifacts/BENCH_kernels.json`` (machine-readable rows +
+environment metadata) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -21,7 +27,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from common import emit_csv
+from common import emit_csv, save_json
+from repro.kernels import dispatch as kdispatch
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.nag_update import nag_update
@@ -32,11 +39,24 @@ from repro.kernels.ssd_scan import ssd_scan
 def timeit(fn, *a, n=5, **kw):
     out = fn(*a, **kw)
     jax.block_until_ready(out)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(n):
         out = fn(*a, **kw)
     jax.block_until_ready(out)
-    return (time.time() - t0) / n * 1e6
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _grad_pair(name, args, kwargs):
+    """(kernel-bwd grad fn, ref-autodiff grad fn) for op `name`, both jitted."""
+    def loss(backend):
+        def f(*xs):
+            out = kdispatch.dispatch_grad(name, *xs, backend=backend, **kwargs)
+            return sum(jnp.sum(l.astype(jnp.float32)) for l in jax.tree.leaves(out))
+        return f
+
+    argnums = tuple(range(len(args)))
+    return (jax.jit(jax.grad(loss("interpret"), argnums=argnums)),
+            jax.jit(jax.grad(loss("ref"), argnums=argnums)))
 
 
 def micro_rows():
@@ -47,11 +67,15 @@ def micro_rows():
     q = jax.random.normal(key, (B, H, S, d))
     k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, S, d))
     v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, S, d))
-    fa = jax.jit(lambda *x: flash_attention(*x, causal=True, block_q=128, block_k=128))
+    attn_kw = dict(causal=True, block_q=128, block_k=128)
+    fa = jax.jit(lambda *x: flash_attention(*x, **attn_kw))
     fr = jax.jit(lambda *x: ref.attention_ref(*x, causal=True))
     err = float(jnp.max(jnp.abs(fa(q, k, v) - fr(q, k, v))))
-    rows.append(("kernel/flash_attention", round(timeit(fa, q, k, v), 1),
+    rows.append(("kernel/flash_attention/fwd", round(timeit(fa, q, k, v), 1),
                  f"ref_us={timeit(fr, q, k, v):.1f};maxerr={err:.1e}"))
+    gk, gr = _grad_pair("flash_attention", (q, k, v), attn_kw)
+    rows.append(("kernel/flash_attention/bwd", round(timeit(gk, q, k, v), 1),
+                 f"ref_us={timeit(gr, q, k, v):.1f}"))
 
     b, S2, Hh, P, G, N = 1, 512, 4, 32, 1, 32
     x = jax.random.normal(key, (b, S2, Hh, P))
@@ -62,8 +86,11 @@ def micro_rows():
     sk = jax.jit(lambda *a_: ssd_scan(*a_, chunk=128)[0])
     sr = jax.jit(lambda *a_: ref.ssd_ref(*a_)[0])
     err = float(jnp.max(jnp.abs(sk(x, dt, A, B_, C_) - sr(x, dt, A, B_, C_))))
-    rows.append(("kernel/ssd_scan", round(timeit(sk, x, dt, A, B_, C_), 1),
+    rows.append(("kernel/ssd_scan/fwd", round(timeit(sk, x, dt, A, B_, C_), 1),
                  f"ref_us={timeit(sr, x, dt, A, B_, C_):.1f};maxerr={err:.1e}"))
+    gk, gr = _grad_pair("ssd_scan", (x, dt, A, B_, C_), dict(chunk=128))
+    rows.append(("kernel/ssd_scan/bwd", round(timeit(gk, x, dt, A, B_, C_), 1),
+                 f"ref_us={timeit(gr, x, dt, A, B_, C_):.1f}"))
 
     n = 1 << 16
     p = jax.random.normal(key, (n,))
@@ -75,8 +102,13 @@ def micro_rows():
     nr = jax.jit(lambda *a_: ref.nag_update_ref(*a_, b1=0.99, b2=0.95, eps=1e-8,
                                                 wd=0.01, **kw)[0])
     err = float(jnp.max(jnp.abs(nk(p, m, v2, g) - nr(p, m, v2, g))))
-    rows.append(("kernel/nag_update", round(timeit(nk, p, m, v2, g), 1),
+    rows.append(("kernel/nag_update/fwd", round(timeit(nk, p, m, v2, g), 1),
                  f"ref_us={timeit(nr, p, m, v2, g):.1f};maxerr={err:.1e}"))
+    # nag_update is an optimizer step, not a differentiated-through model op —
+    # its bwd is the ref-VJP fallback; time it anyway for fallback-cost tracking
+    gk, gr = _grad_pair("nag_update", (p, m, v2, g), dict(**kw, block=1024))
+    rows.append(("kernel/nag_update/bwd", round(timeit(gk, p, m, v2, g), 1),
+                 f"ref_us={timeit(gr, p, m, v2, g):.1f};fallback=ref_vjp"))
 
     x = jax.random.normal(key, (8, 128, 256))
     h = jax.random.normal(jax.random.fold_in(key, 8), (8, 128, 256))
@@ -84,24 +116,27 @@ def micro_rows():
     rk = jax.jit(lambda *a_: rmsnorm_residual(*a_)[1])
     rr = jax.jit(lambda *a_: rmsnorm_residual_ref(*a_)[1])
     err = float(jnp.max(jnp.abs(rk(x, h, sc) - rr(x, h, sc))))
-    rows.append(("kernel/rmsnorm_residual", round(timeit(rk, x, h, sc), 1),
+    rows.append(("kernel/rmsnorm_residual/fwd", round(timeit(rk, x, h, sc), 1),
                  f"ref_us={timeit(rr, x, h, sc):.1f};maxerr={err:.1e}"))
+    gk, gr = _grad_pair("rmsnorm_residual", (x, h, sc), {})
+    rows.append(("kernel/rmsnorm_residual/bwd", round(timeit(gk, x, h, sc), 1),
+                 f"ref_us={timeit(gr, x, h, sc):.1f}"))
     return rows
 
 
 def engine_tick_rows(backend: str, ticks: int = 10):
-    """Full engine ticks, dispatched vs unfused: the end-to-end number.
+    """Full engine ticks (fwd+bwd+optimizer), dispatched vs unfused: the
+    end-to-end number.
 
     'ref' row: kernel_backend='ref' + tree-map optimizer (the seed hot path).
     'dispatched' row: kernel_backend=backend, fused flat-buffer optimizer (+
-    fused model kernels when backend != 'ref').
+    fused model kernels, forward and backward, when backend != 'ref').
     """
     import os
 
     from repro.configs import get_config
     from repro.core.engine import AsyncTrainer, EngineCfg
     from repro.data.synthetic import make_batch_fn
-    from repro.kernels import dispatch as kdispatch
 
     # the env var would override BOTH rows' cfg fields and silently turn the
     # 'unfused' baseline into the dispatched backend — clear it for the measure
@@ -119,11 +154,11 @@ def engine_tick_rows(backend: str, ticks: int = 10):
         batch_fn, _ = make_batch_fn(cfg, 1, 8, 64, seed=0)
         state, m = step(state, batch_fn(0))  # compile
         jax.block_until_ready(m["loss"])
-        t0 = time.time()
+        t0 = time.perf_counter()
         for i in range(ticks):
             state, m = step(state, batch_fn(i))
         jax.block_until_ready(m["loss"])
-        return (time.time() - t0) / ticks * 1e6, tr.opt.kind
+        return (time.perf_counter() - t0) / ticks * 1e6, tr.opt.kind
 
     try:
         base_us, base_kind = tick_us("ref", False)
@@ -132,8 +167,9 @@ def engine_tick_rows(backend: str, ticks: int = 10):
         if env_backend is not None:
             os.environ[kdispatch.ENV_VAR] = env_backend
     return [
-        ("engine_tick/unfused", round(base_us, 1), f"opt={base_kind};backend=ref"),
-        ("engine_tick/dispatched", round(disp_us, 1),
+        ("engine_tick_fwd_bwd/unfused", round(base_us, 1),
+         f"opt={base_kind};backend=ref"),
+        ("engine_tick_fwd_bwd/dispatched", round(disp_us, 1),
          f"opt={disp_kind};backend={backend};speedup={base_us / disp_us:.2f}x"),
     ]
 
@@ -150,6 +186,14 @@ def main():
     if not args.skip_engine:
         rows += engine_tick_rows(args.engine_backend, ticks=args.ticks)
     emit_csv(rows)
+    save_json("BENCH_kernels.json", {
+        "meta": {"platform": jax.default_backend(),
+                 "jax": jax.__version__,
+                 "engine_backend": None if args.skip_engine else args.engine_backend,
+                 "ticks": args.ticks},
+        "rows": [{"name": nm, "us_per_call": us, "derived": dv}
+                 for nm, us, dv in rows],
+    })
     return rows
 
 

@@ -18,16 +18,23 @@ Selection precedence (first hit wins):
 Resolution is plain Python (env + static config), so the chosen branch is fixed
 at trace time and jit caches per backend.
 
-Autodiff: Pallas kernels define no VJP, so training call sites use
-``dispatch_grad`` — forward through the selected backend, backward through the
-VJP of the *reference* implementation linearized at the same inputs (exact
-because the kernels are numerically faithful re-implementations of the refs;
-remat of the ref forward inside the backward is the standard cost). Dedicated
-backward kernels are future work (DESIGN.md §8).
+Autodiff: training call sites use ``dispatch_grad``. Ops that register a
+dedicated backward (``fwd_res`` + ``bwd``: flash-attention dq/dk/dv, the SSD
+reverse scan, the fused rmsnorm-residual backward) run forward AND backward
+through Pallas: the forward saves compact kernel residuals (e.g. (o, lse)
+instead of the S x S score matrix) and the backward is its own kernel pass.
+Ops without a registered backward fall back to the VJP of the *reference*
+implementation linearized at the same inputs (exact because the kernels are
+numerically faithful re-implementations of the refs; remat of the ref forward
+inside the backward is the cost — the pre-backward-kernel behavior). The
+``custom_vjp`` wrapper for each (op, backend, static-kwargs) triple is built
+once and memoized (``_VJP_CACHE``) so every call site traces the same callable
+and jit caches are shared. See DESIGN.md §8 for the residual policy per op.
 
 Each registry entry also carries parity cases — input builders spanning
 tile-aligned, ragged, and multi-dtype shapes — which tests/test_kernel_parity.py
-auto-discovers, so adding a kernel here buys its differential test for free.
+auto-discovers, so adding a kernel here buys its differential forward AND
+gradient test for free.
 """
 from __future__ import annotations
 
@@ -40,10 +47,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.flash_attention import (flash_attention as _flash_attention,
+                                           flash_attention_bwd as _flash_attention_bwd)
 from repro.kernels.nag_update import nag_update as _nag_update
-from repro.kernels.rmsnorm_residual import rmsnorm_residual as _rmsnorm_residual
-from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+from repro.kernels.rmsnorm_residual import (rmsnorm_residual as _rmsnorm_residual,
+                                            rmsnorm_residual_bwd as _rmsnorm_residual_bwd)
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan, ssd_scan_bwd as _ssd_scan_bwd
 
 ENV_VAR = "REPRO_KERNEL_BACKEND"
 BACKENDS = ("pallas", "interpret", "ref")
@@ -55,33 +64,59 @@ class ParityCase:
 
     ``make(key, dtype)`` returns ``(args, kwargs)``; ``dtype`` is applied to the
     op's activation/gradient-like inputs (state stays fp32, as in training).
+    ``tol_*`` bound the forward outputs; ``grad_tol_*`` bound the gradients
+    (defaulting to the forward tolerances when unset) — gradient comparisons are
+    scale-normalized by the harness, so these are relative-class tolerances.
     """
 
     label: str
     make: Callable[[jax.Array, Any], Tuple[tuple, dict]]
     tol_f32: float = 2e-5
     tol_bf16: float = 2e-2
+    grad_tol_f32: Optional[float] = None
+    grad_tol_bf16: Optional[float] = None
 
     def tol(self, dtype) -> float:
         return self.tol_bf16 if dtype == jnp.bfloat16 else self.tol_f32
 
+    def grad_tol(self, dtype) -> float:
+        if dtype == jnp.bfloat16:
+            return self.grad_tol_bf16 if self.grad_tol_bf16 is not None else self.tol_bf16
+        return self.grad_tol_f32 if self.grad_tol_f32 is not None else self.tol_f32
+
 
 @dataclasses.dataclass(frozen=True)
 class OpImpl:
+    """Registry entry. ``fwd_res``/``bwd`` (both or neither) give the op a
+    dedicated kernel backward:
+
+      fwd_res(*args, interpret=..., **kw) -> (out, residuals)
+      bwd(residuals, out_cotangent, interpret=..., **kw) -> per-arg cotangents
+
+    ``residuals`` is an op-chosen pytree (typically the primal inputs plus the
+    compact kernel state the backward recurrence needs). Ops without a ``bwd``
+    differentiate via the ref-VJP fallback in ``dispatch_grad``.
+    """
+
     name: str
     pallas: Callable  # must accept interpret= kwarg
     ref: Callable  # same signature minus interpret/blocking kwargs
     cases: Tuple[ParityCase, ...] = ()
+    fwd_res: Optional[Callable] = None
+    bwd: Optional[Callable] = None
 
 
 _REGISTRY: Dict[str, OpImpl] = {}
 
 
 def register(name: str, *, pallas: Callable, ref: Callable,
-             cases: Tuple[ParityCase, ...] = ()) -> None:
+             cases: Tuple[ParityCase, ...] = (), fwd_res: Optional[Callable] = None,
+             bwd: Optional[Callable] = None) -> None:
     if name in _REGISTRY:
         raise ValueError(f"kernel op {name!r} already registered")
-    _REGISTRY[name] = OpImpl(name, pallas, ref, cases)
+    if (fwd_res is None) != (bwd is None):
+        raise ValueError(f"kernel op {name!r}: fwd_res and bwd must be registered together")
+    _REGISTRY[name] = OpImpl(name, pallas, ref, cases, fwd_res, bwd)
 
 
 def registered_ops():
@@ -124,17 +159,40 @@ def dispatch(name: str, *args, backend: Optional[str] = None, **kwargs):
     return op.pallas(*args, interpret=(be == "interpret"), **kwargs)
 
 
-def dispatch_grad(name: str, *args, backend: Optional[str] = None, **kwargs):
-    """Differentiable dispatch: forward = selected backend, backward = ref VJP.
+# ---------------------------------------------------------------------------
+# Differentiable dispatch: memoized custom_vjp per (op, backend, static kwargs)
+# ---------------------------------------------------------------------------
 
-    With backend 'ref' this is just the reference op (native autodiff). The
-    kwargs must be static (they select the kernel variant, not traced values).
-    """
-    op = get_op(name)
-    be = resolve_backend() if backend is None else _validate(backend, "backend=")
-    if be == "ref":
-        return op.ref(*args, **kwargs)
-    fwd_fn = functools.partial(op.pallas, interpret=(be == "interpret"), **kwargs)
+# The wrapper for a given (name, backend, frozen kwargs) is built ONCE: a fresh
+# custom_vjp closure per call would be a new callable identity every time, so
+# every jit trace through a call site would re-trace it (and AD caches would
+# never hit). Kwargs must be static/hashable — they select the kernel variant.
+_VJP_CACHE: Dict[Tuple[str, str, tuple], Callable] = {}
+vjp_cache_stats = {"hits": 0, "misses": 0}
+
+
+def _build_vjp(op: OpImpl, backend: str, kwargs: dict) -> Callable:
+    interp = backend == "interpret"
+    fwd_fn = functools.partial(op.pallas, interpret=interp, **kwargs)
+    if op.bwd is not None:
+        fwd_res_fn = functools.partial(op.fwd_res, interpret=interp, **kwargs)
+        bwd_fn = functools.partial(op.bwd, interpret=interp, **kwargs)
+
+        @jax.custom_vjp
+        def f(*xs):
+            return fwd_fn(*xs)
+
+        def f_fwd(*xs):
+            return fwd_res_fn(*xs)
+
+        def f_bwd(res, ct):
+            return tuple(bwd_fn(res, ct))
+
+        f.defvjp(f_fwd, f_bwd)
+        return f
+
+    # ref-VJP fallback: backward through the reference implementation
+    # linearized at the same inputs (remat of the unfused ref forward).
     ref_fn = functools.partial(op.ref, **kwargs)
 
     @jax.custom_vjp
@@ -149,11 +207,35 @@ def dispatch_grad(name: str, *args, backend: Optional[str] = None, **kwargs):
         return vjp(ct)
 
     f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def dispatch_grad(name: str, *args, backend: Optional[str] = None, **kwargs):
+    """Differentiable dispatch.
+
+    Backend 'ref' is just the reference op (native autodiff). Otherwise the
+    forward runs the selected kernel backend and the backward runs the op's
+    registered backward kernels (ref-VJP fallback when it has none). The kwargs
+    must be static (they select the kernel variant, not traced values).
+    """
+    op = get_op(name)
+    be = resolve_backend() if backend is None else _validate(backend, "backend=")
+    if be == "ref":
+        return op.ref(*args, **kwargs)
+    key = (name, be, tuple(sorted(kwargs.items())))
+    f = _VJP_CACHE.get(key)
+    if f is None:
+        vjp_cache_stats["misses"] += 1
+        f = _VJP_CACHE[key] = _build_vjp(op, be, kwargs)
+    else:
+        vjp_cache_stats["hits"] += 1
     return f(*args)
 
 
 # ---------------------------------------------------------------------------
-# Registrations (ref wrappers normalize signatures/dtypes to the kernel's)
+# Registrations (ref wrappers normalize signatures/dtypes to the kernel's;
+# fwd_res/bwd wrappers adapt the kernel backward entry points to the
+# (residuals, cotangent) -> per-arg-cotangents contract)
 # ---------------------------------------------------------------------------
 
 
@@ -164,16 +246,40 @@ def _attention_ref(q, k, v, *, causal=True, window=None, softcap=None, scale=Non
                               softcap=softcap, scale=scale)
 
 
+def _attention_fwd_res(q, k, v, *, interpret=False, **kw):
+    out, lse = _flash_attention(q, k, v, interpret=interpret,
+                                return_residuals=True, **kw)
+    return out, (q, k, v, out, lse)
+
+
+def _attention_bwd(res, do, *, interpret=False, **kw):
+    q, k, v, o, lse = res
+    return _flash_attention_bwd(q, k, v, o, lse, do, interpret=interpret, **kw)
+
+
 def _ssd_ref(x, dt, A, B_, C_, *, chunk=128):
     # The chunked-parallel jnp form, not the sequential ssd_ref recurrence: this
-    # function is also the training BACKWARD of the fused path (dispatch_grad),
-    # and a per-timestep lax.scan VJP would serialize over all S steps. The
-    # chunked form is itself validated against the sequential oracle in
+    # function is the BACKWARD comparator of the fused path (grad parity), and a
+    # per-timestep lax.scan VJP would serialize over all S steps. The chunked
+    # form is itself validated against the sequential oracle in
     # tests/test_kernels.py. Late import: layers imports this module.
     from repro.models.layers import _ssd_chunked
 
     y, h = _ssd_chunked(x, B_, C_, dt, A, min(chunk, x.shape[1]))
     return y.astype(x.dtype), h  # kernel returns y in x.dtype, h_final fp32
+
+
+def _ssd_fwd_res(x, dt, A, B_, C_, *, interpret=False, chunk=128):
+    y, hfin, h_chunk = _ssd_scan(x, dt, A, B_, C_, chunk=chunk,
+                                 interpret=interpret, return_residuals=True)
+    return (y, hfin), (x, dt, A, B_, C_, h_chunk)
+
+
+def _ssd_bwd(res, cts, *, interpret=False, chunk=128):
+    x, dt, A, B_, C_, h_chunk = res
+    dy, dhfin = cts
+    return _ssd_scan_bwd(x, dt, A, B_, C_, h_chunk, dy, dhfin, chunk=chunk,
+                         interpret=interpret)
 
 
 def _nag_ref(p, m, v, g, *, lr, b1=0.99, b2=0.95, eps=1e-8, wd=0.01, mu_t, mu_next,
@@ -188,6 +294,20 @@ def _rmsnorm_residual_ref(x, h, scale, *, eps=1e-6, block_rows=8):
     del block_rows
     from repro.kernels.rmsnorm_residual import rmsnorm_residual_ref
     return rmsnorm_residual_ref(x, h, scale, eps)
+
+
+def _rmsnorm_residual_fwd_res(x, h, scale, *, interpret=False, eps=1e-6, block_rows=8):
+    r, y = _rmsnorm_residual(x, h, scale, eps=eps, block_rows=block_rows,
+                             interpret=interpret)
+    return (r, y), (r, scale)  # r is a forward output: saved, never recomputed
+
+
+def _rmsnorm_residual_bwd_wrap(res, cts, *, interpret=False, eps=1e-6, block_rows=8):
+    r, scale = res
+    dr, dy = cts
+    dxh, dscale = _rmsnorm_residual_bwd(r, scale, dr, dy, eps=eps,
+                                        block_rows=block_rows, interpret=interpret)
+    return dxh, dxh, dscale.astype(scale.dtype)  # x and h share the cotangent
 
 
 def _attn_case(B, H, Hkv, S, d, blk, **kw):
@@ -233,6 +353,7 @@ def _rms_case(shape, block_rows=8):
 
 register(
     "flash_attention", pallas=_flash_attention, ref=_attention_ref,
+    fwd_res=_attention_fwd_res, bwd=_attention_bwd,
     cases=(
         ParityCase("gqa_aligned", _attn_case(2, 4, 2, 128, 32, 64)),
         ParityCase("mqa_ragged_seq", _attn_case(1, 4, 1, 96, 32, 64)),     # S % blk != 0
@@ -244,6 +365,7 @@ register(
 
 register(
     "ssd_scan", pallas=_ssd_scan, ref=_ssd_ref,
+    fwd_res=_ssd_fwd_res, bwd=_ssd_bwd,
     cases=(
         ParityCase("grouped_chunked", _ssd_case(2, 64, 4, 16, 2, 8, chunk=32),
                    tol_f32=5e-4, tol_bf16=4e-2),
@@ -256,13 +378,14 @@ register(
 register(
     "nag_update", pallas=_nag_update, ref=_nag_ref,
     cases=(
-        ParityCase("aligned", _nag_case(4096, 1024), tol_f32=2e-6),
-        ParityCase("ragged", _nag_case(5000, 1024), tol_f32=2e-6),
-        ParityCase("tiny_subblock", _nag_case(7, 8), tol_f32=2e-6),
+        ParityCase("aligned", _nag_case(4096, 1024), tol_f32=2e-6, grad_tol_f32=2e-5),
+        ParityCase("ragged", _nag_case(5000, 1024), tol_f32=2e-6, grad_tol_f32=2e-5),
+        ParityCase("tiny_subblock", _nag_case(7, 8), tol_f32=2e-6, grad_tol_f32=2e-5),
     ))
 
 register(
     "rmsnorm_residual", pallas=_rmsnorm_residual, ref=_rmsnorm_residual_ref,
+    fwd_res=_rmsnorm_residual_fwd_res, bwd=_rmsnorm_residual_bwd_wrap,
     cases=(
         ParityCase("batched_3d", _rms_case((2, 16, 64))),
         ParityCase("ragged_rows", _rms_case((3, 5, 48))),   # rows % block_rows != 0

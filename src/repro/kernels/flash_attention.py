@@ -8,7 +8,20 @@ state (m, l, acc) lives in VMEM scratch across kv steps. Supports causal masking
 sliding windows, and gemma-style logit softcap. Block sizes default to MXU-aligned
 (128) multiples.
 
-Grid: (batch*kv_heads*group, num_q_blocks, num_kv_blocks).
+Forward grid: (batch*kv_heads*group, num_q_blocks, num_kv_blocks). With
+``return_residuals=True`` the forward also emits the per-row logsumexp, which is
+all the backward needs to rebuild attention probabilities blockwise.
+
+Backward (FlashAttention-2 recurrence, arXiv:2307.08691): never materializes the
+S x S matrix. Probabilities are recomputed per tile as p = exp(s - lse) from the
+saved (o, lse) residuals, and ds = p * (dp - delta) with delta = rowsum(do * o).
+Two passes:
+  - dk/dv: grid (B*H, num_kv_blocks, num_q_blocks) — kv-parallel, the q axis is
+    last (sequential) so dk/dv accumulate in VMEM scratch across q tiles;
+  - dq:    grid (B*H, num_q_blocks, num_kv_blocks) — q-parallel, kv sequential,
+    dq accumulates in VMEM scratch.
+Mask gradients: masked entries have p = 0 so they drop out of every product; the
+softcap gradient rescales ds by sech^2 = 1 - (s_capped/cap)^2.
 """
 from __future__ import annotations
 
@@ -24,8 +37,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale, causal, window, softcap, block_q, block_k, seq_len):
+def _kernel(q_ref, k_ref, v_ref, o_ref, *rest, scale, causal, window, softcap,
+            block_q, block_k, seq_len, with_lse):
+    if with_lse:
+        lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        lse_ref = None
+        m_scr, l_scr, acc_scr = rest
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -69,13 +87,127 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     def _finish():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        if lse_ref is not None:
+            lse_ref[0] = m_scr[...] + jnp.log(denom)
+
+
+def _mask_and_p(q, k, lse, *, qi, ki, scale, causal, window, softcap,
+                block_q, block_k, seq_len):
+    """Shared backward tile math: recompute capped scores and p = exp(s - lse).
+
+    Returns (p, s_capped) with masked entries of p zeroed. Padded / future q rows
+    need no extra mask: their do and delta are zero, so every product they enter
+    vanishes.
+    """
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)  # [bq, bk]
+    return p, s
+
+
+def _ds_from(p, s, dp, delta, softcap):
+    """ds (grad wrt the pre-softcap scaled scores) from p and dp = do @ v^T."""
+    ds = p * (dp - delta)  # grad wrt capped scores
+    if softcap is not None:
+        ds = ds * (1.0 - (s / softcap) ** 2)  # sech^2 of the softcap tanh
+    return ds
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal, window,
+                    softcap, block_q, block_k, seq_len):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+    nq = pl.num_programs(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0].astype(jnp.float32)      # [bq, d]
+    k = k_ref[0].astype(jnp.float32)      # [bk, d]
+    v = v_ref[0].astype(jnp.float32)      # [bk, d]
+    do = do_ref[0].astype(jnp.float32)    # [bq, d]
+    lse = lse_ref[0]                      # [bq, 1] f32
+    delta = delta_ref[0]                  # [bq, 1] f32
+
+    p, s = _mask_and_p(q, k, lse, qi=qi, ki=ki, scale=scale, causal=causal,
+                       window=window, softcap=softcap, block_q=block_q,
+                       block_k=block_k, seq_len=seq_len)
+    dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)  # [bk, d]
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [bq, bk]
+    ds = _ds_from(p, s, dp, delta, softcap)
+    dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32) * scale
+
+    @pl.when(qi == nq - 1)
+    def _finish():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, dq_scr, *, scale, causal, window, softcap,
+                   block_q, block_k, seq_len):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+
+    p, s = _mask_and_p(q, k, lse, qi=qi, ki=ki, scale=scale, causal=causal,
+                       window=window, softcap=softcap, block_q=block_q,
+                       block_k=block_k, seq_len=seq_len)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = _ds_from(p, s, dp, delta, softcap)
+    dq_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32) * scale
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _blocks_and_pad(q, k, block_q, block_k):
+    Sq = q.shape[2]
+    Sk = k.shape[2]
+    block_q = min(block_q, max(8, Sq))
+    block_k = min(block_k, max(8, Sk))
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    return block_q, block_k, pq, pk
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
-                    scale=None, block_q=128, block_k=128, interpret=None):
+                    scale=None, block_q=128, block_k=128, interpret=None,
+                    return_residuals=False):
     """q [B, H, Sq, d]; k, v [B, Hkv, Sk, d] with H = Hkv * G. Returns [B, H, Sq, d].
 
     Sq/Sk are padded to block multiples internally; padded kv is masked out.
+    With ``return_residuals=True`` also returns the row logsumexp [B, H, Sq] (f32),
+    the only extra residual the backward kernels need.
     """
     B, H, Sq, d = q.shape
     _, Hkv, Sk, _ = k.shape
@@ -84,10 +216,7 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
     if interpret is None:
         interpret = jax.devices()[0].platform == "cpu"
 
-    block_q = min(block_q, max(8, Sq))
-    block_k = min(block_k, max(8, Sk))
-    pq = (-Sq) % block_q
-    pk = (-Sk) % block_k
+    block_q, block_k, pq, pk = _blocks_and_pad(q, k, block_q, block_k)
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
@@ -98,18 +227,24 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
     vf = jnp.repeat(vp, G, axis=1).reshape(B * H, Skp, d)
 
     grid = (B * H, Sqp // block_q, Skp // block_k)
-    out = pl.pallas_call(
+    in_specs = [
+        pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+    ]
+    out_specs = [pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((B * H, Sqp, d), q.dtype)]
+    if return_residuals:
+        out_specs.append(pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B * H, Sqp, 1), jnp.float32))
+    outs = pl.pallas_call(
         functools.partial(_kernel, scale=scale, causal=causal, window=window,
                           softcap=softcap, block_q=block_q, block_k=block_k,
-                          seq_len=Sk),
+                          seq_len=Sk, with_lse=return_residuals),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Sqp, d), q.dtype),
+        in_specs=in_specs,
+        out_specs=out_specs if return_residuals else out_specs[0],
+        out_shape=out_shape if return_residuals else out_shape[0],
         scratch_shapes=[  # running softmax state (m, l, acc) in VMEM
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -117,4 +252,76 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
         ],
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(B, H, Sqp, d)[:, :, :Sq, :]
+    if return_residuals:
+        out, lse = outs
+        return (out.reshape(B, H, Sqp, d)[:, :, :Sq, :],
+                lse.reshape(B, H, Sqp)[:, :, :Sq])
+    return outs.reshape(B, H, Sqp, d)[:, :, :Sq, :]
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
+                        softcap=None, scale=None, block_q=128, block_k=128,
+                        interpret=None):
+    """Backward from saved residuals. Returns (dq, dk, dv) in the input dtypes.
+
+    q/o/do [B, H, Sq, d]; k, v [B, Hkv, Sk, d]; lse [B, H, Sq] f32. dk/dv are
+    group-summed back to the Hkv layout (the forward broadcast k/v over G).
+    """
+    B, H, Sq, d = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if interpret is None:
+        interpret = jax.devices()[0].platform == "cpu"
+
+    block_q, block_k, pq, pk = _blocks_and_pad(q, k, block_q, block_k)
+    Sqp, Skp = Sq + pq, Sk + pk
+    pad_q = ((0, 0), (0, 0), (0, pq), (0, 0))
+    pad_k = ((0, 0), (0, 0), (0, pk), (0, 0))
+    qf = jnp.pad(q, pad_q).reshape(B * H, Sqp, d)
+    kf = jnp.repeat(jnp.pad(k, pad_k), G, axis=1).reshape(B * H, Skp, d)
+    vf = jnp.repeat(jnp.pad(v, pad_k), G, axis=1).reshape(B * H, Skp, d)
+    dof = jnp.pad(do, pad_q).reshape(B * H, Sqp, d)
+    of = jnp.pad(o, pad_q).reshape(B * H, Sqp, d)
+    lsef = jnp.pad(lse, ((0, 0), (0, 0), (0, pq))).reshape(B * H, Sqp, 1)
+    # delta_i = rowsum(do_i * o_i): one fused elementwise-reduce pass in XLA;
+    # zero on padded rows, which is what zeroes their ds contributions in-kernel.
+    delta = jnp.sum(dof.astype(jnp.float32) * of.astype(jnp.float32),
+                    axis=-1, keepdims=True)
+
+    kw = dict(scale=scale, causal=causal, window=window, softcap=softcap,
+              block_q=block_q, block_k=block_k, seq_len=Sk)
+    q_spec = pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0))
+    r_spec = pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0))
+    k_spec = pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0))
+
+    # kv-parallel pass: q axis last (sequential), dk/dv accumulate in VMEM
+    qT_spec = pl.BlockSpec((1, block_q, d), lambda b, j, i: (b, i, 0))
+    rT_spec = pl.BlockSpec((1, block_q, 1), lambda b, j, i: (b, i, 0))
+    kT_spec = pl.BlockSpec((1, block_k, d), lambda b, j, i: (b, j, 0))
+    dkf, dvf = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, **kw),
+        grid=(B * H, Skp // block_k, Sqp // block_q),
+        in_specs=[qT_spec, kT_spec, kT_spec, qT_spec, rT_spec, rT_spec],
+        out_specs=[kT_spec, kT_spec],
+        out_shape=[jax.ShapeDtypeStruct((B * H, Skp, d), jnp.float32)] * 2,
+        scratch_shapes=[pltpu.VMEM((block_k, d), jnp.float32)] * 2,
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, delta)
+
+    # q-parallel pass: kv axis last (sequential), dq accumulates in VMEM
+    dqf = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, **kw),
+        grid=(B * H, Sqp // block_q, Skp // block_k),
+        in_specs=[q_spec, k_spec, k_spec, q_spec, r_spec, r_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, Sqp, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, delta)
+
+    dq = dqf.reshape(B, H, Sqp, d)[:, :, :Sq, :].astype(q.dtype)
+    # un-broadcast the GQA repeat: head h = kv * G + g, sum over g
+    dk = dkf.reshape(B, Hkv, G, Skp, d).sum(axis=2)[:, :, :Sk, :].astype(k.dtype)
+    dv = dvf.reshape(B, Hkv, G, Skp, d).sum(axis=2)[:, :, :Sk, :].astype(v.dtype)
+    return dq, dk, dv

@@ -7,8 +7,12 @@ import jax
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, *, causal=True, window=None, softcap=None, scale=None):
-    """q [B,H,Sq,d]; k,v [B,Hkv,Sk,d]. Dense attention, fp32 softmax."""
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+                  return_lse=False):
+    """q [B,H,Sq,d]; k,v [B,Hkv,Sk,d]. Dense attention, fp32 softmax.
+
+    ``return_lse=True`` also returns the row logsumexp [B,H,Sq] (f32) — the
+    oracle for the flash-attention forward's saved backward residual."""
     B, H, Sq, d = q.shape
     Hkv = k.shape[1]
     G = H // Hkv
@@ -27,7 +31,10 @@ def attention_ref(q, k, v, *, causal=True, window=None, softcap=None, scale=None
         ok &= kpos > qpos - window
     s = jnp.where(ok[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32)).astype(q.dtype)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32)).astype(q.dtype)
+    if return_lse:
+        return out, jax.nn.logsumexp(s, axis=-1)
+    return out
 
 
 def ssd_ref(x, dt, A, B_, C_, *, h0=None):

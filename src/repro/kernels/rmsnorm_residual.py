@@ -5,6 +5,12 @@ twice when unfused. This kernel makes one pass per (rows, d) tile: computes the
 residual sum, its RMS statistics (f32), and both outputs in VREGs.
 
 Grid: (n_row_tiles,) over flattened [tokens, d].
+
+Backward: the forward's first output r = x + h IS the residual — nothing else is
+saved and nothing is recomputed. One pass per tile rebuilds the RMS statistics
+from r, emits d(x) = d(h) = dr + rsqrt-chain(dy), and a per-tile partial of
+dscale (reduced across tiles outside the kernel, where the row-tile axis is
+parallel-safe).
 """
 from __future__ import annotations
 
@@ -56,6 +62,63 @@ def rmsnorm_residual(x, h, scale, *, eps=1e-6, block_rows=8, interpret=None):
         interpret=interpret,
     )(xf, hf, scale)
     return r[:n].reshape(shape), y[:n].reshape(shape)
+
+
+def _bwd_kernel(r_ref, s_ref, dr_ref, dy_ref, dxh_ref, dsc_ref, *, eps):
+    r = r_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)  # [d]
+    drc = dr_ref[...].astype(jnp.float32)
+    dyc = dy_ref[...].astype(jnp.float32)
+    var = jnp.mean(r * r, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    rhat = r * inv
+    dsc_ref[...] = jnp.sum(dyc * rhat, axis=0, keepdims=True)  # [1, d] partial
+    drhat = dyc * (1.0 + s)
+    dr_norm = inv * (drhat - rhat * jnp.mean(drhat * rhat, axis=-1, keepdims=True))
+    dxh_ref[...] = (drc + dr_norm).astype(dxh_ref.dtype)
+
+
+def rmsnorm_residual_bwd(r, scale, dr, dy, *, eps=1e-6, block_rows=8,
+                         interpret=None):
+    """Backward from the saved residual stream r = x + h (a forward OUTPUT).
+
+    dr/dy are the cotangents of the forward's (r, y). Returns (dxh, dscale):
+    dxh is the shared cotangent of x and h (both enter only through r), dscale
+    is f32 [d].
+    """
+    if interpret is None:
+        interpret = jax.devices()[0].platform == "cpu"
+    shape = r.shape
+    d = shape[-1]
+    rf = r.reshape(-1, d)
+    drf = dr.reshape(-1, d)
+    dyf = dy.reshape(-1, d)
+    n = rf.shape[0]
+    block_rows = min(block_rows, n)
+    pad = (-n) % block_rows
+    if pad:  # zero rows contribute zero to every product below
+        rf = jnp.pad(rf, ((0, pad), (0, 0)))
+        drf = jnp.pad(drf, ((0, pad), (0, 0)))
+        dyf = jnp.pad(dyf, ((0, pad), (0, 0)))
+    nb = (n + pad) // block_rows
+    dxh, dsc = pl.pallas_call(
+        functools.partial(_bwd_kernel, eps=eps),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(((n + pad), d), r.dtype),
+                   jax.ShapeDtypeStruct((nb, d), jnp.float32)],
+        interpret=interpret,
+    )(rf, scale, drf, dyf)
+    return dxh[:n].reshape(shape), jnp.sum(dsc, axis=0)
 
 
 def rmsnorm_residual_ref(x, h, scale, eps=1e-6):

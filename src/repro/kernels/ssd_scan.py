@@ -7,7 +7,18 @@ matching B/C/dt tiles into VMEM, does the intra-chunk quadratic part on the MXU
 across the sequential chunk axis — the CUDA version's cross-block shared-memory
 handoff becomes TPU's sequential-grid scratch persistence.
 
-Grid: (B*H, n_chunks) — chunk axis last (sequential on TPU).
+Forward grid: (B*H, n_chunks) — chunk axis last (sequential on TPU). With
+``return_residuals=True`` the forward also emits the state *entering* each chunk
+(the chunk-boundary states), which is all the backward needs: intra-chunk
+quantities are cheap to rebuild from (x, dt, A, B, C) per tile, while the
+boundary states are exactly what a reverse pass cannot recompute without
+re-running the whole forward scan.
+
+Backward: same grid iterated in *reverse* chunk order (via the BlockSpec index
+maps), carrying dh — the cotangent of the chunk-boundary state — in VMEM scratch.
+Each step rebuilds the chunk's decay/score tiles, emits dx/ddt/dB/dC for that
+chunk, accumulates the per-(b,head) dA partial in scratch, and propagates
+dh_in = exp(cum_end) * dh_out + (w_in ⊙ C)ᵀ dy to the previous chunk.
 """
 from __future__ import annotations
 
@@ -19,12 +30,21 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, h_scr, *, chunk, n_chunks):
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, *rest,
+            chunk, n_chunks, save_states):
+    if save_states:
+        hprev_ref, h_scr = rest
+    else:
+        hprev_ref = None
+        (h_scr,) = rest
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
     def _init():
         h_scr[...] = jnp.zeros_like(h_scr)
+
+    if hprev_ref is not None:  # state entering this chunk (residual for bwd)
+        hprev_ref[0, 0] = h_scr[...]
 
     x = x_ref[0].astype(jnp.float32)  # [c, P]
     dt = dt_ref[0].astype(jnp.float32)  # [c, 1]
@@ -62,10 +82,158 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, h_scr, *, chunk
         hfin_ref[0] = h_scr[...].astype(hfin_ref.dtype)
 
 
-def ssd_scan(x, dt, A, B_, C_, *, chunk=128, interpret=None):
+def _bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, hprev_ref, dy_ref, dhfin_ref,
+                dx_ref, ddt_ref, da_ref, db_ref, dc_ref, dh_scr, dA_scr, *,
+                chunk, n_chunks):
+    """One reversed chunk step. All refs are indexed at the *reversed* chunk
+    (index maps below), so program_id(1)==0 processes the LAST chunk."""
+    cr = pl.program_id(1)
+
+    @pl.when(cr == 0)
+    def _init():
+        dh_scr[...] = dhfin_ref[0].astype(jnp.float32)
+        dA_scr[...] = jnp.zeros_like(dA_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # [c, P]
+    dt = dt_ref[0].astype(jnp.float32)  # [c, 1]
+    A = a_ref[0].astype(jnp.float32)  # [1, 1]
+    Bm = b_ref[0].astype(jnp.float32)  # [c, N]
+    Cm = c_ref[0].astype(jnp.float32)  # [c, N]
+    h_in = hprev_ref[0, 0]  # [N, P] f32, state entering this chunk
+    dy = dy_ref[0].astype(jnp.float32)  # [c, P]
+    dh = dh_scr[...]  # [N, P]: cotangent of this chunk's OUTPUT state
+
+    # rebuild the forward's per-chunk tiles
+    da = dt * A
+    cum = jnp.cumsum(da, axis=0)  # [c,1]
+    w_in = jnp.exp(cum)  # [c,1]
+    seg_end = cum[-1:, :]  # [1,1]
+    eexp = jnp.exp(seg_end - cum)  # [c,1]
+    e = eexp * dt  # [c,1]  (the forward's w_end)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = ii >= jj
+    L = jnp.where(tri, jnp.exp(cum - cum.T), 0.0)  # [c,c]
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [c,c]
+    W = scores * L * dt.T  # [c,c]: y_intra = W @ x
+
+    dot = lambda a_, b_, dims: jax.lax.dot_general(
+        a_, b_, (dims, ((), ())), preferred_element_type=jnp.float32)
+    # dW from y_intra = W x; contract P
+    dW = dot(dy, x, ((1,), (1,)))  # [c,c]
+    dscores = dW * L * dt.T
+    dL = dW * scores * dt.T
+    M = dL * L  # zero off-triangle (L=0 there)
+
+    # dx: intra Wᵀ dy + state (B ⊙ e) dh
+    dx = dot(W, dy, ((0,), (0,))) + dot(Bm * e, dh, ((1,), (0,)))  # [c,P]
+    xdh = dot(x, dh, ((1,), (1,)))  # [c,N]: x · dh over P
+    dB = dot(dscores, Cm, ((0,), (0,))) + e * xdh  # [c,N]
+    dC = dot(dscores, Bm, ((1,), (0,))) + w_in * dot(dy, h_in, ((1,), (1,)))  # [c,N]
+
+    # cotangent of cum (then reverse-cumsum -> da)
+    de = jnp.sum(Bm * xdh, axis=1, keepdims=True)  # [c,1]: d h_out / d e_j
+    Chin = dot(Cm, h_in, ((1,), (0,)))  # [c,P]
+    dwin = jnp.sum(dy * Chin, axis=1, keepdims=True)  # [c,1]
+    dcum = (jnp.sum(M, axis=1, keepdims=True) - jnp.sum(M, axis=0)[:, None]
+            + dwin * w_in - de * e)
+    # seg_end = cum[-1] collects the w_end exponent and the carried-state decay
+    dseg = jnp.sum(de * e) + jnp.exp(seg_end[0, 0]) * jnp.sum(dh * h_in)
+    is_last = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0) == chunk - 1
+    dcum = dcum + jnp.where(is_last, dseg, 0.0)
+    # cum = cumsum(da): d da_k = sum_{i>=k} dcum_i  (reverse cumsum)
+    dda = jnp.sum(dcum, axis=0, keepdims=True) - jnp.cumsum(dcum, axis=0) + dcum
+    ddt = (dda * A + jnp.sum(dW * scores * L, axis=0)[:, None]  # W's direct dt_j
+           + eexp * de)                                         # e's direct dt_j
+    dA_scr[...] += jnp.sum(dda * dt).reshape(1, 1)
+
+    # propagate to the previous chunk's output state
+    dh_scr[...] = jnp.exp(seg_end[0, 0]) * dh + dot(Cm * w_in, dy, ((0,), (0,)))
+
+    dx_ref[0] = dx.astype(dx_ref.dtype)
+    ddt_ref[0] = ddt.astype(ddt_ref.dtype)
+    db_ref[0] = dB.astype(db_ref.dtype)
+    dc_ref[0] = dC.astype(dc_ref.dtype)
+
+    @pl.when(cr == n_chunks - 1)
+    def _finish():
+        da_ref[0] = dA_scr[...].astype(da_ref.dtype)
+
+
+def _flatten(x, dt, A, B_, C_):
+    """User layout -> kernel layout: (b, H) fused into the grid's first axis."""
+    b, S, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    xf = x.swapaxes(1, 2).reshape(b * H, S, Pd)
+    dtf = dt.swapaxes(1, 2).reshape(b * H, S, 1)
+    Bf = jnp.repeat(B_.swapaxes(1, 2), rep, axis=1).reshape(b * H, S, N)
+    Cf = jnp.repeat(C_.swapaxes(1, 2), rep, axis=1).reshape(b * H, S, N)
+    Af = jnp.broadcast_to(A[None, :], (b, H)).reshape(b * H, 1, 1)
+    return xf, dtf, Af, Bf, Cf
+
+
+def ssd_scan(x, dt, A, B_, C_, *, chunk=128, interpret=None,
+             return_residuals=False):
     """x [b,S,H,P]; dt [b,S,H]; A [H]; B_,C_ [b,S,G,N]. Returns (y, h_final).
 
-    Matches kernels.ref.ssd_ref (sequential recurrence oracle).
+    Matches kernels.ref.ssd_ref (sequential recurrence oracle). With
+    ``return_residuals=True`` returns (y, h_final, h_chunk) where h_chunk
+    [b*H, n_chunks, N, P] (f32, kernel layout) holds the state entering each
+    chunk — the boundary residuals consumed by ``ssd_scan_bwd``.
+    """
+    b, S, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    if interpret is None:
+        interpret = jax.devices()[0].platform == "cpu"
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequence to a chunk multiple"
+    n_chunks = S // chunk
+
+    xf, dtf, Af, Bf, Cf = _flatten(x, dt, A, B_, C_)
+
+    out_specs = [
+        pl.BlockSpec((1, chunk, Pd), lambda i, c: (i, c, 0)),
+        pl.BlockSpec((1, N, Pd), lambda i, c: (i, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b * H, S, Pd), x.dtype),
+        jax.ShapeDtypeStruct((b * H, N, Pd), jnp.float32),
+    ]
+    if return_residuals:
+        out_specs.append(pl.BlockSpec((1, 1, N, Pd), lambda i, c: (i, c, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b * H, n_chunks, N, Pd), jnp.float32))
+    outs = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks,
+                          save_states=return_residuals),
+        grid=(b * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Pd), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((N, Pd), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, Af, Bf, Cf)
+    y = outs[0].reshape(b, H, S, Pd).swapaxes(1, 2)
+    hfin = outs[1].reshape(b, H, N, Pd)
+    if return_residuals:
+        return y, hfin, outs[2]
+    return y, hfin
+
+
+def ssd_scan_bwd(x, dt, A, B_, C_, h_chunk, dy, dhfin, *, chunk=128,
+                 interpret=None):
+    """Reverse chunked recurrence. Returns (dx, ddt, dA, dB, dC).
+
+    Inputs are the forward's primals plus the saved chunk-boundary states
+    ``h_chunk`` [b*H, n_chunks, N, P] and the output cotangents (dy [b,S,H,P],
+    dhfin [b,H,N,P]). dB/dC are group-summed back to the [b,S,G,N] layout.
     """
     b, S, H, Pd = x.shape
     G, N = B_.shape[2], B_.shape[3]
@@ -76,34 +244,49 @@ def ssd_scan(x, dt, A, B_, C_, *, chunk=128, interpret=None):
     assert S % chunk == 0, "pad sequence to a chunk multiple"
     n_chunks = S // chunk
 
-    # flatten (b, H) into the grid's first axis; broadcast B/C per head group
-    xf = x.swapaxes(1, 2).reshape(b * H, S, Pd)
-    dtf = dt.swapaxes(1, 2).reshape(b * H, S, 1)
-    Bf = jnp.repeat(B_.swapaxes(1, 2), rep, axis=1).reshape(b * H, S, N)
-    Cf = jnp.repeat(C_.swapaxes(1, 2), rep, axis=1).reshape(b * H, S, N)
-    Af = jnp.broadcast_to(A[None, :], (b, H)).reshape(b * H, 1, 1)
+    xf, dtf, Af, Bf, Cf = _flatten(x, dt, A, B_, C_)
+    dyf = dy.swapaxes(1, 2).reshape(b * H, S, Pd)
+    dhfinf = dhfin.reshape(b * H, N, Pd)
 
-    y, hfin = pl.pallas_call(
-        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+    rev = lambda c: n_chunks - 1 - c  # iterate chunks back-to-front
+    seq_spec = lambda width: pl.BlockSpec((1, chunk, width),
+                                          lambda i, c: (i, rev(c), 0))
+    dxf, ddtf, dAf, dBf, dCf = pl.pallas_call(
+        functools.partial(_bwd_kernel, chunk=chunk, n_chunks=n_chunks),
         grid=(b * H, n_chunks),
         in_specs=[
-            pl.BlockSpec((1, chunk, Pd), lambda i, c: (i, c, 0)),
-            pl.BlockSpec((1, chunk, 1), lambda i, c: (i, c, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, c: (i, 0, 0)),
-            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
-            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
+            seq_spec(Pd),                                            # x
+            seq_spec(1),                                             # dt
+            pl.BlockSpec((1, 1, 1), lambda i, c: (i, 0, 0)),         # A
+            seq_spec(N),                                             # B
+            seq_spec(N),                                             # C
+            pl.BlockSpec((1, 1, N, Pd), lambda i, c: (i, rev(c), 0, 0)),  # h_in
+            seq_spec(Pd),                                            # dy
+            pl.BlockSpec((1, N, Pd), lambda i, c: (i, 0, 0)),        # dhfin
         ],
         out_specs=[
-            pl.BlockSpec((1, chunk, Pd), lambda i, c: (i, c, 0)),
-            pl.BlockSpec((1, N, Pd), lambda i, c: (i, 0, 0)),
+            seq_spec(Pd),                                            # dx
+            seq_spec(1),                                             # ddt
+            pl.BlockSpec((1, 1, 1), lambda i, c: (i, 0, 0)),         # dA partial
+            seq_spec(N),                                             # dB
+            seq_spec(N),                                             # dC
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b * H, S, Pd), x.dtype),
-            jax.ShapeDtypeStruct((b * H, N, Pd), jnp.float32),
+            jax.ShapeDtypeStruct((b * H, S, Pd), jnp.float32),
+            jax.ShapeDtypeStruct((b * H, S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b * H, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b * H, S, N), jnp.float32),
+            jax.ShapeDtypeStruct((b * H, S, N), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((N, Pd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((N, Pd), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32)],
         interpret=interpret,
-    )(xf, dtf, Af, Bf, Cf)
-    y = y.reshape(b, H, S, Pd).swapaxes(1, 2)
-    hfin = hfin.reshape(b, H, N, Pd)
-    return y, hfin
+    )(xf, dtf, Af, Bf, Cf, h_chunk, dyf, dhfinf)
+
+    dx = dxf.reshape(b, H, S, Pd).swapaxes(1, 2).astype(x.dtype)
+    ddt = ddtf.reshape(b, H, S).swapaxes(1, 2).astype(dt.dtype)
+    dA = dAf.reshape(b, H).sum(axis=0).astype(A.dtype)
+    # un-broadcast the head-group repeat: head h = g * rep + r, sum over r
+    dB = (dBf.reshape(b, G, rep, S, N).sum(axis=2).swapaxes(1, 2)).astype(B_.dtype)
+    dC = (dCf.reshape(b, G, rep, S, N).sum(axis=2).swapaxes(1, 2)).astype(C_.dtype)
+    return dx, ddt, dA, dB, dC

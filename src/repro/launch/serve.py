@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --batch 4 --prompt-len 32 --gen 16
+
+The decode jit donates the cache argument (``donate_argnums``): the per-layer
+KV/SSD buffers are updated in place instead of being re-allocated every
+generated token, which is what keeps steady-state decode allocation-free. The
+launcher reports steady-state tok/s separately from the compile-inclusive
+first-token figure.
 """
 from __future__ import annotations
 
@@ -15,24 +21,52 @@ from repro.configs import get_config
 from repro.models import lm
 
 
-def generate(params, cfg, prompt_tokens, gen_len, *, temperature=0.0, key=None):
+def generate(params, cfg, prompt_tokens, gen_len, *, temperature=0.0, key=None,
+             return_stats=False):
+    """Greedy / temperature decoding. Returns tokens [B, gen_len]; with
+    ``return_stats=True`` returns (tokens, stats) where stats separates
+    compile-inclusive prefill+first-step time from steady-state decode."""
     B, S = prompt_tokens.shape
     max_len = S + gen_len
     batch = {"tokens": prompt_tokens}
     prefill = jax.jit(lambda p, b: lm.serve_prefill(p, b, cfg, max_len=max_len))
+    t0 = time.perf_counter()
     logits, caches = prefill(params, batch)
-    decode = jax.jit(lambda p, c, t, pos: lm.serve_decode(p, c, t, cfg, pos))
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    # donate the cache: decode writes one position per step, so the input and
+    # output cache buffers alias and the loop is allocation-free at steady state
+    decode = jax.jit(lambda p, c, t, pos: lm.serve_decode(p, c, t, cfg, pos),
+                     donate_argnums=(1,))
     toks = []
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t_first = t_steady = 0.0
     for i in range(gen_len):
         toks.append(tok)
+        t0 = time.perf_counter()
         logits, caches = decode(params, caches, tok, jnp.asarray(S + i, jnp.int32))
         if temperature > 0:
             key, sub = jax.random.split(key)
             tok = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
         else:
             tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    return jnp.concatenate(toks, axis=1)
+        if return_stats:  # per-token sync only when timing: the plain decode
+            jax.block_until_ready(tok)  # loop keeps dispatching ahead of device
+            if i == 0:
+                t_first = time.perf_counter() - t0  # includes decode compile
+            else:
+                t_steady += time.perf_counter() - t0
+    out = jnp.concatenate(toks, axis=1)
+    if not return_stats:
+        return out
+    steady_steps = max(gen_len - 1, 1)
+    stats = {
+        "prefill_s": t_prefill,
+        "first_token_s": t_first,
+        "steady_s": t_steady,
+        "steady_tok_s": B * steady_steps / t_steady if t_steady > 0 else float("nan"),
+    }
+    return out, stats
 
 
 def main():
@@ -49,11 +83,14 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     params = lm.init_lm(key, cfg)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    t0 = time.time()
-    out = generate(params, cfg, prompt.astype(jnp.int32), args.gen)
-    dt = time.time() - t0
+    t0 = time.perf_counter()
+    out, stats = generate(params, cfg, prompt.astype(jnp.int32), args.gen,
+                          return_stats=True)
+    dt = time.perf_counter() - t0
     ntok = args.batch * args.gen
     print(f"generated {out.shape} in {dt:.2f}s ({ntok/dt:.1f} tok/s incl. compile)")
+    print(f"prefill {stats['prefill_s']:.2f}s; first token {stats['first_token_s']:.2f}s "
+          f"(incl. decode compile); steady-state {stats['steady_tok_s']:.1f} tok/s")
     print("sample:", out[0, :16].tolist())
 
 

@@ -125,7 +125,8 @@ class ModelCfg:
     # kernel routing: 'pallas' | 'interpret' | 'ref' | None (= platform default).
     # Resolved via kernels/dispatch.py; the REPRO_KERNEL_BACKEND env var wins.
     # Non-'ref' backends route attention, the mid-block rmsnorm+residual, and the
-    # Mamba-2 SSD scan through the fused Pallas kernels (ref-VJP backward).
+    # Mamba-2 SSD scan through the fused Pallas kernels, forward AND backward
+    # (dedicated dq/dk/dv, SSD reverse-scan, and rmsnorm backward kernels).
     kernel_backend: Optional[str] = None
 
     @property
@@ -346,16 +347,15 @@ def attention_apply(
         else:
             bias = _mask_bias(positions, k_pos, **mask_kw)
             out = _attend(qq, ck, cv, bias, cfg.attn_softcap, scale, cfg.attn_scores_bf16)
-    elif (kernel_backend(cfg) != "ref" and prefix_len is None and iota_positions
-          and not (cfg.attn_q_chunk and S % cfg.attn_q_chunk == 0
-                   and S > cfg.attn_q_chunk)):
+    elif kernel_backend(cfg) != "ref" and prefix_len is None and iota_positions:
         # fused flash-attention kernel. Gated on iota_positions (a static flag
         # from the caller: True only when positions were generated as arange, not
         # supplied by the batch) because the kernel masks by block index — custom
         # positions (packed sequences, resets) must take the bias path below.
-        # Configs that set attn_q_chunk keep the q-chunked path: this path's
-        # backward is the ref VJP (dense scores) until a backward kernel lands,
-        # which would silently void the working-set bound those configs rely on.
+        # attn_q_chunk configs also land here: the dedicated dq/dk/dv backward
+        # kernels stream over kv tiles from (o, lse) residuals, so the q-chunked
+        # scan's [B, q_chunk, Sk] working-set bound holds on BOTH passes — the
+        # chunked path below remains only for the masked/positions cases.
         out = kdis.dispatch_grad(
             "flash_attention", q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
             backend=kernel_backend(cfg), causal=blk.causal, window=blk.window,
@@ -701,7 +701,8 @@ def ssm_apply(p, x, cfg: ModelCfg, *, cache=None, **_):
         h0 = None if cache is None else cache["state"]
         if h0 is None and kernel_backend(cfg) != "ref":
             # fused SSD scan kernel (train path: zero initial state); VMEM-resident
-            # inter-chunk state instead of XLA-materialized per-chunk tensors
+            # inter-chunk state instead of XLA-materialized per-chunk tensors.
+            # Backward is the reverse-scan kernel from saved chunk-boundary states.
             y, new_state = kdis.dispatch_grad(
                 "ssd_scan", xs, dt, A, Bmat, Cmat,
                 backend=kernel_backend(cfg), chunk=chunk)

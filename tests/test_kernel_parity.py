@@ -2,8 +2,11 @@
 
 Auto-discovers every registered op and checks pallas(interpret) against the
 pure-XLA ref oracle over the op's registered shape cases (tile-aligned, ragged,
-non-tile-aligned) x dtypes (fp32 and bf16 activations/grads). Adding a kernel to
-kernels/dispatch.py with cases makes it covered here with no further test code.
+non-tile-aligned) x dtypes (fp32 and bf16 activations/grads) — for the FORWARD
+outputs and, via ``jax.grad`` through ``dispatch_grad``, for the GRADIENTS
+(dedicated backward kernels where registered, ref-VJP fallback elsewhere).
+Adding a kernel to kernels/dispatch.py with cases makes it covered here with no
+further test code.
 """
 import os
 
@@ -16,11 +19,24 @@ from repro.kernels import dispatch
 
 REQUIRED_OPS = {"flash_attention", "ssd_scan", "nag_update", "rmsnorm_residual"}
 
+# the training hot path must not fall back to the ref VJP for these: the whole
+# point of the backward subsystem is that fwd+bwd are both fused kernel passes
+REQUIRED_BWD_OPS = {"flash_attention", "ssd_scan", "rmsnorm_residual"}
+
 
 def test_registry_covers_kernel_suite():
     assert REQUIRED_OPS <= set(dispatch.registered_ops())
     for name in dispatch.registered_ops():
         assert len(dispatch.parity_cases(name)) >= 3, f"{name}: needs >= 3 shape cases"
+
+
+def test_backward_kernels_registered_no_ref_fallback():
+    """flash_attention / ssd_scan / rmsnorm_residual carry dedicated backward
+    kernels — dispatch_grad must not take the ref-VJP remat fallback for them."""
+    for name in REQUIRED_BWD_OPS:
+        op = dispatch.get_op(name)
+        assert op.fwd_res is not None and op.bwd is not None, \
+            f"{name}: missing dedicated backward (would remat through ref VJP)"
 
 
 def _all_cases():
@@ -43,11 +59,14 @@ def test_interpret_matches_ref(name, case, dtype, rng_key):
                                    rtol=tol, atol=tol)
 
 
-@pytest.mark.parametrize("name", ["rmsnorm_residual", "flash_attention"])
-def test_dispatch_grad_matches_ref_grad(name, rng_key):
-    """dispatch_grad: interpret forward + ref-VJP backward == ref end-to-end grad."""
-    case = dispatch.parity_cases(name)[0]
-    args, kwargs = case.make(rng_key, jnp.float32)
+@pytest.mark.parametrize("name,case,dtype", list(_all_cases()))
+def test_grad_parity_interpret_vs_ref(name, case, dtype, rng_key):
+    """jax.grad through dispatch_grad (interpret fwd + registered backward
+    kernels, ref-VJP fallback for ops without one) == ref autodiff end to end,
+    for every registered op x case x dtype. Gradient comparisons are normalized
+    by the ref gradient's scale (grads of a quadratic loss grow with the output
+    magnitude; the registered tolerances are relative-class bounds)."""
+    args, kwargs = case.make(rng_key, dtype)
 
     def loss_via(backend):
         def f(*xs):
@@ -56,10 +75,57 @@ def test_dispatch_grad_matches_ref_grad(name, rng_key):
                        for l in jax.tree.leaves(out))
         return f
 
-    g_int = jax.grad(loss_via("interpret"), argnums=tuple(range(len(args))))(*args)
-    g_ref = jax.grad(loss_via("ref"), argnums=tuple(range(len(args))))(*args)
-    for a, b in zip(jax.tree.leaves(g_int), jax.tree.leaves(g_ref)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+    argnums = tuple(range(len(args)))
+    g_int = jax.grad(loss_via("interpret"), argnums=argnums)(*args)
+    g_ref = jax.grad(loss_via("ref"), argnums=argnums)(*args)
+    tol = case.grad_tol(dtype)
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(g_int), jax.tree.leaves(g_ref))):
+        assert a.shape == b.shape and a.dtype == b.dtype, f"arg {i}"
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        scale = max(1.0, float(np.abs(b).max()))
+        np.testing.assert_allclose(a, b, rtol=tol, atol=tol * scale,
+                                   err_msg=f"grad wrt arg {i}")
+
+
+def test_flash_attention_saved_lse_matches_ref():
+    """The forward's saved backward residual (row logsumexp), not just its
+    output, must match the dense oracle — a wrong lse silently skews every
+    recomputed p tile in the backward."""
+    from repro.kernels import ref as kref
+    from repro.kernels.flash_attention import flash_attention
+
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (2, 4, 96, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, 96, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 2, 96, 32))
+    o, lse = flash_attention(q, k, v, block_q=64, block_k=64, return_residuals=True)
+    o_ref, lse_ref = kref.attention_ref(q, k, v, return_lse=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=2e-5, atol=2e-5)
+
+
+def test_dispatch_grad_vjp_cache_reuse(rng_key):
+    """dispatch_grad must reuse ONE memoized custom_vjp per (op, backend,
+    static kwargs) — a fresh closure per call is a new callable identity that
+    re-traces at every jit call site."""
+    case = dispatch.parity_cases("rmsnorm_residual")[0]
+    args, kwargs = case.make(rng_key, jnp.float32)
+    dispatch._VJP_CACHE.clear()
+    before = dict(dispatch.vjp_cache_stats)
+    dispatch.dispatch_grad("rmsnorm_residual", *args, backend="interpret", **kwargs)
+    assert len(dispatch._VJP_CACHE) == 1
+    cached = next(iter(dispatch._VJP_CACHE.values()))
+    dispatch.dispatch_grad("rmsnorm_residual", *args, backend="interpret", **kwargs)
+    assert dispatch.vjp_cache_stats["misses"] == before["misses"] + 1
+    assert dispatch.vjp_cache_stats["hits"] == before["hits"] + 1
+    # the second call ran the SAME callable object, not a rebuilt closure
+    assert next(iter(dispatch._VJP_CACHE.values())) is cached
+    # same op under different static kwargs is a distinct kernel variant
+    dispatch.dispatch_grad("rmsnorm_residual", *args, backend="interpret",
+                           **{**kwargs, "eps": 1e-5})
+    assert len(dispatch._VJP_CACHE) == 2
+    assert dispatch.vjp_cache_stats["misses"] == before["misses"] + 2
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,17 @@ def test_prefill_logits_match_full_forward(setup):
         rtol=2e-4, atol=2e-5)
 
 
+def test_generate_stats_separate_compile_from_steady_state(setup):
+    """The decode loop donates its cache buffers; the stats split the
+    compile-inclusive first token from steady-state throughput."""
+    cfg, params, prompt = setup
+    out, stats = serve.generate(params, cfg, prompt, 5, return_stats=True)
+    assert out.shape == (2, 5)
+    for k in ("prefill_s", "first_token_s", "steady_s", "steady_tok_s"):
+        assert k in stats and np.isfinite(stats[k]), k
+    assert stats["steady_tok_s"] > 0
+
+
 def test_temperature_sampling_reproducible_under_fixed_key(setup):
     cfg, params, prompt = setup
     kw = dict(temperature=1.0)
