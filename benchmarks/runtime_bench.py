@@ -40,7 +40,8 @@ def main(steps=40, stages=4):
     rows.append(("runtime/jit_engine", round(1e6 * jit_dt, 1),
                  f"ticks_s={1.0 / jit_dt:.2f}"))
 
-    # event runtime ticks/s (fixed delays — same semantics, real execution order)
+    # event runtime ticks/s (fixed delays — same semantics, real execution
+    # order; the loop keeps losses on device and host-syncs once at drain)
     rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
     rt.init(jax.random.PRNGKey(0))
     rt.run(batch_fn, 1)  # compile per-stage kernels
@@ -52,16 +53,50 @@ def main(steps=40, stages=4):
     full["event_fixed"] = {"losses": res.losses, "utilization": list(res.utilization),
                            "max_tau_obs": list(res.max_tau_obs)}
 
-    # schedule-only simulations: throughput cost of delay regimes (no tensors)
-    for spec in ("fixed", "jitter:0.3", "straggler:0,4.0"):
-        sim = simulate_schedule(P=stages, K=1, n_ticks=200, delay_model=spec)
-        rows.append((f"runtime/sim_{spec.split(':')[0]}",
-                     round(1e6 * sim["makespan"] / 200, 1),
-                     f"util_min={min(sim['utilization']):.2f};"
-                     f"max_tau={max(sim['max_tau_obs']):.0f}"))
-        full[f"sim_{spec}"] = sim["utilization"]
+    # event runtime under churn: one stage leaves mid-run and rejoins; the
+    # outage is paid in stash/mailbox memory + observed tau, never a drain
+    half = max(steps // 2, 2)
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
+                      RuntimeCfg(churn=f"1,{3 * half},{3 * (steps // 8 or 1)}"))
+    rt.init(jax.random.PRNGKey(0))
+    rt.run(batch_fn, 1)
+    t0 = time.time()
+    resc = rt.run(batch_fn, steps - 1)
+    ch_dt = (time.time() - t0) / max(steps - 1, 1)
+    rows.append(("runtime/event_churn", round(1e6 * ch_dt, 1),
+                 f"ticks_s={1.0 / ch_dt:.2f};"
+                 f"outage={max(resc.outage_time):.0f};"
+                 f"max_tau={max(resc.max_tau_obs):.0f};"
+                 f"mbox_hw={max(hw for s in range(1, stages) for hw in resc.mailbox_high_water[s])}"))
+    full["event_churn"] = {
+        "losses": resc.losses, "utilization": list(resc.utilization),
+        "max_tau_obs": list(resc.max_tau_obs),
+        "outage_time": list(resc.outage_time),
+        "max_stash": list(resc.max_stash),
+        "mailbox_high_water": [list(hw) for hw in resc.mailbox_high_water]}
 
-    save_json("runtime_bench.json", full)
+    # schedule-only simulations: throughput cost of delay + membership regimes
+    sim_cells = [("fixed", None), ("jitter:0.3", None), ("straggler:0,4.0", None),
+                 ("fixed", "1,200,100"), ("jitter:0.3", "1,200,100")]
+    for spec, churn in sim_cells:
+        sim = simulate_schedule(P=stages, K=1, n_ticks=200, delay_model=spec,
+                                churn=churn)
+        tag = spec.split(":")[0] + ("_churn" if churn else "")
+        derived = (f"util_min={min(sim['utilization']):.2f};"
+                   f"max_tau={max(sim['max_tau_obs']):.0f}")
+        if churn:
+            derived += (f";outage={max(sim['outage_time']):.0f};"
+                        f"max_stash={max(sim['max_stash'])}")
+        rows.append((f"runtime/sim_{tag}", round(1e6 * sim["makespan"] / 200, 1),
+                     derived))
+        full[f"sim_{spec}" + (f"_churn_{churn}" if churn else "")] = {
+            "utilization": list(sim["utilization"]),
+            "max_tau_obs": list(sim["max_tau_obs"]),
+            "max_stash": list(sim["max_stash"]),
+            "outage_time": list(sim["outage_time"]),
+            "mailbox_high_water": [list(hw) for hw in sim["mailbox_high_water"]]}
+
+    save_json("BENCH_runtime.json", full)
     emit_csv(rows)
     print(f"# event runtime overhead vs jit engine: {ev_dt / jit_dt:.2f}x "
           f"(per-stage dispatch + python event loop; deployment-faithful order)")

@@ -42,7 +42,7 @@ _OP_IDS = {"fwd": 0, "bwd": 1, "comm_fwd": 2, "comm_bwd": 3, "update": 4}
 @dataclasses.dataclass
 class Event:
     time: float
-    kind: str  # "fwd_arrive" | "bwd_arrive" | "free"
+    kind: str  # "fwd_arrive" | "bwd_arrive" | "free" | "leave" | "join"
     stage: int
     mb: int = -1
     payload: Any = None
@@ -70,6 +70,13 @@ class EventQueue:
         while self._heap and self._heap[0][0] == t0:
             out.append(heapq.heappop(self._heap)[2])
         return out
+
+    def only_membership(self) -> bool:
+        """True when every queued event is a leave/join — no work left for the
+        churn to affect. The runtime uses this to stop a drained run instead of
+        letting future outage windows fire pointlessly past the makespan (they
+        belong to the next run() chunk)."""
+        return all(t[2].kind in ("leave", "join") for t in self._heap)
 
     def __len__(self):
         return len(self._heap)
@@ -199,6 +206,101 @@ class StragglerDelay(DelayModel):
         return base * self.factor if slow else base
 
 
+@dataclasses.dataclass
+class OutageDelay(DelayModel):
+    """Outage-aware StragglerDelay analogue: one stage degrades `factor`x inside
+    a [mb_start, mb_end) microbatch window — a worker limping before it drops
+    out, or re-warming caches after a rejoin. Unlike a `ChurnModel` outage the
+    worker never stops dispatching; the slowdown is paid purely in latency.
+    Compose with a ChurnModel (leave/join around the window) to model the full
+    degrade -> drop -> rejoin -> recover arc."""
+
+    stage: int = 0
+    mb_start: int = 0
+    mb_end: int = 0
+    factor: float = 10.0
+    fwd: float = 1.0
+    bwd: float = 2.0
+    comm: float = 0.0
+
+    def _latency(self, stage, op, mb):
+        base = {"fwd": self.fwd, "bwd": self.bwd}.get(op, self.comm)
+        if (stage == self.stage and op in ("fwd", "bwd")
+                and self.mb_start <= mb < self.mb_end):
+            return base * self.factor
+        return base
+
+
+# ---------------------------------------------------------------------------
+# churn (membership) model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Outage:
+    """One scheduled leave/join window: stage `stage` leaves at simulated-clock
+    `start` and rejoins at `start + duration`. `duration` == 0 is the documented
+    no-op (leave and join collapse to the same instant; the runtime result is
+    bitwise identical to a churn-free run — asserted in tests/test_runtime.py).
+    A join is always scheduled: a leave without a finite rejoin would deadlock
+    the drain, which is exactly the barrier semantics this model replaces."""
+
+    stage: int
+    start: float
+    duration: float
+
+
+@dataclasses.dataclass
+class ChurnModel:
+    """Schedules worker outages for the event runtime (`RuntimeCfg.churn`).
+
+    `slack` is the elastic in-flight allowance granted to every stage UPSTREAM
+    of a currently-dead stage: None lifts their caps entirely for the outage
+    (the pipe keeps forwarding, paying the outage in stash/mailbox memory and
+    observed tau); an int bounds the extra buffered microbatches per stage.
+    """
+
+    outages: tuple = ()
+    slack: Optional[int] = None
+
+    def __post_init__(self):
+        for o in self.outages:
+            if o.duration < 0 or o.start < 0:
+                raise ValueError(f"outage windows must be non-negative, got {o}")
+        if self.slack is not None and self.slack < 0:
+            raise ValueError(f"churn slack must be >= 0, got {self.slack}")
+
+    def validate(self, P: int):
+        for o in self.outages:
+            if not 0 <= o.stage < P:
+                raise ValueError(f"outage stage {o.stage} out of range for P={P}")
+        return self
+
+
+def make_churn_model(spec, slack: Optional[int] = None) -> ChurnModel:
+    """Parse a CLI-friendly churn spec:
+
+      "STAGE,START,DURATION" — one outage window, or several joined with "/":
+      "1,10,5/2,30,4" (an optional leading "churn:" tag is accepted). Each
+      window must have exactly three fields; excess or malformed fields raise.
+    """
+    if isinstance(spec, ChurnModel):
+        return spec if slack is None else dataclasses.replace(spec, slack=slack)
+    name, sep, args = spec.partition(":")
+    if sep and name != "churn":
+        raise ValueError(f"unknown churn spec {spec!r}")
+    body = args if sep else spec
+    outages = []
+    for win in body.split("/"):
+        parts = [p for p in win.split(",") if p.strip() != ""]
+        if len(parts) != 3:
+            raise ValueError(
+                f"churn window {win!r} must be STAGE,START,DURATION (got "
+                f"{len(parts)} fields)")
+        outages.append(Outage(int(parts[0]), float(parts[1]), float(parts[2])))
+    return ChurnModel(tuple(outages), slack=slack)
+
+
 class TraceDelay(DelayModel):
     """Replay measured latencies: traces[op][stage] is a list cycled over mb.
 
@@ -222,11 +324,30 @@ class TraceDelay(DelayModel):
         return float(row[mb % len(row)])
 
 
+def _spec_fields(name: str, args: str, lo: int, hi: int) -> list:
+    """Split a spec's comma arg list, enforcing arity — excess or empty fields
+    raise instead of being silently dropped (the pre-ISSUE-4 parser ate them)."""
+    parts = args.split(",") if args else []
+    if any(p.strip() == "" for p in parts):
+        raise ValueError(f"empty field in {name!r} spec args {args!r}")
+    if not lo <= len(parts) <= hi:
+        raise ValueError(
+            f"{name!r} spec takes {lo}..{hi} args, got {len(parts)}: {args!r}")
+    return parts
+
+
 def make_delay_model(spec: str | DelayModel | None, seed: int = 0) -> DelayModel:
     """Parse a CLI-friendly spec:
 
-      "fixed" | "fixed:FWD,BWD,COMM" | "jitter:SIGMA" | "straggler:STAGE,FACTOR"
-      | "straggler:STAGE,FACTOR,PERIOD" | "trace:/path/to/traces.json"
+      "fixed" | "fixed:FWD[,BWD[,COMM]]"
+      | "jitter:SIGMA[,FWD,BWD,COMM]"
+      | "straggler:STAGE[,FACTOR[,PERIOD]]"
+      | "outage:STAGE,MB_START,MB_END[,FACTOR]"
+      | "trace:/path/to/traces.json"
+
+    `seed` keys the stochastic models (jitter); the deterministic models have
+    no randomness to seed. Unknown names, excess args, or malformed fields
+    raise ValueError (spec-roundtrip contract, tests/test_runtime.py).
     """
     if spec is None:
         return FixedDelay()
@@ -234,20 +355,34 @@ def make_delay_model(spec: str | DelayModel | None, seed: int = 0) -> DelayModel
         return spec
     name, _, args = spec.partition(":")
     if name == "fixed":
-        vals = [float(x) for x in args.split(",")] if args else []
+        vals = [float(x) for x in _spec_fields(name, args, 0, 3)]
         return FixedDelay(*vals)
     if name == "jitter":
-        return JitterDelay(sigma=float(args) if args else 0.25, seed=seed)
+        parts = _spec_fields(name, args, 0, 4)
+        if len(parts) in (2, 3):
+            raise ValueError(
+                f"'jitter' spec is SIGMA or SIGMA,FWD,BWD,COMM, got {args!r}")
+        kw = {"sigma": float(parts[0])} if parts else {}
+        if len(parts) == 4:
+            kw.update(fwd=float(parts[1]), bwd=float(parts[2]), comm=float(parts[3]))
+        return JitterDelay(seed=seed, **kw)
     if name == "straggler":
-        vals = args.split(",") if args else []
+        parts = _spec_fields(name, args, 0, 3)
         kw = {}
-        if len(vals) > 0:
-            kw["slow_stage"] = int(vals[0])
-        if len(vals) > 1:
-            kw["factor"] = float(vals[1])
-        if len(vals) > 2:
-            kw["period"] = int(vals[2])
+        if len(parts) > 0:
+            kw["slow_stage"] = int(parts[0])
+        if len(parts) > 1:
+            kw["factor"] = float(parts[1])
+        if len(parts) > 2:
+            kw["period"] = int(parts[2])
         return StragglerDelay(**kw)
+    if name == "outage":
+        parts = _spec_fields(name, args, 3, 4)
+        kw = {"stage": int(parts[0]), "mb_start": int(parts[1]),
+              "mb_end": int(parts[2])}
+        if len(parts) > 3:
+            kw["factor"] = float(parts[3])
+        return OutageDelay(**kw)
     if name == "trace":
         return TraceDelay.from_json(args)
     raise ValueError(f"unknown delay model spec {spec!r}")

@@ -12,7 +12,13 @@ executes the pipeline the way a real deployment runs it:
   capacity P - s (microbatch units),
 - per-microbatch weight stashing (a dict keyed by microbatch id — the
   real-system analogue of the engine's ring buffer; its peak size IS the
-  max observed delay + 1), and
+  max observed delay + 1),
+- first-class membership churn: `RuntimeCfg.churn` schedules leave/join
+  windows (`events.ChurnModel`); a dead stage stops dispatching while its
+  mailboxes keep buffering, upstream caps turn elastic so the pipe keeps
+  forwarding, and the rejoined worker replays its backlog from its own live
+  params — the outage is paid in stash/mailbox memory and observed tau, not
+  in a drain barrier (DESIGN.md §9), and
 - the *observed* staleness of every update fed back into the method
   (`AsyncTrainer._stage_update` with a live tau), so lr discounting, PipeMare
   prediction and gradient forecasting react to stragglers and jitter instead
@@ -52,6 +58,9 @@ class RuntimeCfg:
     # methods). An int or tuple raises the buffer bound — elastic mailboxes let
     # observed delays GROW behind a straggler instead of stalling the pipe.
     in_flight: Optional[object] = None
+    # None -> always-alive stages; or an events.ChurnModel / spec string
+    # scheduling leave/join windows on the simulated clock (DESIGN.md §9).
+    churn: Optional[object] = None
     record_timeline: bool = False
     seed: int = 0  # forwarded to spec-string delay models
 
@@ -65,6 +74,12 @@ class RuntimeResult:
     utilization: tuple  # per-stage busy fraction of the makespan
     max_stash: tuple  # per-stage peak stash entries (== max observed tau + 1)
     max_tau_obs: tuple  # per-stage peak observed delay
+    # per-stage simulated time spent left (churn outages) during this run()
+    outage_time: tuple = ()
+    # per-stage (fwd, bwd) peak buffered microbatches since init — mailbox
+    # memory pressure; bounded by the in-flight caps of the neighbour stages
+    # (stage 0's fwd box is the preloaded data source, not a transport buffer)
+    mailbox_high_water: tuple = ()
     timeline: Optional[list] = None  # (stage, op, mb, start, end) if recorded
 
 
@@ -92,6 +107,12 @@ class _StageWorker:
         self.busy_time = 0.0
         self.max_stash = 0
         self.max_tau = 0.0
+        # membership lifecycle (churn): a dead worker stops dispatching but its
+        # mailboxes keep buffering; params/stash/carries persist across the
+        # outage — nothing restages, the backlog replays on join
+        self.alive = True
+        self.left_at = 0.0
+        self.outage_time = 0.0
 
     @property
     def in_flight(self):
@@ -112,9 +133,24 @@ class EventRuntime:
         self.P = trainer.P
         self.K = trainer.ecfg.update_interval
         self.caps = self._resolve_caps()
+        self.churn = (events.make_churn_model(self.rcfg.churn).validate(self.P)
+                      if self.rcfg.churn is not None else None)
+        self._dead = set()  # stages currently left (membership view)
+        self._churn_fired = set()  # outage indices already scheduled
         self._stages = None
         self._clock = 0.0
         self._u_done = 0
+
+    def _cap(self, s: int) -> float:
+        """Effective in-flight capacity of stage s. While any stage downstream
+        of s is dead, s's cap is raised by the churn slack (None = unbounded):
+        upstream keeps forwarding through the outage, paying it in stash and
+        mailbox memory — and observed tau — instead of a barrier."""
+        if self._dead and any(j > s for j in self._dead):
+            if self.churn.slack is None:
+                return float("inf")
+            return self.caps[s] + self.churn.slack
+        return self.caps[s]
 
     def _resolve_caps(self) -> tuple:
         P = self.P
@@ -165,7 +201,8 @@ class EventRuntime:
         re-warmed from the live forward point — staleness history resets, the
         same documented behaviour as checkpoint.restage on elastic events."""
         for st in self._stages:
-            if st.in_flight or st.stash or st.acc_n:
+            if (st.in_flight or st.stash or st.carries or st.acc_n
+                    or len(st.fwd_box) or len(st.bwd_box) or not st.alive):
                 raise RuntimeError("export_state requires a drained pipeline")
         params, stashes, opts, extras = [], [], [], []
         for i, st in enumerate(self._stages):
@@ -258,14 +295,42 @@ class EventRuntime:
         g_end = (u0 + n_ticks) * K
         t_start = self._clock
         busy0 = [st.busy_time for st in self._stages]
+        out0 = [st.outage_time for st in self._stages]
 
         q = events.EventQueue()
         src = self._stages[0]
         for g in range(u0 * K, g_end):
             src.fwd_box.put(g, None)  # stage-0 input carry is synthesized fresh
+        # schedule churn windows that have not yet elapsed on the simulated
+        # clock; a window straddling this run's natural end simply delays the
+        # drain until its join fires (joins are always scheduled — see Outage)
+        pushed_outages, fired_leaves = {}, set()
+        if self.churn is not None:
+            for idx, o in enumerate(self.churn.outages):
+                if idx in self._churn_fired:
+                    continue
+                end = o.start + o.duration
+                if end < self._clock:  # already over before this run started
+                    self._churn_fired.add(idx)
+                    continue
+                q.push(max(o.start, self._clock), "leave", o.stage, payload=idx)
+                q.push(end, "join", o.stage)
+                self._churn_fired.add(idx)
+                pushed_outages[idx] = o
         q.push(self._clock, "free", 0)
 
+        def drained_alive():
+            return all(st.n_updates == u0 + n_ticks and not st.in_flight
+                       and not st.acc_n and st.alive for st in self._stages)
+
         while q:
+            # outage windows beyond this run's work belong to the NEXT run()
+            # chunk: once the pipe is drained (and everyone is back), un-fire
+            # the outages whose leave never happened and stop
+            if pushed_outages and q.only_membership() and drained_alive():
+                for idx in set(pushed_outages) - fired_leaves:
+                    self._churn_fired.discard(idx)
+                break
             batch_evs = q.pop_batch()
             now = batch_evs[0].time
             touched = set()
@@ -275,28 +340,60 @@ class EventRuntime:
                     st.fwd_box.put(ev.mb, ev.payload)
                 elif ev.kind == "bwd_arrive":
                     st.bwd_box.put(ev.mb, ev.payload)
+                elif ev.kind == "leave":
+                    st.alive = False
+                    st.left_at = now
+                    self._dead.add(ev.stage)
+                    fired_leaves.add(ev.payload)
+                    # upstream caps just turned elastic: stages idling at their
+                    # old capacity get no further events (no cotangents flow
+                    # through a dead stage), so re-dispatch them here
+                    touched.update(range(ev.stage))
+                    if self._timeline is not None:
+                        self._timeline.append((ev.stage, "leave", -1, now, now))
+                elif ev.kind == "join":
+                    # re-adopt the live params: the worker resumes from its own
+                    # weights — nothing restages, the buffered backlog replays
+                    # and the inflated observed tau flows through _stage_update
+                    st.alive = True
+                    st.outage_time += now - st.left_at
+                    st.busy_until = max(st.busy_until, now)
+                    self._dead.discard(ev.stage)
+                    if self._timeline is not None:
+                        self._timeline.append((ev.stage, "join", -1, now, now))
                 touched.add(ev.stage)
             for s in sorted(touched):
                 self._dispatch(s, now, q, g_end)
         self._clock = max(self._clock, max(st.busy_until for st in self._stages))
 
         for st in self._stages:
-            if st.n_updates != u0 + n_ticks or st.in_flight or st.acc_n:
+            if (st.n_updates != u0 + n_ticks or st.in_flight or st.acc_n
+                    or st.stash or st.carries or len(st.fwd_box)
+                    or len(st.bwd_box) or not st.alive):
                 raise RuntimeError(
                     f"stage {st.idx} ended at update {st.n_updates} with "
-                    f"{st.in_flight} in flight (expected {u0 + n_ticks}, 0): "
+                    f"{st.in_flight} in flight, {len(st.stash)} stashed, "
+                    f"{len(st.carries)} carries, {len(st.fwd_box)}/"
+                    f"{len(st.bwd_box)} boxed, alive={st.alive} "
+                    f"(expected {u0 + n_ticks}, all empty): "
                     "event loop did not drain")
         self._u_done = u0 + n_ticks
 
+        # one host transfer for the whole run: losses stayed on device inside
+        # the event loop (a per-event float() would serialize the loop on D2H)
+        loss_host = {g: float(v) for g, v in
+                     zip(self._losses, jax.device_get(list(self._losses.values())))}
+        lr_host = np.broadcast_to(np.asarray(jax.device_get(
+            self.trainer.lr_sched(jnp.arange(u0, u0 + n_ticks))), np.float32),
+            (n_ticks,))  # constant() returns a scalar for any t
         losses, metrics, taus = [], [], []
         for u in range(u0, u0 + n_ticks):
-            group = [self._losses[g] for g in range(u * K, (u + 1) * K)]
+            group = [loss_host[g] for g in range(u * K, (u + 1) * K)]
             loss_u = float(np.mean(group))
             tau_u = tuple(self._taus_by_u[u])
             losses.append(loss_u)
             taus.append(tau_u)
-            metrics.append({"loss": loss_u,
-                            "lr": float(self.trainer.lr_sched(jnp.asarray(u))),
+            metrics.append({"loss": loss_u, "lr": float(lr_host[u - u0]),
                             "tau_obs": tau_u})
         span = self._clock - t_start
         util = tuple((st.busy_time - b0) / span if span > 0 else 0.0
@@ -306,11 +403,16 @@ class EventRuntime:
             utilization=util,
             max_stash=tuple(st.max_stash for st in self._stages),
             max_tau_obs=tuple(st.max_tau for st in self._stages),
+            outage_time=tuple(st.outage_time - o0
+                              for st, o0 in zip(self._stages, out0)),
+            mailbox_high_water=tuple(
+                (st.fwd_box.high_water, st.bwd_box.high_water)
+                for st in self._stages),
             timeline=self._timeline)
 
     def _dispatch(self, s: int, now: float, q: events.EventQueue, g_end: int):
         st = self._stages[s]
-        if st.busy_until > now:
+        if not st.alive or st.busy_until > now:
             return
         tr = self.trainer
         # 1) backward priority, strictly in microbatch order
@@ -367,8 +469,9 @@ class EventRuntime:
                 self._timeline.append((s, "bwd", g, now, done))
             return
         # 2) forward: next expected microbatch, gated by in-flight capacity
+        # (elastic during an outage downstream — see _cap)
         g = st.next_fwd
-        if g < g_end and st.fwd_box.ready(g) and st.in_flight < self.caps[s]:
+        if g < g_end and st.fwd_box.ready(g) and st.in_flight < self._cap(s):
             item = st.fwd_box.take(g)
             carry_in = staged.init_carry() if s == 0 else item
             b = self._mb_batch(g)
@@ -389,7 +492,10 @@ class EventRuntime:
                 q.push(done + self.dm.latency(s, "comm_fwd", g),
                        "fwd_arrive", s + 1, g, carry_out)
             else:
-                self._losses[g] = float(carry_out["loss"])
+                # keep the loss on device — run() gathers them all in ONE
+                # device_get at the drain boundary (a float() here would block
+                # the event loop on a host transfer every last-stage forward)
+                self._losses[g] = carry_out["loss"]
                 q.push(done, "bwd_arrive", s, g, _SEED_CT)
             if self._timeline is not None:
                 self._timeline.append((s, "fwd", g, now, done))
@@ -401,26 +507,35 @@ class EventRuntime:
 
 
 def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
-                      in_flight=None, sync: bool = False, seed: int = 0) -> dict:
+                      in_flight=None, sync: bool = False, seed: int = 0,
+                      churn=None) -> dict:
     """Run the runtime's 1F1B event discipline with no tensor math: returns
     {"makespan", "utilization", "taus" (per-update per-stage observed),
-    "max_tau_obs", "max_stash"}. Same capacity and priority rules as
-    EventRuntime, so its fixed-delay taus equal core/delay.stage_delays
-    (asserted in tests/test_runtime.py); used by `launch/dryrun.py
-    --sim-schedule` to estimate straggler/jitter throughput without compiling
-    a model."""
+    "max_tau_obs", "max_stash", "outage_time", "mailbox_high_water"}. Same
+    capacity, priority, and membership (churn) rules as EventRuntime, so its
+    fixed-delay taus equal core/delay.stage_delays and its churn schedules
+    match the full runtime event for event (asserted in tests/test_runtime.py);
+    used by `launch/dryrun.py --sim-schedule` to estimate straggler / jitter /
+    outage throughput without compiling a model."""
     dm = events.make_delay_model(delay_model, seed=seed)
+    cm = events.make_churn_model(churn).validate(P) if churn is not None else None
     if in_flight is not None:
         caps = tuple(int(x) for x in (in_flight if isinstance(in_flight, (tuple, list))
                                       else (in_flight,) * P))
     else:
         caps = (1,) * P if sync else tuple(P - s for s in range(P))
     g_end = n_ticks * K
+    dead = set()
+
+    def eff_cap(s):
+        if dead and any(j > s for j in dead):
+            return float("inf") if cm.slack is None else caps[s] + cm.slack
+        return caps[s]
 
     class _S:
         __slots__ = ("next_fwd", "next_bwd", "n_updates", "busy_until",
                      "busy_time", "fwd_box", "bwd_box", "stash", "acc_tau",
-                     "max_stash", "max_tau")
+                     "max_stash", "max_tau", "alive", "left_at", "outage_time")
 
         def __init__(self):
             self.next_fwd = self.next_bwd = self.n_updates = 0
@@ -429,6 +544,7 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
             self.stash = set()
             self.acc_tau = []
             self.max_stash, self.max_tau = 0, 0.0
+            self.alive, self.left_at, self.outage_time = True, 0.0, 0.0
 
     stages = [_S() for _ in range(P)]
     taus_by_u = {}
@@ -436,11 +552,15 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
     tau_of = {}  # (stage, mb) -> observed tau at forward
     for g in range(g_end):
         stages[0].fwd_box.put(g, None)
+    if cm is not None:
+        for o in cm.outages:
+            q.push(o.start, "leave", o.stage)
+            q.push(o.start + o.duration, "join", o.stage)
     q.push(0.0, "free", 0)
 
     def dispatch(s, now):
         st = stages[s]
-        if st.busy_until > now:
+        if not st.alive or st.busy_until > now:
             return
         g = st.next_bwd
         if st.bwd_box.ready(g):
@@ -462,7 +582,7 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
                        "bwd_arrive", s - 1, g)
             return
         g = st.next_fwd
-        if g < g_end and st.fwd_box.ready(g) and st.next_fwd - st.next_bwd < caps[s]:
+        if g < g_end and st.fwd_box.ready(g) and st.next_fwd - st.next_bwd < eff_cap(s):
             st.fwd_box.take(g)
             tau = g // K - st.n_updates
             tau_of[(s, g)] = tau
@@ -481,14 +601,30 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
                 q.push(st.busy_until, "bwd_arrive", s, g)
 
     while q:
+        # mirror EventRuntime.run: outages past the drained makespan fire in a
+        # later chunk there, so they must not accrue outage time here either
+        if q.only_membership() and all(
+                st.n_updates == n_ticks and st.next_fwd == st.next_bwd
+                and st.alive for st in stages):
+            break
         evs = q.pop_batch()
         now = evs[0].time
         touched = set()
         for ev in evs:
+            st = stages[ev.stage]
             if ev.kind == "fwd_arrive":
-                stages[ev.stage].fwd_box.put(ev.mb, None)
+                st.fwd_box.put(ev.mb, None)
             elif ev.kind == "bwd_arrive":
-                stages[ev.stage].bwd_box.put(ev.mb, None)
+                st.bwd_box.put(ev.mb, None)
+            elif ev.kind == "leave":
+                st.alive, st.left_at = False, now
+                dead.add(ev.stage)
+                touched.update(range(ev.stage))  # upstream caps turned elastic
+            elif ev.kind == "join":
+                st.alive = True
+                st.outage_time += now - st.left_at
+                st.busy_until = max(st.busy_until, now)
+                dead.discard(ev.stage)
             touched.add(ev.stage)
         for s in sorted(touched):
             dispatch(s, now)
@@ -501,4 +637,7 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
         "taus": [tuple(taus_by_u[u]) for u in range(n_ticks)],
         "max_tau_obs": tuple(st.max_tau for st in stages),
         "max_stash": tuple(st.max_stash for st in stages),
+        "outage_time": tuple(st.outage_time for st in stages),
+        "mailbox_high_water": tuple(
+            (st.fwd_box.high_water, st.bwd_box.high_water) for st in stages),
     }

@@ -35,7 +35,10 @@ class SwarmCfg:
 
 class SwarmState(NamedTuple):
     inner: object  # AsyncState with replica-leading-axis params/opt/stash
-    err: tuple  # error-feedback residuals per stage (or empty dicts)
+    # error-feedback residuals per stage with a leading [R] axis (or empty
+    # dicts when compression is off): each replica quantizes its OWN delta and
+    # carries its OWN residual — the EF telescope is per-replica bookkeeping
+    err: tuple
 
 
 def _quantize_int8_ef(delta, err):
@@ -76,7 +79,7 @@ class SwarmTrainer:
             opt=tuple(rep(o) for o in base.opt),
             extra=tuple(rep(e) for e in base.extra),
         )
-        err = tuple(jax.tree.map(lambda p: jnp.zeros(p.shape[1:], jnp.float32), p)
+        err = tuple(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), p)
                     for p in inner.params) if self.scfg.compress else tuple({} for _ in inner.params)
         return SwarmState(inner, err)
 
@@ -103,17 +106,15 @@ class SwarmTrainer:
             if self.scfg.compress:
                 delta = jax.tree.map(
                     lambda mn, x: mn[None] - x.astype(jnp.float32), mean, p)
-                # each replica applies the (quantized) delta toward the mean
-                deltas, errs = [], []
-                for r in range(R):
-                    d_r = jax.tree.map(lambda d: d[r], delta)
-                    dq, ne = _quantize_int8_ef(d_r, e)
-                    deltas.append(dq)
-                    errs.append(ne)
+                # each replica quantizes ITS OWN delta toward the mean and
+                # carries ITS OWN residual (leading [R] axis on e). Averaging
+                # residuals across replicas breaks the EF telescope — opposite
+                # per-replica errors cancel in the mean, so the carried
+                # correction vanishes and quantization error accumulates
+                # instead of being re-injected (tests/test_swarm.py).
+                dq, new_err = jax.vmap(_quantize_int8_ef)(delta, e)
                 newp = jax.tree.map(
-                    lambda x, *ds: (x.astype(jnp.float32) + jnp.stack(ds)).astype(x.dtype),
-                    p, *deltas)
-                new_err = jax.tree.map(lambda *es: sum(es) / R, *errs)
+                    lambda x, d: (x.astype(jnp.float32) + d).astype(x.dtype), p, dq)
                 return newp, new_err
             newp = jax.tree.map(
                 lambda x, mn: jnp.broadcast_to(mn[None], x.shape).astype(x.dtype), p, mean)
@@ -140,7 +141,7 @@ class SwarmTrainer:
     # -- event-driven async mode ----------------------------------------------
 
     def run_event(self, batch_fns, n_ticks: int, *, key=None, delay_models=None,
-                  rcfg=None, in_flight=None):
+                  rcfg=None, in_flight=None, churn=None):
         """Route the async SWARM modes through the event-driven runtime
         (core/runtime.py): each replica is its own EventRuntime — its own
         DelayModel, its own observed staleness — and every `sync_every` updates
@@ -151,8 +152,20 @@ class SwarmTrainer:
 
         batch_fns: one batch_fn(t) -> [K, ...] per replica.
         delay_models: optional per-replica DelayModel / spec string.
-        Returns {"losses": [R][n_ticks], "taus": [R] per-tick tuples,
-                 "n_syncs", "runtimes": the live EventRuntime objects}.
+        churn: optional events.ChurnModel / spec mapping the runtime's churn
+          events onto replica membership: Outage.stage is the REPLICA index and
+          start/duration are in update (tick) units, quantized to sync rounds.
+          A replica whose outage intersects a round drops out of it — no
+          compute, no averaging contribution (the remaining replicas keep
+          syncing; at least one must stay alive). On rejoin the replica
+          re-syncs: it adopts the last synced stage means as its live params
+          (full state fetch, uncompressed) and, when compressing, resets its
+          error-feedback residuals — its local deltas no longer describe the
+          adopted weights. Its update counter resumes where it left off, so
+          its loss stream is simply shorter by the dropped rounds.
+        Returns {"losses": [R][<=n_ticks], "taus": [R] per-tick tuples,
+                 "n_syncs", "dropped": per-replica rounds skipped,
+                 "runtimes": the live EventRuntime objects}.
         """
         from repro.core import events as events_mod
         from repro.core import runtime as rt_mod
@@ -160,6 +173,7 @@ class SwarmTrainer:
         R = self.scfg.replicas
         if len(batch_fns) != R:
             raise ValueError(f"need {R} batch fns, got {len(batch_fns)}")
+        cm = events_mod.make_churn_model(churn).validate(R) if churn is not None else None
         base = self.inner.init(key if key is not None else jax.random.PRNGKey(0))
         rts = []
         for r in range(R):
@@ -178,45 +192,81 @@ class SwarmTrainer:
                     in_flight=in_flight, seed=r)
             rts.append(rt_mod.EventRuntime(self.inner, cfg_r).init_from_state(base))
 
-        err = [tuple(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), p)
-                     for p in base.params) if self.scfg.compress else
-               tuple({} for _ in base.params) for _ in range(R)]
+        def zero_err():
+            return (tuple(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), p)
+                          for p in base.params) if self.scfg.compress
+                    else tuple({} for _ in base.params))
+
+        err = [zero_err() for _ in range(R)]
         losses = [[] for _ in range(R)]
         taus = [[] for _ in range(R)]
+        last_mean = None  # per-stage means of the most recent sync
+        was_out = [False] * R
+        dropped = [0] * R
         n_syncs = 0
         done = 0
         while done < n_ticks:
             chunk = min(self.scfg.sync_every, n_ticks - done)
+            # a zero-duration window is an empty interval: it intersects no
+            # round (the documented Outage no-op contract holds here too)
+            out = [cm is not None and any(
+                o.stage == r and o.duration > 0 and o.start < done + chunk
+                and o.start + o.duration > done
+                for o in cm.outages) for r in range(R)]
+            if all(out):
+                raise RuntimeError(
+                    f"all {R} replicas in outage over ticks [{done}, {done + chunk})")
             for r in range(R):
+                if out[r]:
+                    dropped[r] += 1
+                    continue
+                if was_out[r]:
+                    # re-sync on rejoin: adopt the last synced means wholesale
+                    # (a rejoin is a full state fetch, not a compressed delta)
+                    # and drop stale EF residuals — they describe deltas of
+                    # weights this replica no longer holds
+                    if last_mean is not None:
+                        for i in range(self.inner.P):
+                            newp = jax.tree.map(
+                                lambda mn, x: mn.astype(x.dtype),
+                                last_mean[i], rts[r]._stages[i].params)
+                            rts[r]._stages[i].params = newp
+                            rts[r]._stages[i].fwd_point = newp
+                    err[r] = zero_err()
                 res = rts[r].run(batch_fns[r], chunk)
                 losses[r].extend(res.losses)
                 taus[r].extend(res.taus)
             done += chunk
-            # stage-wise weight averaging across the (drained) replicas
+            # stage-wise weight averaging across the (drained) alive replicas
+            alive = [r for r in range(R) if not out[r]]
+            last_mean = []
             for i in range(self.inner.P):
-                stage_params = [rts[r]._stages[i].params for r in range(R)]
+                stage_params = [rts[r]._stages[i].params for r in alive]
                 mean = jax.tree.map(
-                    lambda *xs: sum(x.astype(jnp.float32) for x in xs) / R,
+                    lambda *xs: sum(x.astype(jnp.float32) for x in xs) / len(alive),
                     *stage_params)
-                for r in range(R):
+                last_mean.append(mean)
+                for r in alive:
                     if self.scfg.compress:
                         d_r = jax.tree.map(
                             lambda mn, x: mn - x.astype(jnp.float32),
-                            mean, stage_params[r])
+                            mean, rts[r]._stages[i].params)
                         dq, err_r = _quantize_int8_ef(d_r, err[r][i])
                         newp = jax.tree.map(
                             lambda x, d: (x.astype(jnp.float32) + d).astype(x.dtype),
-                            stage_params[r], dq)
+                            rts[r]._stages[i].params, dq)
                         err[r] = err[r][:i] + (err_r,) + err[r][i + 1:]
                     else:
                         newp = jax.tree.map(
-                            lambda x, mn: mn.astype(x.dtype), stage_params[r], mean)
+                            lambda x, mn: mn.astype(x.dtype),
+                            rts[r]._stages[i].params, mean)
                     rts[r]._stages[i].params = newp
                     # the drained stash re-warms from the synced weights
                     rts[r]._stages[i].fwd_point = newp
+            was_out = out
             n_syncs += 1
         return {"losses": losses, "taus": taus, "n_syncs": n_syncs,
-                "runtimes": rts, "err": err}
+                "dropped": dropped, "runtimes": rts, "err": err}
 
     def eval_loss(self, state: SwarmState, batch):
         """Loss of replica-0 weights (post-sync evaluation)."""

@@ -222,18 +222,21 @@ def run_cell(arch, shape, *, multi_pod=False, method="ours", n_stages=4,
     return rec
 
 
-def sim_schedule_report(n_stages: int, accum: int, ticks: int, models: list) -> list:
+def sim_schedule_report(n_stages: int, accum: int, ticks: int, models: list,
+                        churn=None) -> list:
     """Compute-free pipeline-schedule dry-run: run the event runtime's 1F1B
-    discipline (core/runtime.simulate_schedule) under each delay model and
-    report makespan / per-stage utilization / observed-staleness envelope —
-    capacity planning for stragglers and jittery links without compiling a
-    single HLO."""
+    discipline (core/runtime.simulate_schedule) under each delay model — and
+    optionally a churn (leave/join) schedule — and report makespan / per-stage
+    utilization / observed-staleness envelope / outage + mailbox memory cost:
+    capacity planning for stragglers, jittery links, and elastic membership
+    without compiling a single HLO."""
     from repro.core.runtime import simulate_schedule
 
     recs = []
     for spec in models:
-        r = simulate_schedule(P=n_stages, K=accum, n_ticks=ticks, delay_model=spec)
-        recs.append({
+        r = simulate_schedule(P=n_stages, K=accum, n_ticks=ticks,
+                              delay_model=spec, churn=churn)
+        rec = {
             "delay_model": spec,
             "P": n_stages, "K": accum, "ticks": ticks,
             "makespan": round(r["makespan"], 3),
@@ -241,7 +244,12 @@ def sim_schedule_report(n_stages: int, accum: int, ticks: int, models: list) -> 
             "utilization": [round(u, 3) for u in r["utilization"]],
             "max_tau_obs": list(r["max_tau_obs"]),
             "max_stash": list(r["max_stash"]),
-        })
+        }
+        if churn is not None:
+            rec["churn"] = churn
+            rec["outage_time"] = [round(t, 3) for t in r["outage_time"]]
+            rec["mailbox_high_water"] = [list(hw) for hw in r["mailbox_high_water"]]
+        recs.append(rec)
     return recs
 
 
@@ -261,11 +269,15 @@ def main():
     ap.add_argument("--sim-ticks", type=int, default=100)
     ap.add_argument("--sim-models", default="fixed;jitter:0.3;straggler:0,4.0",
                     help="';'-separated delay-model specs (see core/events.py)")
+    ap.add_argument("--sim-churn", default=None,
+                    help="leave/join windows STAGE,START,DURATION[/...] applied "
+                         "to every --sim-models cell (see core/events.ChurnModel)")
     args = ap.parse_args()
 
     if args.sim_schedule:
         recs = sim_schedule_report(args.n_stages, args.accum or 1, args.sim_ticks,
-                                   args.sim_models.split(";"))
+                                   args.sim_models.split(";"),
+                                   churn=args.sim_churn)
         for rec in recs:
             print(json.dumps(rec), flush=True)
         if args.out:

@@ -29,15 +29,22 @@ from repro.ft import loop as ftloop
 
 
 def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None,
-                   seed=0, ckpt_dir=None, ckpt_every=0, log_every=0, log_fn=print):
-    """Event-runtime counterpart of ft.loop.train_loop: resume + periodic ckpt."""
+                   churn=None, seed=0, ckpt_dir=None, ckpt_every=0, log_every=0,
+                   log_fn=print):
+    """Event-runtime counterpart of ft.loop.train_loop: resume + periodic ckpt.
+
+    churn: optional events.ChurnModel / spec ("STAGE,START,DURATION[/...]") of
+    scheduled leave/join windows on the simulated clock. Windows run inside
+    whichever checkpoint chunk reaches them (a window straddling a chunk's
+    natural end just delays that chunk's drain until the join fires)."""
     from repro.checkpoint import checkpoint as ckpt
     from repro.core.runtime import EventRuntime, RuntimeCfg
 
     import math
 
     rt = EventRuntime(trainer, RuntimeCfg(delay_model=delay_model,
-                                          in_flight=in_flight, seed=seed))
+                                          in_flight=in_flight, churn=churn,
+                                          seed=seed))
     rt.init(jax.random.PRNGKey(seed))
     resumed_from = -1
     if ckpt_dir:
@@ -98,6 +105,14 @@ def main():
                     help="event runtime latency model (see core/events.py)")
     ap.add_argument("--in-flight", type=int, default=None,
                     help="event runtime per-stage buffer override (elastic)")
+    ap.add_argument("--churn", default=None,
+                    help="event runtime leave/join windows: "
+                         "STAGE,START,DURATION[/STAGE,START,DURATION...] "
+                         "on the simulated clock (see core/events.ChurnModel)")
+    ap.add_argument("--churn-slack", type=int, default=None,
+                    help="bound on the extra in-flight microbatches upstream "
+                         "stages may buffer during an outage (default: "
+                         "unbounded — the outage is paid fully in memory)")
     ap.add_argument("--max-dynamic-delay", type=int, default=None)
     args = ap.parse_args()
 
@@ -109,10 +124,17 @@ def main():
     trainer = AsyncTrainer(cfg, ecfg, args.method)
     batch_fn, src = make_batch_fn(cfg, args.accum, args.batch, seq, seed=args.seed)
     if args.runtime == "event":
+        from repro.core.events import make_churn_model
+
+        if args.churn_slack is not None and not args.churn:
+            ap.error("--churn-slack requires --churn")
+        churn = (make_churn_model(args.churn, slack=args.churn_slack)
+                 if args.churn else None)
         _, res = run_event_loop(
             trainer, batch_fn, args.steps, delay_model=args.delay_model,
-            in_flight=args.in_flight, seed=args.seed, ckpt_dir=args.ckpt_dir,
-            ckpt_every=args.ckpt_every, log_every=args.log_every)
+            in_flight=args.in_flight, churn=churn, seed=args.seed,
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            log_every=args.log_every)
     else:
         state, res = ftloop.train_loop(
             trainer, batch_fn, args.steps, ckpt_dir=args.ckpt_dir,

@@ -16,9 +16,10 @@ import pytest
 
 from repro.configs import get_config
 from repro.core import delay
+from repro.core.events import (ChurnModel, FixedDelay, JitterDelay, Outage,
+                               OutageDelay, StragglerDelay, TraceDelay,
+                               make_churn_model, make_delay_model)
 from repro.core.engine import AsyncTrainer, EngineCfg
-from repro.core.events import (FixedDelay, JitterDelay, StragglerDelay,
-                               make_delay_model)
 from repro.core.runtime import EventRuntime, RuntimeCfg, simulate_schedule
 from repro.models import lm
 
@@ -204,6 +205,217 @@ def test_grad_accum_runtime_runs(setup):
     got = res.taus[-1]
     assert all(abs(g - w) <= 1.0 for g, w in zip(got, want))
     assert all(got[s] >= got[s + 1] for s in range(3))
+
+
+# ---- elastic churn: leave/join as first-class runtime events ----------------
+
+
+def test_churn_rejoin_completes_without_drain_and_matches_restage(setup):
+    """The rejoin equivalence + liveness contract (ISSUE 4, DESIGN.md §9):
+    with a scheduled leave/join window under FixedDelay the event runtime
+    completes the whole horizon in ONE run() call — no drain, no restage. The
+    outage is paid in stash depth and observed tau (peak stash == max observed
+    tau + 1 still holds; upstream tau grows past the Eq. 5 schedule), and once
+    the stale backlog flushes the loss trajectory matches a drain +
+    checkpoint.restage baseline within the documented tolerance (per-tick
+    |dloss| < 0.4, window mean < 0.2 on the reduced config — the two runs pay
+    the same outage through different mechanisms, memory vs a barrier, and
+    re-converge; they are not bit-equal by design)."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    cfg, params, batch = setup
+    ecfg = _ecfg()
+    bf = lambda t: batch
+    n_total = 24
+    # stage 2 leaves at t=18 (~tick 6 at fwd=1/bwd=2) and rejoins 3 ticks later
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"), RuntimeCfg(churn="2,18,9"))
+    rt.init_from_params(params)
+    res = rt.run(bf, n_total)  # liveness: a single un-drained run completes
+
+    assert res.outage_time[2] == pytest.approx(9.0)
+    # the outage is absorbed as observed staleness, not a barrier: upstream
+    # kept forwarding (elastic caps), so tau grew beyond the Eq. 5 schedule
+    # and the dead stage's forward mailbox buffered the run-ahead
+    assert res.max_tau_obs[0] > delay.max_delay(4, 1)
+    assert res.mailbox_high_water[2][0] > 1
+    for s in range(4):
+        assert res.max_stash[s] == int(res.max_tau_obs[s]) + 1
+
+    # drain + restage baseline: stop at tick 6, reset staleness history the
+    # pre-churn way, continue for the remaining ticks on the same batches
+    tr_pre = AsyncTrainer(cfg, ecfg, "ours")
+    rt_pre = EventRuntime(tr_pre)
+    rt_pre.init_from_params(params)
+    pre = rt_pre.run(bf, 6)
+    tr_post = AsyncTrainer(cfg, ecfg, "ours")
+    tr_post.init_from_params(params)
+    restaged = ckpt.restage(rt_pre.export_state(include_runtime=False),
+                            tr_pre, tr_post)
+    rt_post = EventRuntime(tr_post)
+    rt_post.init_from_state(restaged)
+    post = rt_post.run(bf, n_total - 6)
+    base = list(pre.losses) + list(post.losses)
+
+    diff = np.abs(np.asarray(res.losses) - np.asarray(base))
+    np.testing.assert_allclose(diff[:6], 0.0, atol=1e-6)  # identical pre-leave
+    flushed = 17  # rejoin tick (~9) + max observed tau: stale backlog cleared
+    assert diff[flushed:].max() < 0.4
+    assert diff[flushed:].mean() < 0.2
+
+
+def test_zero_length_outage_is_bitwise_noop(setup):
+    """A zero-duration outage exercises the full churn path (leave + join
+    events, membership bookkeeping) and must be a no-op: the RuntimeResult is
+    bitwise identical to today's churn-free runtime."""
+    cfg, params, batch = setup
+    ecfg = _ecfg()
+    rt0 = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
+    rt0.init_from_params(params)
+    r0 = rt0.run(lambda t: batch, 8)
+    rtz = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
+                       RuntimeCfg(churn=ChurnModel((Outage(1, 5.0, 0.0),))))
+    rtz.init_from_params(params)
+    rz = rtz.run(lambda t: batch, 8)
+    assert rz.losses == r0.losses  # float-exact, not just allclose
+    assert rz.taus == r0.taus
+    assert rz.makespan == r0.makespan
+    assert rz.utilization == r0.utilization
+    assert rz.max_stash == r0.max_stash
+    assert rz.max_tau_obs == r0.max_tau_obs
+    assert rz.mailbox_high_water == r0.mailbox_high_water
+    assert rz.outage_time == (0.0,) * 4
+    assert rz.metrics == r0.metrics
+    assert rz.timeline is None and r0.timeline is None
+
+
+def test_simulate_schedule_matches_runtime_under_churn(setup):
+    """The compute-free planner implements the SAME membership rules: under a
+    churn window (on top of jitter) it reproduces the full runtime's observed
+    taus, stash/mailbox high-water, outage accounting, and makespan."""
+    cfg, params, batch = setup
+    dm = JitterDelay(sigma=0.4, seed=5)
+    churn = "1,12,8"
+    rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                      RuntimeCfg(delay_model=dm, churn=churn))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 14)
+    sim = simulate_schedule(P=4, K=1, n_ticks=14, delay_model=dm, churn=churn)
+    assert [tuple(t) for t in sim["taus"]] == [tuple(t) for t in res.taus]
+    assert tuple(sim["max_stash"]) == res.max_stash
+    assert tuple(sim["max_tau_obs"]) == res.max_tau_obs
+    assert sim["outage_time"] == res.outage_time
+    assert sim["mailbox_high_water"] == res.mailbox_high_water
+    np.testing.assert_allclose(sim["makespan"], res.makespan, rtol=1e-9)
+
+
+def test_sim_churn_outage_paid_in_memory_and_tau():
+    """Schedule-level churn story: a bounded slack caps the upstream run-ahead;
+    unbounded slack converts the whole outage into stash/mailbox depth."""
+    base = simulate_schedule(P=4, n_ticks=40)
+    out = simulate_schedule(P=4, n_ticks=40, churn="2,30,30")
+    assert out["outage_time"] == (0.0, 0.0, 30.0, 0.0)
+    assert out["makespan"] > base["makespan"]
+    assert max(out["max_tau_obs"]) > max(base["max_tau_obs"])
+    assert out["max_stash"][0] == out["max_tau_obs"][0] + 1
+    # dead stage's forward mailbox buffered the upstream run-ahead
+    assert out["mailbox_high_water"][2][0] > base["mailbox_high_water"][2][0]
+    # bounded slack: stage 0's stash may only exceed its 1F1B cap by slack
+    slacked = simulate_schedule(P=4, n_ticks=40,
+                                churn=ChurnModel((Outage(2, 30.0, 30.0),), slack=2))
+    assert slacked["max_stash"][0] <= 4 + 2
+    assert slacked["max_stash"][0] < out["max_stash"][0]
+
+
+def test_churn_spans_chunked_runs_without_refiring(setup):
+    """Churn windows live on the absolute simulated clock: chunked run() calls
+    (the checkpoint cadence in launch/train.py) must fire each outage exactly
+    once, and a window beyond the current chunk just waits its turn."""
+    cfg, params, batch = setup
+    bf = lambda t: batch
+    rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                      RuntimeCfg(churn="1,40,6"))
+    rt.init_from_params(params)
+    r1 = rt.run(bf, 4)  # drains around t~21: outage not reached yet
+    r2 = rt.run(bf, 8)  # outage fires inside this chunk
+    r3 = rt.run(bf, 4)  # must NOT re-fire
+    assert r1.outage_time == (0.0,) * 4
+    assert r2.outage_time[1] == pytest.approx(6.0)
+    assert r3.outage_time == (0.0,) * 4
+    assert np.isfinite(r1.losses + r2.losses + r3.losses).all()
+
+
+# ---- drain invariants + mailbox memory --------------------------------------
+
+
+def test_drain_invariants_and_mailbox_caps_under_jitter(setup):
+    """At drain every stage's stash, carries, and both mailboxes are empty, and
+    the reported mailbox high-water is tied to the in-flight caps: activations
+    buffered at stage s are bounded by stage s-1's cap, cotangents at stage s
+    by its own cap (stage 0's forward box is the preloaded data source)."""
+    cfg, params, batch = setup
+    rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                      RuntimeCfg(delay_model=JitterDelay(sigma=0.6, seed=9)))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 12)
+    caps = rt.caps
+    for st in rt._stages:
+        assert not st.stash and not st.carries
+        assert len(st.fwd_box) == 0 and len(st.bwd_box) == 0
+        assert st.acc_n == 0 and st.in_flight == 0
+    for s in range(1, 4):
+        assert 1 <= res.mailbox_high_water[s][0] <= caps[s - 1]
+    for s in range(4):
+        assert 1 <= res.mailbox_high_water[s][1] <= caps[s]
+    assert res.mailbox_high_water[0][0] == 12  # source box: whole run preloaded
+
+
+# ---- spec parsing (delay + churn grammars) ----------------------------------
+
+
+def test_delay_spec_roundtrip():
+    m = make_delay_model("fixed:2.0,3.0,0.5")
+    assert (m.fwd, m.bwd, m.comm) == (2.0, 3.0, 0.5)
+    j = make_delay_model("jitter:0.4", seed=7)
+    assert isinstance(j, JitterDelay) and j.sigma == 0.4 and j.seed == 7
+    j2 = make_delay_model("jitter:0.4,2.0,4.0,0.25", seed=3)
+    assert (j2.sigma, j2.fwd, j2.bwd, j2.comm, j2.seed) == (0.4, 2.0, 4.0, 0.25, 3)
+    s = make_delay_model("straggler:1,5.0,6")
+    assert (s.slow_stage, s.factor, s.period) == (1, 5.0, 6)
+    o = make_delay_model("outage:2,10,20,8.0")
+    assert isinstance(o, OutageDelay)
+    assert (o.stage, o.mb_start, o.mb_end, o.factor) == (2, 10, 20, 8.0)
+    # the degraded window actually slows the stage's compute ops
+    assert o.latency(2, "fwd", 15) == 8.0 and o.latency(2, "fwd", 25) == 1.0
+    assert o.latency(1, "fwd", 15) == 1.0
+
+
+@pytest.mark.parametrize("bad", [
+    "warp", "fixed:1,2,3,4", "jitter:0.3,1.0", "jitter:0.3,1.0,2.0",
+    "straggler:0,4.0,6,9", "outage:1,2", "outage:1,2,3,4,5", "jitter:0.3,,1,2",
+])
+def test_delay_spec_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        make_delay_model(bad)
+
+
+def test_churn_spec_roundtrip():
+    cm = make_churn_model("churn:1,10,5/2,30,4")
+    assert cm.outages == (Outage(1, 10.0, 5.0), Outage(2, 30.0, 4.0))
+    assert cm.slack is None
+    cm2 = make_churn_model("0,3,0", slack=2)
+    assert cm2.outages == (Outage(0, 3.0, 0.0),) and cm2.slack == 2
+    # model passthrough + slack override
+    cm3 = make_churn_model(cm, slack=1)
+    assert cm3.outages == cm.outages and cm3.slack == 1
+    for bad in ("churn:1,10", "churn:1,10,5,7", "drop:1,10,5", "1,,5"):
+        with pytest.raises(ValueError):
+            make_churn_model(bad)
+    with pytest.raises(ValueError):
+        ChurnModel((Outage(0, -1.0, 5.0),))
+    with pytest.raises(ValueError):
+        ChurnModel((Outage(0, 1.0, -5.0),))
+    with pytest.raises(ValueError):
+        make_churn_model("5,1,1").validate(4)  # stage out of range for P=4
 
 
 # ---- checkpointing ----------------------------------------------------------
