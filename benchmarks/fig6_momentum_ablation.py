@@ -21,9 +21,11 @@ def main(steps=200, stages=8):
         "ours_b0.99": REG["ours"],
         "ours_adaptive": REG["ours_adaptive_mom"],
         "ours_nows": REG["ours_nows"],
+        # published-form ablation: keep the literal stage-keyed Eq. 13
+        # momentum (tau_source axis: see core/methods.py / DESIGN.md §10)
         "ours_nows_nolr": Method("ours_nows_nolr", optimizer="nadam",
                                  bwd_point="current", stage_momentum=True,
-                                 memory="O(N)"),
+                                 tau_source="stage_index", memory="O(N)"),
     }
     rows, full = [], {}
     for name, meth in variants.items():

@@ -4,18 +4,32 @@ Measures real ticks/s of both execution paths on the reduced model (the jit
 engine amortizes everything into one compiled program; the event runtime pays
 per-stage dispatch for deployment fidelity), plus compute-free schedule
 simulations quantifying straggler/jitter cost in simulated-clock units.
+
+Two calibration/adaptation sections (DESIGN.md §10) also land in
+artifacts/BENCH_runtime.json:
+
+- `trace_*`: per-op fwd/bwd latencies measured from a real run
+  (RuntimeCfg.record_trace) saved as artifacts/TRACE_runtime.json, then
+  replayed through the compute-free simulator — measured, not synthetic,
+  distributions.
+- `adapt_*`: `ours_delay_adaptive` with tau_source="observed" (delay-keyed
+  momentum) vs its stage-index twin under straggler / jitter / churn and the
+  recorded trace — the payoff of reacting to measured staleness.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import os
 import time
 
 import jax
 import numpy as np
 
-from common import emit_csv, save_json
+from common import ART, emit_csv, save_json
 from repro.configs import get_config
 from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.core.methods import get_method
 from repro.core.runtime import EventRuntime, RuntimeCfg, simulate_schedule
 from repro.data.synthetic import make_batch_fn
 
@@ -74,6 +88,76 @@ def main(steps=40, stages=4):
         "outage_time": list(resc.outage_time),
         "max_stash": list(resc.max_stash),
         "mailbox_high_water": [list(hw) for hw in resc.mailbox_high_water]}
+
+    # trace calibration: measure real per-op latencies (the --record-trace
+    # hook; mb 0 pays compile, so the recorder is reset after a warmup tick),
+    # save the TraceDelay JSON, and replay the MEASURED distribution through
+    # the compute-free simulator
+    rec_ticks = max(steps // 4, 8)
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
+                      RuntimeCfg(record_trace=True))
+    rt.init(jax.random.PRNGKey(0))
+    rt.run(batch_fn, 1)
+    rt.reset_recorder()  # drop the compile-inflated first-tick samples
+    rt.run(batch_fn, rec_ticks)
+    os.makedirs(ART, exist_ok=True)
+    trace_path = os.path.join(ART, "TRACE_runtime.json")
+    rt.recorder.save(trace_path)
+    tr_traces = rt.recorder.traces()
+    mean_fwd = float(np.mean([x for row in tr_traces["fwd"] for x in row]))
+    mean_bwd = float(np.mean([x for row in tr_traces["bwd"] for x in row]))
+    sim_t = simulate_schedule(P=stages, K=1, n_ticks=rec_ticks,
+                              delay_model=f"trace:{trace_path}")
+    rows.append(("runtime/sim_trace_replay",
+                 round(1e6 * sim_t["makespan"] / rec_ticks, 1),
+                 f"util_min={min(sim_t['utilization']):.2f};"
+                 f"max_tau={max(sim_t['max_tau_obs']):.0f};"
+                 f"mean_fwd_us={1e6 * mean_fwd:.0f};"
+                 f"mean_bwd_us={1e6 * mean_bwd:.0f}"))
+    full["trace_replay"] = {
+        "trace_path": os.path.relpath(trace_path, ART),
+        "recorded_ticks": rec_ticks,
+        "mean_fwd_s": mean_fwd, "mean_bwd_s": mean_bwd,
+        "utilization": list(sim_t["utilization"]),
+        "max_tau_obs": list(sim_t["max_tau_obs"]),
+        "max_stash": list(sim_t["max_stash"])}
+
+    # observed-tau-adaptive momentum vs the stage-index Eq. 13 keying, under
+    # regimes where measured staleness actually departs from the Eq. 5
+    # schedule — stragglers, jitter, churn, and the recorded real trace
+    m_obs = get_method("ours_delay_adaptive")
+    m_idx = dataclasses.replace(m_obs, name="ours_delay_adaptive_stage_index",
+                                tau_source="stage_index")
+    adapt_ticks = max(steps // 2, 12)
+    mid = 3 * (adapt_ticks // 2)
+    regimes = [("straggler", "straggler:1,4.0", None, 8),
+               ("jitter", "jitter:0.4", None, 8),
+               ("churn", "fixed", f"1,{mid},{mid // 3}", None),
+               ("trace", f"trace:{trace_path}", None, None)]
+    for tag, spec, churn, in_flight in regimes:
+        pair, wall = {}, {}
+        for vtag, meth in (("obs", m_obs), ("idx", m_idx)):
+            rte = EventRuntime(AsyncTrainer(cfg, ecfg, meth),
+                               RuntimeCfg(delay_model=spec, churn=churn,
+                                          in_flight=in_flight))
+            rte.init(jax.random.PRNGKey(0))  # same key -> identical init
+            rte.run(batch_fn, 1)  # compile per-stage jits outside the timer
+            t0 = time.time()
+            pair[vtag] = rte.run(batch_fn, adapt_ticks)
+            wall[vtag] = (time.time() - t0) / adapt_ticks
+        dl = np.abs(np.asarray(pair["obs"].losses)
+                    - np.asarray(pair["idx"].losses))
+        rows.append((f"runtime/adapt_{tag}", round(1e6 * wall["obs"], 1),
+                     f"final_obs={pair['obs'].losses[-1]:.4f};"
+                     f"final_idx={pair['idx'].losses[-1]:.4f};"
+                     f"max_dloss={dl.max():.4f};"
+                     f"max_tau={max(pair['obs'].max_tau_obs):.0f}"))
+        full[f"adapt_{tag}"] = {
+            "delay_model": spec, "churn": churn, "ticks": adapt_ticks,
+            "obs_losses": pair["obs"].losses, "idx_losses": pair["idx"].losses,
+            "mean_dloss": float(dl.mean()), "max_dloss": float(dl.max()),
+            "max_tau_obs": list(pair["obs"].max_tau_obs),
+            "taus_last": list(pair["obs"].taus[-1])}
 
     # schedule-only simulations: throughput cost of delay + membership regimes
     sim_cells = [("fixed", None), ("jitter:0.3", None), ("straggler:0,4.0", None),

@@ -29,3 +29,25 @@ def validate_taus(taus, P: int) -> tuple:
     if any(t < 0 for t in taus):
         raise ValueError(f"stage delays must be >= 0, got {taus}")
     return taus
+
+
+def validate_dynamic_taus(taus, P: int) -> list:
+    """Validate a per-TICK delay vector for the engine's dynamic path
+    (AsyncTrainer.step(..., taus=...)): a length-P sequence or [P] array,
+    possibly traced, typically one row of `RuntimeResult.taus` — the event
+    runtime's observed per-tick staleness fed back into the jit engine.
+    Entries may be fractional (K>1 accumulation groups average the delays of
+    their K microbatches). Returns the per-stage entries as a list; lengths
+    are static even for traced arrays, so this check costs nothing in jit."""
+    shape = getattr(taus, "shape", None)
+    if shape is None and not hasattr(taus, "__len__"):
+        raise ValueError(
+            f"dynamic taus must be a length-{P} per-stage vector, got the "
+            f"scalar {taus!r}")
+    n = len(taus) if shape is None else (shape[0] if len(shape) == 1 else -1)
+    if n != P:
+        raise ValueError(
+            f"dynamic taus must be a length-{P} per-stage vector (one entry "
+            f"per pipeline stage), got "
+            f"{'shape ' + str(tuple(shape)) if shape is not None else f'{n} entries'}")
+    return [taus[i] for i in range(P)]

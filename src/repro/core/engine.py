@@ -158,9 +158,19 @@ class AsyncTrainer:
     # -- per-stage method semantics (shared by the jit engine and the event
     #    runtime, so both execution paths apply bit-identical update math) -----
 
+    def _method_tau(self, i: int, tau):
+        """The tau the method's delay corrections consume (Method.tau_source):
+        "observed" passes the execution path's live value through (the event
+        runtime's measured staleness, or step(..., taus=...)); "stage_index"
+        pins the static Eq. 5 / straggler-override schedule so corrections stay
+        blind to measured delays. Stash selection always uses the live tau —
+        only the correction math is re-sourced."""
+        return tau if self.method.tau_source == "observed" else self.taus[i]
+
     def _bwd_weights(self, i: int, params, extra, W_stale, tau):
         """Where stage i's VJP is linearized. tau: static int or traced/observed."""
         m = self.method
+        tau = self._method_tau(i, tau)
         if m.bwd_point == "stash":
             return W_stale
         if m.bwd_point == "current":
@@ -188,21 +198,29 @@ class AsyncTrainer:
         m = self.method
         if lr_t is None:
             lr_t = self.lr_sched(t)
+        # corrections consume the method-selected tau source; the raw `tau`
+        # argument stays the execution path's live value (stash selection)
+        tau_m = self._method_tau(i, tau)
         new_extra = dict(extra)
         # gradient forecasting corrections (baselines of Sec. 5.4)
         if m.grad_forecast == "second_order":
             corrected = forecast.second_order_correct(grads, params, W_stale)
-            grads = _where_tau(tau, corrected, grads)
+            grads = _where_tau(tau_m, corrected, grads)
         elif m.grad_forecast == "polyfft":
             h = m.forecast_hist
             new_extra["hist"] = forecast.push_history(extra["hist"], grads, h)
-            predicted = forecast.polyfft_predict(new_extra["hist"], h, tau)
-            grads = _where_tau(tau, predicted, grads)
-        # Eq. 13 stage schedules
+            predicted = forecast.polyfft_predict(new_extra["hist"], h, tau_m)
+            grads = _where_tau(tau_m, predicted, grads)
+        # Eq. 13 stage schedules (delay-keyed momentum when tau is observed)
         lr_scale = lr_t
         if m.lr_discount:
-            lr_scale = lr_scale * schedules.lr_discount_factor(tau, t, m.lr_discount_T)
-        mom = schedules.stage_momentum(i + 1, self.P) if m.stage_momentum else None
+            lr_scale = lr_scale * schedules.lr_discount_factor(tau_m, t, m.lr_discount_T)
+        if not m.stage_momentum:
+            mom = None
+        elif m.tau_source == "observed":
+            mom = schedules.delay_momentum(tau_m, self.P, self.ecfg.update_interval)
+        else:
+            mom = schedules.stage_momentum(i + 1, self.P)
         new_params, new_opt, aux = self.opt.update(params, grads, opt_state,
                                                    lr_scale=lr_scale, mom=mom, t=t)
         if m.bwd_point == "pipemare_predict":
@@ -217,7 +235,7 @@ class AsyncTrainer:
             fp = aux["lookahead"]
         elif m.fwd_point == "xpipe_predict":
             # XPipe: predict weights tau updates ahead along the optimizer step
-            tau_f = jnp.asarray(tau, jnp.float32)
+            tau_f = jnp.asarray(tau_m, jnp.float32)
             fp = jax.tree.map(
                 lambda w, s: (w.astype(jnp.float32) + tau_f * s).astype(w.dtype),
                 new_params, aux["step_dir"])
@@ -232,8 +250,11 @@ class AsyncTrainer:
 
         taus: optional per-tick delay vector (length-P sequence or int32 [P]
         array, possibly traced) overriding the static schedule — the dynamic-tau
-        path driven by the event runtime's observed staleness. Every entry must
-        be <= the stash depth bound (EngineCfg.max_dynamic_delay).
+        path driven by the event runtime's observed staleness (one row of
+        `RuntimeResult.taus`). Every entry must be <= the stash depth bound
+        (EngineCfg.max_dynamic_delay). The vector drives the stash replay for
+        every method; whether the method's correction math ALSO consumes it is
+        its `tau_source` axis (DESIGN.md §10).
         """
         m = self.method
         t = state.step
@@ -241,7 +262,7 @@ class AsyncTrainer:
         if taus is None:
             taus_t = list(self.taus)
         else:
-            taus_t = [taus[i] for i in range(P)]
+            taus_t = delay_mod.validate_dynamic_taus(taus, P)
 
         # 1) forward/backward points per stage
         Wfwd = []

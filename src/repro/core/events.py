@@ -304,7 +304,19 @@ def make_churn_model(spec, slack: Optional[int] = None) -> ChurnModel:
 class TraceDelay(DelayModel):
     """Replay measured latencies: traces[op][stage] is a list cycled over mb.
 
-    `from_json(path)` loads {"fwd": [[...], ...], "bwd": ..., "comm": ...}.
+    The JSON schema (docs/cli.md) is the calibration interchange format:
+
+        {"version": 1, "P": 4, "K": 1, "unit": "seconds",
+         "fwd":  [[...per-mb latencies...], ...one row per stage...],
+         "bwd":  [[...], ...],
+         "comm": [[...], ...]}
+
+    Only "fwd"/"bwd"/"comm" drive replay (a missing op falls back to 1.0 for
+    compute, 0.0 for comm); the remaining keys are provenance. Replay is fully
+    deterministic — the same trace file always reproduces the same schedule.
+    `from_json(path)` loads the file; `save(path)` writes it back unchanged
+    (roundtrip contract, tests/test_runtime.py). Traces are recorded from a
+    real run by `TraceRecorder` (launch/train.py --record-trace).
     """
 
     def __init__(self, traces: dict):
@@ -315,6 +327,10 @@ class TraceDelay(DelayModel):
         with open(path) as f:
             return cls(json.load(f))
 
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.traces, f)
+
     def _latency(self, stage, op, mb):
         key = "comm" if op.startswith("comm") else op
         per_stage = self.traces.get(key)
@@ -322,6 +338,51 @@ class TraceDelay(DelayModel):
             return 0.0 if key == "comm" else 1.0
         row = per_stage[stage % len(per_stage)]
         return float(row[mb % len(row)])
+
+
+class TraceRecorder:
+    """Collects measured per-(stage, op, microbatch) latencies from a real run
+    into the TraceDelay JSON schema — the calibration half of the trace loop:
+
+        train --runtime event --record-trace out.json   (timing hooks in
+        core/runtime.py around each stage's jitted fwd/bwd dispatch)
+        -> out.json -> --delay-model trace:out.json | dryrun --sim-schedule
+           --sim-models trace:out.json | benchmarks/runtime_bench.py
+
+    so simulations and benchmarks replay MEASURED rather than synthetic
+    latency distributions. Comm latency is not separable in a single-process
+    runtime (activations hand over in memory), so comm rows record 0.0 —
+    on-chip-neighbour semantics; multi-host transports can fill them in.
+    """
+
+    def __init__(self, P: int, K: int = 1):
+        self.P = P
+        self.K = K
+        self._lat = {"fwd": [dict() for _ in range(P)],
+                     "bwd": [dict() for _ in range(P)]}
+
+    def add(self, stage: int, op: str, mb: int, seconds: float):
+        self._lat[op][stage][mb] = float(seconds)
+
+    def __len__(self):
+        return sum(len(row) for rows in self._lat.values() for row in rows)
+
+    def traces(self) -> dict:
+        """Emit the TraceDelay schema dict; per-stage rows are ordered by
+        microbatch index (dense from the first recorded mb), so replay of the
+        same horizon reuses each microbatch's measured latency exactly."""
+        out = {"version": 1, "P": self.P, "K": self.K, "unit": "seconds"}
+        for op in ("fwd", "bwd"):
+            out[op] = [[row[mb] for mb in sorted(row)] or [MIN_LATENCY]
+                       for row in self._lat[op]]
+        out["comm"] = [[0.0] for _ in range(self.P)]
+        return out
+
+    def to_delay(self) -> TraceDelay:
+        return TraceDelay(self.traces())
+
+    def save(self, path: str):
+        self.to_delay().save(path)
 
 
 def _spec_fields(name: str, args: str, lo: int, hi: int) -> list:

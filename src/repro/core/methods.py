@@ -7,6 +7,9 @@ A method is a declarative recipe the engine interprets:
   optimizer  — per-stage optimizer kind + hyperparams
   lr_discount / stage_momentum — Eq. 13 stage-dependent corrections
   grad_forecast — gradient forecasting transform applied to stale grads
+  tau_source — which staleness VALUE the delay-dependent corrections consume:
+               the live per-tick delay of the execution path ("observed") or
+               the static closed-form Eq. 5 schedule ("stage_index")
   sync       — synchronous (no staleness; GPipe)
 """
 from __future__ import annotations
@@ -28,22 +31,52 @@ class Method:
     stage_momentum: bool = False
     grad_forecast: Optional[str] = None  # None | second_order | polyfft
     forecast_hist: int = 8
+    # Which tau the delay-dependent corrections (lr_discount, grad_forecast,
+    # pipemare/xpipe prediction, delay-keyed momentum) consume:
+    #   "observed"    — the live tau of the execution path: the event runtime's
+    #                   measured per-tick staleness, or the engine's dynamic
+    #                   vector when driven via step(..., taus=...). With
+    #                   stage_momentum, the Eq. 13 coefficient is re-keyed off
+    #                   that live delay (schedules.delay_momentum).
+    #   "stage_index" — pin the static stage-index schedule (Eq. 5 /
+    #                   EngineCfg.straggler_delays): corrections ignore what the
+    #                   runtime actually measured, and stage_momentum keeps the
+    #                   paper's literal gamma_i = f(stage index) form.
+    # Under FixedDelay at K=1 the two sources agree at steady state (observed
+    # tau == Eq. 5 and delay_momentum(tau_i) == stage_momentum(i)); they split
+    # during warmup and under stragglers/jitter/churn (DESIGN.md §10).
+    tau_source: str = "observed"  # observed | stage_index
     # memory class as reported in Table 1 (P = stages, N = params)
     memory: str = "O(PN)"
+
+    def __post_init__(self):
+        if self.tau_source not in ("observed", "stage_index"):
+            raise ValueError(
+                f"tau_source must be 'observed' or 'stage_index', "
+                f"got {self.tau_source!r}")
 
     def opt_kwargs(self):
         return dict(self.opt_kw)
 
     @property
-    def tau_consuming(self) -> bool:
-        """True when the update math consumes the delay VALUE itself (not just
-        the stash selection): these methods react to the event runtime's
-        observed per-tick staleness, so their event-driven trajectories diverge
-        from the fixed-schedule jit engine during warmup/stragglers unless the
-        engine is driven with the same dynamic tau vector (step(..., taus=...))."""
+    def uses_tau_value(self) -> bool:
+        """True when the update math consumes a delay VALUE at all (not just
+        the stash selection), from whichever source tau_source selects."""
         return bool(self.lr_discount or self.grad_forecast
                     or self.bwd_point == "pipemare_predict"
-                    or self.fwd_point == "xpipe_predict")
+                    or self.fwd_point == "xpipe_predict"
+                    or self.stage_momentum)
+
+    @property
+    def tau_consuming(self) -> bool:
+        """True when the update math consumes the LIVE delay value: these
+        methods react to the event runtime's observed per-tick staleness, so
+        their event-driven trajectories diverge from the fixed-schedule jit
+        engine during warmup/stragglers unless the engine is driven with the
+        same dynamic tau vector (step(..., taus=...)). A method with
+        tau_source="stage_index" pins the static schedule instead and is NOT
+        tau-consuming even when it applies delay corrections."""
+        return self.uses_tau_value and self.tau_source == "observed"
 
 
 METHODS = {}
@@ -69,14 +102,25 @@ _reg(Method("xpipe", optimizer="adamw", fwd_point="xpipe_predict", bwd_point="st
 # --- ours --------------------------------------------------------------------
 _reg(Method("ours", optimizer="nadam", opt_kw=(("b1", 0.99),)))
 _reg(Method("ours_theory", optimizer="sgd_nag", fwd_point="lookahead"))
+# the paper's published O(N) form: Eq. 13 corrections in their literal
+# stage-keyed/schedule-keyed form — pinned to "stage_index" so the published
+# numerics never drift with measured delays (the observed-keyed counterpart
+# of this recipe is the ours_delay_adaptive direction below)
 _reg(Method("ours_nows", optimizer="nadam", bwd_point="current", lr_discount=True,
-            stage_momentum=True, memory="O(N)"))
+            stage_momentum=True, tau_source="stage_index", memory="O(N)"))
 # ablations
 _reg(Method("nag_base", optimizer="nadam_nodiscount", opt_kw=(("b1", 0.99),)))
-_reg(Method("ours_adaptive_mom", optimizer="nadam", stage_momentum=True))
-# beyond-paper: delay-adaptive momentum as straggler mitigation (see ft/)
+# the paper's literal Eq. 13 adaptive momentum: gamma_i keyed off the STAGE
+# INDEX, blind to what the runtime actually measures
+_reg(Method("ours_adaptive_mom", optimizer="nadam", stage_momentum=True,
+            tau_source="stage_index"))
+# beyond-paper: delay-adaptive momentum as straggler mitigation (see ft/) —
+# gamma keyed off the LIVE observed staleness (schedules.delay_momentum), so
+# the momentum reacts to warmup, stragglers, jitter, and churn instead of
+# assuming the closed-form schedule. Identical to ours_adaptive_mom under
+# FixedDelay steady state; diverges exactly when delays move (DESIGN.md §10).
 _reg(Method("ours_delay_adaptive", optimizer="nadam", opt_kw=(("b1", 0.99),),
-            stage_momentum=True))
+            stage_momentum=True, tau_source="observed"))
 # composition checks (Fig. 4: NAG + other corrections)
 _reg(Method("ours_lr", optimizer="nadam", opt_kw=(("b1", 0.99),), lr_discount=True))
 _reg(Method("ours_second_order", optimizer="nadam", opt_kw=(("b1", 0.99),),

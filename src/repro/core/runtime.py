@@ -21,8 +21,14 @@ executes the pipeline the way a real deployment runs it:
   in a drain barrier (DESIGN.md §9), and
 - the *observed* staleness of every update fed back into the method
   (`AsyncTrainer._stage_update` with a live tau), so lr discounting, PipeMare
-  prediction and gradient forecasting react to stragglers and jitter instead
-  of assuming the closed-form schedule.
+  prediction, gradient forecasting, and delay-keyed momentum react to
+  stragglers and jitter instead of assuming the closed-form schedule —
+  whether a method consumes that live value or pins the static Eq. 5 schedule
+  is its `tau_source` axis (core/methods.py, DESIGN.md §10), and
+- optional latency calibration (`RuntimeCfg.record_trace`): host wall-clock
+  timing around every stage's jitted fwd/bwd dispatch collected into an
+  `events.TraceRecorder`, exported as TraceDelay JSON so later simulations
+  replay measured rather than synthetic distributions (DESIGN.md §10).
 
 Under a uniform `FixedDelay` model and K=1 the discipline reproduces the
 closed-form schedule exactly, so the runtime matches `AsyncTrainer`
@@ -39,6 +45,7 @@ the switch, like `checkpoint.restage`).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -62,6 +69,12 @@ class RuntimeCfg:
     # scheduling leave/join windows on the simulated clock (DESIGN.md §9).
     churn: Optional[object] = None
     record_timeline: bool = False
+    # Measure real per-op latencies: host wall-clock around every stage's
+    # jitted fwd/bwd dispatch (block_until_ready'd), collected into an
+    # events.TraceRecorder for TraceDelay JSON export — the calibration hook
+    # behind `launch/train.py --record-trace` (docs/cli.md, DESIGN.md §10).
+    # Each timed op forces a device sync, so leave off unless calibrating.
+    record_trace: bool = False
     seed: int = 0  # forwarded to spec-string delay models
 
 
@@ -133,6 +146,8 @@ class EventRuntime:
         self.P = trainer.P
         self.K = trainer.ecfg.update_interval
         self.caps = self._resolve_caps()
+        self.recorder = (events.TraceRecorder(self.P, self.K)
+                         if self.rcfg.record_trace else None)
         self.churn = (events.make_churn_model(self.rcfg.churn).validate(self.P)
                       if self.rcfg.churn is not None else None)
         self._dead = set()  # stages currently left (membership view)
@@ -195,6 +210,16 @@ class EventRuntime:
             self._stages.append(st)
         self._build_jits()
         return self
+
+    def reset_recorder(self) -> events.TraceRecorder:
+        """Swap in a fresh TraceRecorder (record_trace mode only). Call after a
+        one-tick warmup chunk so compile-inflated first-dispatch samples never
+        reach a saved trace — the calibration invariant every recording caller
+        (launch/train.py, benchmarks/runtime_bench.py) relies on (§10)."""
+        if self.recorder is None:
+            raise RuntimeError("reset_recorder requires RuntimeCfg.record_trace")
+        self.recorder = events.TraceRecorder(self.P, self.K)
+        return self.recorder
 
     def export_state(self, include_runtime: bool = True) -> AsyncState:
         """Engine-compatible AsyncState (pipeline must be drained). Stashes are
@@ -424,10 +449,14 @@ class EventRuntime:
             b = self._mb_batch(g)
             Wb = (W_used if tr.method.bwd_point == "stash"
                   else tr._bwd_weights(s, st.params, st.extra, W_used, float(tau_g)))
+            t_host = time.perf_counter() if self.recorder is not None else 0.0
             if s == self.P - 1:
                 gW, ct_in = self._bwd_last(Wb, carry_in, b)
             else:
                 gW, ct_in = self._bwd_mid[s](Wb, carry_in, b, ct)
+            if self.recorder is not None:
+                jax.block_until_ready((gW, ct_in))
+                self.recorder.add(s, "bwd", g, time.perf_counter() - t_host)
             st.next_bwd += 1
             # accumulate exactly like staged.grad_accum: K == 1 passes grads
             # through untouched; K > 1 casts to f32, sums in order, scales 1/K
@@ -477,7 +506,11 @@ class EventRuntime:
             b = self._mb_batch(g)
             W = st.params if tr.method.sync else st.fwd_point
             tau_g = g // self.K - st.n_updates  # observed staleness, update units
+            t_host = time.perf_counter() if self.recorder is not None else 0.0
             carry_out = self._fwd[s](W, carry_in, b)
+            if self.recorder is not None:
+                jax.block_until_ready(carry_out)
+                self.recorder.add(s, "fwd", g, time.perf_counter() - t_host)
             st.stash[g] = (W, tau_g)
             st.carries[g] = carry_in
             st.max_stash = max(st.max_stash, len(st.stash))

@@ -254,7 +254,12 @@ def sim_schedule_report(n_stages: int, accum: int, ticks: int, models: list,
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="Delay-model spec grammar (fixed:/jitter:/straggler:/outage:/"
+               "trace:) and churn windows (STAGE,START,DURATION[/...]): "
+               "docs/cli.md. trace:PATH replays measured latencies recorded "
+               "by `train --runtime event --record-trace PATH` (a bundled "
+               "example lives at examples/trace_p4.json).")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--all", action="store_true")

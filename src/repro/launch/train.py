@@ -12,6 +12,11 @@ exit. On a multi-pod mesh, pass --multi-pod to use the cross-pod SPMD 1F1B pipel
 asynchronous runtime (core/runtime.py): per-stage workers, sampled latencies
 (--delay-model fixed|jitter:S|straggler:STAGE,FACTOR[,PERIOD]|trace:PATH), and
 observed-staleness feedback. Checkpoints remain engine-compatible AsyncStates.
+--record-trace out.json additionally measures every stage's real fwd/bwd
+latency and writes it in the TraceDelay JSON schema, closing the calibration
+loop: replay the measured distribution with --delay-model trace:out.json or
+`dryrun --sim-schedule --sim-models trace:out.json`. Spec grammars for
+--delay-model/--churn and the trace schema are documented in docs/cli.md.
 """
 from __future__ import annotations
 
@@ -30,13 +35,20 @@ from repro.ft import loop as ftloop
 
 def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None,
                    churn=None, seed=0, ckpt_dir=None, ckpt_every=0, log_every=0,
-                   log_fn=print):
+                   record_trace=None, log_fn=print):
     """Event-runtime counterpart of ft.loop.train_loop: resume + periodic ckpt.
 
     churn: optional events.ChurnModel / spec ("STAGE,START,DURATION[/...]") of
     scheduled leave/join windows on the simulated clock. Windows run inside
     whichever checkpoint chunk reaches them (a window straddling a chunk's
-    natural end just delays that chunk's drain until the join fires)."""
+    natural end just delays that chunk's drain until the join fires).
+
+    record_trace: optional path; measures real per-stage fwd/bwd latencies
+    (host wall-clock, device-synced per op) and writes them there in the
+    TraceDelay JSON schema at the end of the run (docs/cli.md). The first
+    tick's samples pay JAX compilation (seconds vs steady-state milliseconds)
+    and would replay as a recurring op cost, so the recorder is reset after a
+    one-tick warmup chunk — training itself is unaffected."""
     from repro.checkpoint import checkpoint as ckpt
     from repro.core.runtime import EventRuntime, RuntimeCfg
 
@@ -44,6 +56,7 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
 
     rt = EventRuntime(trainer, RuntimeCfg(delay_model=delay_model,
                                           in_flight=in_flight, churn=churn,
+                                          record_trace=bool(record_trace),
                                           seed=seed))
     rt.init(jax.random.PRNGKey(seed))
     resumed_from = -1
@@ -64,10 +77,18 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
     # chunk at the gcd of the cadences so `done` lands exactly on every
     # checkpoint/log boundary; save/log only on their own boundaries
     cadence = math.gcd(ckpt_every if ckpt_dir else 0, log_every) or 25
+    # first-tick ops compile; their samples must not pollute the saved trace
+    warmed = not record_trace
     while done < steps:
         # align to the cadence grid (a resumed step may start off-boundary)
         chunk = min(cadence - done % cadence, steps - done)
+        if not warmed:
+            chunk = 1
         r = rt.run(batch_fn, chunk)
+        if not warmed:
+            if rt._u_done < steps:  # keep the only samples of a 1-tick run
+                rt.reset_recorder()
+            warmed = True
         res.losses.extend(r.losses)
         res.metrics.extend(r.metrics)
         done = rt._u_done
@@ -78,11 +99,24 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
             log_fn(f"step {done}: loss={res.losses[-1]:.4f} "
                    f"tau_obs={r.taus[-1]} util={tuple(round(u, 2) for u in r.utilization)}")
     res.wall_s = time.time() - t0
+    if record_trace:
+        if len(rt.recorder):
+            rt.recorder.save(record_trace)
+            log_fn(f"wrote {len(rt.recorder)} measured op latencies to "
+                   f"{record_trace} (replay: --delay-model trace:{record_trace})")
+        else:
+            # e.g. resumed at/after --steps: nothing ran, so a saved file would
+            # be all MIN_LATENCY placeholders — refuse to corrupt calibration
+            log_fn(f"no op latencies recorded (nothing ran beyond the resumed "
+                   f"step); not writing {record_trace}")
     return rt, res
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="Spec grammars for --delay-model (fixed:/jitter:/straggler:/"
+               "outage:/trace:), --churn (STAGE,START,DURATION[/...]), and the "
+               "--record-trace TraceDelay JSON schema: docs/cli.md")
     ap.add_argument("--arch", default="nanogpt-134m")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--method", default="ours")
@@ -113,8 +147,21 @@ def main():
                     help="bound on the extra in-flight microbatches upstream "
                          "stages may buffer during an outage (default: "
                          "unbounded — the outage is paid fully in memory)")
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="measure real per-stage fwd/bwd latencies during an "
+                         "event-runtime run and write them to PATH in the "
+                         "TraceDelay JSON schema (replay with --delay-model "
+                         "trace:PATH or dryrun --sim-models trace:PATH; "
+                         "see docs/cli.md)")
     ap.add_argument("--max-dynamic-delay", type=int, default=None)
     args = ap.parse_args()
+
+    if args.record_trace and args.runtime != "event":
+        ap.error("--record-trace requires --runtime event (latencies are "
+                 "measured per stage dispatch; the jit engine has no per-op "
+                 "boundary to time)")
+    if args.churn_slack is not None and not args.churn:
+        ap.error("--churn-slack requires --churn")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     seq = args.seq or (64 if args.reduced else 512)
@@ -126,21 +173,20 @@ def main():
     if args.runtime == "event":
         from repro.core.events import make_churn_model
 
-        if args.churn_slack is not None and not args.churn:
-            ap.error("--churn-slack requires --churn")
         churn = (make_churn_model(args.churn, slack=args.churn_slack)
                  if args.churn else None)
         _, res = run_event_loop(
             trainer, batch_fn, args.steps, delay_model=args.delay_model,
             in_flight=args.in_flight, churn=churn, seed=args.seed,
             ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-            log_every=args.log_every)
+            log_every=args.log_every, record_trace=args.record_trace)
     else:
         state, res = ftloop.train_loop(
             trainer, batch_fn, args.steps, ckpt_dir=args.ckpt_dir,
             ckpt_every=args.ckpt_every, key=jax.random.PRNGKey(args.seed),
             log_every=args.log_every)
-    print(f"final loss: {res.losses[-1]:.4f}  (entropy floor ~{src.entropy_floor():.3f}, "
+    last = f"{res.losses[-1]:.4f}" if res.losses else "n/a (resumed at/after --steps)"
+    print(f"final loss: {last}  (entropy floor ~{src.entropy_floor():.3f}, "
           f"{res.wall_s:.1f}s, resumed_from={res.resumed_from})")
     if args.out:
         with open(args.out, "w") as f:

@@ -47,6 +47,10 @@ def _poly_design(hist: int, tau):
     tau may be a static number (design folded into a constant at trace time,
     float64 numpy path — unchanged numerics) or a traced scalar (dynamic
     per-tick delay: the evaluation point moves with tau inside the program).
+    The traced path is how observed staleness reaches the forecast: the event
+    runtime / step(..., taus=...) feed per-stage entries of the measured tau
+    vector (`RuntimeResult.taus`) here when the method's tau_source is
+    "observed" (core/methods.py, DESIGN.md §10).
     """
     t = np.arange(hist, dtype=np.float64)
     X = np.stack([np.ones_like(t), t, t * t], axis=1)  # [hist, 3]

@@ -27,9 +27,12 @@ def lr_discount_factor(tau_i, t, T: int):
 
     Returns the multiplicative factor (<=1) for stage i with delay tau_i; the
     correction anneals away over the first T steps (PipeMare / Yang et al. 2021).
-    tau_i may be a static int (fixed Eq. 5 schedule) or a traced scalar (the
-    per-tick observed delay fed back by the event runtime); tau_i <= 1 is a
-    no-op factor of 1 either way.
+    tau_i may be a static int (fixed Eq. 5 schedule), a traced scalar (the
+    per-tick observed delay fed back by the event runtime / the engine's
+    step(..., taus=...) path), or a traced per-stage vector sourced from
+    `RuntimeResult.taus` — the factor broadcasts elementwise. tau_i <= 1 is a
+    no-op factor of 1 either way. Which source feeds it is the method's
+    `tau_source` axis (core/methods.py, DESIGN.md §10).
     """
     tau = jnp.maximum(jnp.asarray(tau_i, jnp.float32), 1.0)
     tf = t.astype(jnp.float32) if hasattr(t, "astype") else jnp.asarray(t, jnp.float32)
@@ -40,3 +43,22 @@ def lr_discount_factor(tau_i, t, T: int):
 def stage_momentum(i: int, P: int, lo=0.9, hi=0.99):
     """Eq. 13: gamma_i = lo + (hi-lo) * (P - i) / P  for stage i in 1..P."""
     return lo + (hi - lo) * (P - i) / P
+
+
+def delay_momentum(tau, P: int, K: int = 1, lo=0.9, hi=0.99):
+    """Observed-staleness re-keying of Eq. 13's momentum (tau_source="observed"):
+
+        gamma(tau) = lo + (hi - lo) * clip(K * tau / P, 0, 1)
+
+    Under the fixed 1F1B schedule at K=1, Eq. 5 gives tau_i = P - i, so
+    gamma(tau_i) == stage_momentum(i, P) EXACTLY — the paper's stage-keyed
+    coefficient is the steady-state special case. Keying off the measured delay
+    instead makes the coefficient track reality: it ramps 0 -> gamma_i with the
+    warmup staleness, and grows (saturating at `hi`) when a straggler or churn
+    outage inflates the observed tau — more smoothing exactly when gradients
+    are more stale. `tau` may be a python number (folds at trace time), a
+    traced scalar (live runtime feedback), or a traced per-stage vector
+    (step(..., taus=...)); the result broadcasts accordingly.
+    """
+    frac = jnp.clip(jnp.asarray(tau, jnp.float32) * (K / P), 0.0, 1.0)
+    return lo + (hi - lo) * frac

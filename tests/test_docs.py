@@ -1,0 +1,106 @@
+"""Docs that can rot, pinned by tests (ISSUE 5).
+
+- The README method-registry table must list exactly sorted(METHODS) with the
+  registered optimizer / tau_source / memory class per method.
+- Intra-repo markdown links in README/DESIGN/docs must resolve (the CI docs
+  leg runs this file plus the README quickstart smoke commands).
+- The bundled example trace (examples/trace_p4.json) must stay a valid
+  TraceDelay file the quickstart's --sim-schedule command can replay.
+"""
+import json
+import os
+import re
+
+import pytest
+
+from repro.core.events import TraceDelay, make_delay_model
+from repro.core.methods import METHODS
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+DOC_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "docs/cli.md"]
+
+# markdown table row whose first cell is a backticked method name
+_ROW = re.compile(r"^\|\s*`([^`]+)`\s*\|(.+)\|\s*$")
+# [text](target) — excluding images; target split from an optional #anchor
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def _readme_method_rows():
+    """Every data row of the README's '## Method registry' table — including
+    rows whose method no longer exists in the registry (stale-row detection
+    requires NOT filtering by METHODS membership here)."""
+    rows = {}
+    in_section = False
+    with open(os.path.join(ROOT, "README.md")) as f:
+        for line in f:
+            if line.startswith("## "):
+                in_section = line.strip() == "## Method registry"
+                continue
+            m = _ROW.match(line.strip())
+            if in_section and m:
+                cells = [c.strip() for c in m.group(2).split("|")]
+                rows[m.group(1)] = cells
+    return rows
+
+
+def test_readme_method_table_matches_registry():
+    rows = _readme_method_rows()
+    assert sorted(rows) == sorted(METHODS), (
+        "README method table out of sync with core/methods.py METHODS: "
+        f"missing {sorted(set(METHODS) - set(rows))}, "
+        f"stale {sorted(set(rows) - set(METHODS))}")
+    for name, cells in rows.items():
+        m = METHODS[name]
+        # | optimizer | fwd point | bwd point | corrections | tau source | memory |
+        assert len(cells) == 6, f"README row for {name} has {len(cells)} cells"
+        assert cells[0] == m.optimizer, f"{name}: optimizer {cells[0]!r}"
+        assert cells[1] == m.fwd_point and cells[2] == m.bwd_point, name
+        assert cells[4] == m.tau_source, f"{name}: tau source {cells[4]!r}"
+        assert cells[5] == m.memory, (
+            f"{name}: README memory class {cells[5]!r} != registered {m.memory!r}")
+
+
+def test_readme_rows_in_registry_order():
+    names = list(_readme_method_rows())
+    assert names == sorted(METHODS), "README table rows must be sorted by name"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES)
+def test_intra_repo_markdown_links_resolve(doc):
+    path = os.path.join(ROOT, doc)
+    assert os.path.exists(path), f"{doc} missing"
+    with open(path) as f:
+        text = f.read()
+    base = os.path.dirname(path)
+    bad = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:  # pure #anchor
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+            bad.append(target)
+    assert not bad, f"{doc} has dead intra-repo links: {bad}"
+
+
+def test_example_trace_is_valid_and_replayable():
+    path = os.path.join(ROOT, "examples", "trace_p4.json")
+    with open(path) as f:
+        raw = f.read()
+    assert len(raw.strip().splitlines()) == 8  # the README-sized example
+    tr = json.loads(raw)
+    assert tr["version"] == 1 and tr["P"] == 4
+    for op in ("fwd", "bwd", "comm"):
+        assert len(tr[op]) == tr["P"]
+    td = make_delay_model(f"trace:{path}")
+    assert isinstance(td, TraceDelay)
+    assert td.latency(0, "fwd", 0) == tr["fwd"][0][0]
+    assert td.latency(1, "bwd", 5) == tr["bwd"][1][5 % len(tr["bwd"][1])]
+    # the quickstart replays this through the compute-free planner
+    from repro.core.runtime import simulate_schedule
+
+    sim = simulate_schedule(P=4, n_ticks=8, delay_model=f"trace:{path}")
+    assert sim["makespan"] > 0
+    assert sim["taus"][-1] == (3.0, 2.0, 1.0, 0.0)  # near-uniform trace: Eq. 5

@@ -18,8 +18,9 @@ from repro.configs import get_config
 from repro.core import delay
 from repro.core.events import (ChurnModel, FixedDelay, JitterDelay, Outage,
                                OutageDelay, StragglerDelay, TraceDelay,
-                               make_churn_model, make_delay_model)
+                               TraceRecorder, make_churn_model, make_delay_model)
 from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.core.methods import get_method
 from repro.core.runtime import EventRuntime, RuntimeCfg, simulate_schedule
 from repro.models import lm
 
@@ -152,6 +153,145 @@ def test_observed_taus_drive_dynamic_engine(setup):
         s, m = step(s, batch, taus_t)
         eng.append(float(m["loss"]))
     np.testing.assert_allclose(res.losses, eng, rtol=1e-5, atol=1e-5)
+
+
+# ---- tau_source: observed-staleness-adaptive methods (DESIGN.md §10) --------
+
+
+def test_observed_tau_momentum_differs_and_matches_dynamic_engine(setup):
+    """The tau_source contract (DESIGN.md §10): under a straggler delay model
+    `ours_delay_adaptive` (tau_source="observed" — delay-keyed momentum) (a)
+    sees the exact same observed schedule as its stage-index twin yet produces
+    a measurably different trajectory (only the observed variant's momentum
+    reacts to the inflated tau), and (b) the jit engine's dynamic-tau path
+    `step(..., taus=...)`, driven with the runtime's recorded per-tick tau
+    vectors, reproduces the observed-variant trajectory within the standard
+    engine-equivalence tolerance (atol 1e-5)."""
+    import dataclasses as dc
+
+    cfg, params, batch = setup
+    dm = StragglerDelay(slow_stage=1, factor=5.0)
+    ecfg = _ecfg(max_dynamic_delay=8)
+    n = 14
+
+    m_obs = get_method("ours_delay_adaptive")
+    assert m_obs.tau_source == "observed" and m_obs.tau_consuming
+    rt_obs = EventRuntime(AsyncTrainer(cfg, ecfg, m_obs),
+                          RuntimeCfg(delay_model=dm, in_flight=8))
+    rt_obs.init_from_params(params)
+    res_obs = rt_obs.run(lambda t: batch, n)
+
+    m_idx = dc.replace(m_obs, name="ours_delay_adaptive_stage_index",
+                       tau_source="stage_index")
+    assert not m_idx.tau_consuming  # corrections pinned to the Eq. 5 schedule
+    rt_idx = EventRuntime(AsyncTrainer(cfg, ecfg, m_idx),
+                          RuntimeCfg(delay_model=dm, in_flight=8))
+    rt_idx.init_from_params(params)
+    res_idx = rt_idx.run(lambda t: batch, n)
+
+    # the event order is method-independent: identical observed schedules
+    assert [tuple(t) for t in res_obs.taus] == [tuple(t) for t in res_idx.taus]
+    # the straggler pushed observed tau past Eq. 5, so the two momentum
+    # keyings actually disagree — and the trajectories measurably split
+    assert max(res_obs.max_tau_obs) > delay.max_delay(4, 1)
+    diff = np.abs(np.asarray(res_obs.losses) - np.asarray(res_idx.losses))
+    assert diff.max() > 1e-4
+
+    # (b) engine dynamic-tau path replays the observed-variant trajectory
+    tr = AsyncTrainer(cfg, ecfg, m_obs)
+    s = tr.init_from_params(params)
+    step = tr.jit_step(donate=False)
+    eng = []
+    for t in range(n):
+        s, m = step(s, batch, jnp.asarray(np.array(res_obs.taus[t]), jnp.int32))
+        eng.append(float(m["loss"]))
+    np.testing.assert_allclose(res_obs.losses, eng, rtol=1e-5, atol=1e-5)
+
+
+def test_stage_index_source_pins_corrections_under_fixed_delays(setup):
+    """Under FixedDelay at K=1 the observed steady-state schedule IS Eq. 5 and
+    delay_momentum(tau_i) == stage_momentum(i): after the warmup ramp the two
+    tau sources converge to the same update math, so the variants' losses
+    agree tick-for-tick once warmup taus reach steady state — the documented
+    'steady-state special case' of DESIGN.md §10."""
+    import dataclasses as dc
+
+    cfg, params, batch = setup
+    m_obs = get_method("ours_delay_adaptive")
+    m_idx = dc.replace(m_obs, name="x", tau_source="stage_index")
+    losses = {}
+    for tag, meth in (("obs", m_obs), ("idx", m_idx)):
+        rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), meth))
+        rt.init_from_params(params)
+        losses[tag] = rt.run(lambda t: batch, 12).losses
+    # warmup differs (observed tau ramps 0 -> tau_i; the stage-index variant
+    # applies full Eq. 13 momentum from tick 0) ...
+    assert not np.allclose(losses["obs"][:6], losses["idx"][:6], atol=1e-7)
+    # ... and the trajectories stay close overall: same steady-state math,
+    # only the short warmup keying differs
+    np.testing.assert_allclose(losses["obs"], losses["idx"], atol=0.1)
+
+
+def test_dynamic_taus_length_validated(setup):
+    cfg, params, batch = setup
+    tr = AsyncTrainer(cfg, _ecfg(max_dynamic_delay=2), "ours_lr")
+    s = tr.init_from_params(params)
+    with pytest.raises(ValueError, match="length-4"):
+        tr.step(s, batch, taus=jnp.zeros((3,), jnp.int32))
+
+
+# ---- trace calibration: record -> save -> from_json -> replay ---------------
+
+
+def test_trace_record_save_replay_roundtrip(setup, tmp_path):
+    """The calibration loop (DESIGN.md §10): latencies recorded from a real
+    run (RuntimeCfg.record_trace — the --record-trace hook) save in the
+    TraceDelay JSON schema, load back via from_json bit-identically (schema
+    stability), and replay DETERMINISTICALLY — the same file drives identical
+    schedules through the compute-free simulator and the full event runtime."""
+    cfg, params, batch = setup
+    rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                      RuntimeCfg(record_trace=True))
+    rt.init_from_params(params)
+    rt.run(lambda t: batch, 6)
+    rec = rt.recorder
+    assert len(rec) == 2 * 4 * 6  # fwd+bwd x stages x microbatches
+    path = str(tmp_path / "trace.json")
+    rec.save(path)
+
+    td = TraceDelay.from_json(path)
+    assert td.traces == rec.traces()  # JSON roundtrip is exact
+    assert td.traces["version"] == 1
+    assert (td.traces["P"], td.traces["K"]) == (4, 1)
+    for op in ("fwd", "bwd", "comm"):
+        assert len(td.traces[op]) == 4  # one row per stage
+    assert all(len(row) == 6 for row in td.traces["fwd"])
+    assert all(x > 0 for row in td.traces["bwd"] for x in row)
+    # replay serves the measured value for the measured microbatch
+    assert td.latency(2, "fwd", 3) == td.traces["fwd"][2][3]
+    assert isinstance(make_delay_model(f"trace:{path}"), TraceDelay)
+
+    sim1 = simulate_schedule(P=4, n_ticks=6, delay_model=f"trace:{path}")
+    sim2 = simulate_schedule(P=4, n_ticks=6, delay_model=f"trace:{path}")
+    assert sim1 == sim2  # deterministic replay, field for field
+    rt2 = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                       RuntimeCfg(delay_model=f"trace:{path}"))
+    rt2.init_from_params(params)
+    res2 = rt2.run(lambda t: batch, 6)
+    assert [tuple(t) for t in sim1["taus"]] == [tuple(t) for t in res2.taus]
+    assert tuple(sim1["max_stash"]) == res2.max_stash
+    np.testing.assert_allclose(sim1["makespan"], res2.makespan, rtol=1e-9)
+
+
+def test_trace_recorder_empty_stage_rows_replayable():
+    """A recorder that saw no ops for a stage still emits a replayable row
+    (MIN_LATENCY placeholder) instead of an empty list TraceDelay would
+    index-error on."""
+    rec = TraceRecorder(2)
+    rec.add(0, "fwd", 0, 0.5)
+    td = rec.to_delay()
+    assert td.latency(0, "fwd", 0) == 0.5
+    assert td.latency(1, "fwd", 0) > 0.0  # placeholder, not a crash
 
 
 # ---- stochastic delays: dynamic tau + stash-depth contract ------------------
