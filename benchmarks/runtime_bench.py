@@ -5,7 +5,7 @@ engine amortizes everything into one compiled program; the event runtime pays
 per-stage dispatch for deployment fidelity), plus compute-free schedule
 simulations quantifying straggler/jitter cost in simulated-clock units.
 
-Two calibration/adaptation sections (DESIGN.md §10) also land in
+Three calibration/adaptation/equivalence sections (DESIGN.md §10) also land in
 artifacts/BENCH_runtime.json:
 
 - `trace_*`: per-op fwd/bwd latencies measured from a real run
@@ -15,180 +15,269 @@ artifacts/BENCH_runtime.json:
 - `adapt_*`: `ours_delay_adaptive` with tau_source="observed" (delay-keyed
   momentum) vs its stage-index twin under straggler / jitter / churn and the
   recorded trace — the payoff of reacting to measured staleness.
+- `k_equiv_K*`: at K ∈ {1, 2, 4}, event runtime vs (a) the engine's grouped
+  per-microbatch [P, K] stash replay and (b) the OLD single-point
+  idealization (all K microbatches at Eq. 5's scalar) — the measured answer
+  to "which replay strategy matters at realistic K": (a) tracks the runtime
+  at fp tolerance, (b) drifts as soon as K > 1.
+
+Sections run individually via --sections (comma list of
+throughput,trace,adapt,sim,k_equiv); a partial run merges its rows into an
+existing BENCH_runtime.json instead of clobbering the other sections.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from common import ART, emit_csv, save_json
 from repro.configs import get_config
+from repro.core import delay
 from repro.core.engine import AsyncTrainer, EngineCfg
 from repro.core.methods import get_method
 from repro.core.runtime import EventRuntime, RuntimeCfg, simulate_schedule
 from repro.data.synthetic import make_batch_fn
 
+SECTIONS = ("throughput", "trace", "adapt", "sim", "k_equiv")
 
-def main(steps=40, stages=4):
+
+def main(steps=40, stages=4, sections=None):
+    sections = set(sections or SECTIONS)
+    unknown = sections - set(SECTIONS)
+    if unknown:
+        raise SystemExit(f"unknown --sections {sorted(unknown)}; "
+                         f"choose from {SECTIONS}")
     cfg = get_config("nanogpt_134m", reduced=True)
     ecfg = EngineCfg(n_stages=stages, lr=1e-3, constant_lr=True,
                      collect_metrics=False)
     batch_fn, _ = make_batch_fn(cfg, 1, 4, 64, seed=0)
     rows, full = [], {}
+    ev_dt = jit_dt = None
 
-    # jit engine ticks/s
-    tr = AsyncTrainer(cfg, ecfg, "ours")
-    state = tr.init(jax.random.PRNGKey(0))
-    step = tr.jit_step()
-    state, _ = step(state, batch_fn(0))  # compile
-    t0 = time.time()
-    for i in range(1, steps):
-        state, m = step(state, batch_fn(i))
-    jax.block_until_ready(m["loss"])
-    jit_dt = (time.time() - t0) / max(steps - 1, 1)
-    rows.append(("runtime/jit_engine", round(1e6 * jit_dt, 1),
-                 f"ticks_s={1.0 / jit_dt:.2f}"))
+    if "throughput" in sections:
+        # jit engine ticks/s
+        tr = AsyncTrainer(cfg, ecfg, "ours")
+        state = tr.init(jax.random.PRNGKey(0))
+        step = tr.jit_step()
+        state, _ = step(state, batch_fn(0))  # compile
+        t0 = time.time()
+        for i in range(1, steps):
+            state, m = step(state, batch_fn(i))
+        jax.block_until_ready(m["loss"])
+        jit_dt = (time.time() - t0) / max(steps - 1, 1)
+        rows.append(("runtime/jit_engine", round(1e6 * jit_dt, 1),
+                     f"ticks_s={1.0 / jit_dt:.2f}"))
 
-    # event runtime ticks/s (fixed delays — same semantics, real execution
-    # order; the loop keeps losses on device and host-syncs once at drain)
-    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
-    rt.init(jax.random.PRNGKey(0))
-    rt.run(batch_fn, 1)  # compile per-stage kernels
-    t0 = time.time()
-    res = rt.run(batch_fn, steps - 1)
-    ev_dt = (time.time() - t0) / max(steps - 1, 1)
-    rows.append(("runtime/event_fixed", round(1e6 * ev_dt, 1),
-                 f"ticks_s={1.0 / ev_dt:.2f};overhead_x={ev_dt / jit_dt:.2f}"))
-    full["event_fixed"] = {"losses": res.losses, "utilization": list(res.utilization),
-                           "max_tau_obs": list(res.max_tau_obs)}
+        # event runtime ticks/s (fixed delays — same semantics, real execution
+        # order; the loop keeps losses on device and host-syncs once at drain)
+        rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
+        rt.init(jax.random.PRNGKey(0))
+        rt.run(batch_fn, 1)  # compile per-stage kernels
+        t0 = time.time()
+        res = rt.run(batch_fn, steps - 1)
+        ev_dt = (time.time() - t0) / max(steps - 1, 1)
+        rows.append(("runtime/event_fixed", round(1e6 * ev_dt, 1),
+                     f"ticks_s={1.0 / ev_dt:.2f};overhead_x={ev_dt / jit_dt:.2f}"))
+        full["event_fixed"] = {"losses": res.losses,
+                               "utilization": list(res.utilization),
+                               "max_tau_obs": list(res.max_tau_obs)}
 
-    # event runtime under churn: one stage leaves mid-run and rejoins; the
-    # outage is paid in stash/mailbox memory + observed tau, never a drain
-    half = max(steps // 2, 2)
-    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
-                      RuntimeCfg(churn=f"1,{3 * half},{3 * (steps // 8 or 1)}"))
-    rt.init(jax.random.PRNGKey(0))
-    rt.run(batch_fn, 1)
-    t0 = time.time()
-    resc = rt.run(batch_fn, steps - 1)
-    ch_dt = (time.time() - t0) / max(steps - 1, 1)
-    rows.append(("runtime/event_churn", round(1e6 * ch_dt, 1),
-                 f"ticks_s={1.0 / ch_dt:.2f};"
-                 f"outage={max(resc.outage_time):.0f};"
-                 f"max_tau={max(resc.max_tau_obs):.0f};"
-                 f"mbox_hw={max(hw for s in range(1, stages) for hw in resc.mailbox_high_water[s])}"))
-    full["event_churn"] = {
-        "losses": resc.losses, "utilization": list(resc.utilization),
-        "max_tau_obs": list(resc.max_tau_obs),
-        "outage_time": list(resc.outage_time),
-        "max_stash": list(resc.max_stash),
-        "mailbox_high_water": [list(hw) for hw in resc.mailbox_high_water]}
+        # event runtime under churn: one stage leaves mid-run and rejoins; the
+        # outage is paid in stash/mailbox memory + observed tau, never a drain
+        half = max(steps // 2, 2)
+        rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
+                          RuntimeCfg(churn=f"1,{3 * half},{3 * (steps // 8 or 1)}"))
+        rt.init(jax.random.PRNGKey(0))
+        rt.run(batch_fn, 1)
+        t0 = time.time()
+        resc = rt.run(batch_fn, steps - 1)
+        ch_dt = (time.time() - t0) / max(steps - 1, 1)
+        rows.append(("runtime/event_churn", round(1e6 * ch_dt, 1),
+                     f"ticks_s={1.0 / ch_dt:.2f};"
+                     f"outage={max(resc.outage_time):.0f};"
+                     f"max_tau={max(resc.max_tau_obs):.0f};"
+                     f"mbox_hw={max(hw for s in range(1, stages) for hw in resc.mailbox_high_water[s])}"))
+        full["event_churn"] = {
+            "losses": resc.losses, "utilization": list(resc.utilization),
+            "max_tau_obs": list(resc.max_tau_obs),
+            "outage_time": list(resc.outage_time),
+            "max_stash": list(resc.max_stash),
+            "mailbox_high_water": [list(hw) for hw in resc.mailbox_high_water]}
 
-    # trace calibration: measure real per-op latencies (the --record-trace
-    # hook; mb 0 pays compile, so the recorder is reset after a warmup tick),
-    # save the TraceDelay JSON, and replay the MEASURED distribution through
-    # the compute-free simulator
-    rec_ticks = max(steps // 4, 8)
-    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
-                      RuntimeCfg(record_trace=True))
-    rt.init(jax.random.PRNGKey(0))
-    rt.run(batch_fn, 1)
-    rt.reset_recorder()  # drop the compile-inflated first-tick samples
-    rt.run(batch_fn, rec_ticks)
-    os.makedirs(ART, exist_ok=True)
     trace_path = os.path.join(ART, "TRACE_runtime.json")
-    rt.recorder.save(trace_path)
-    tr_traces = rt.recorder.traces()
-    mean_fwd = float(np.mean([x for row in tr_traces["fwd"] for x in row]))
-    mean_bwd = float(np.mean([x for row in tr_traces["bwd"] for x in row]))
-    sim_t = simulate_schedule(P=stages, K=1, n_ticks=rec_ticks,
-                              delay_model=f"trace:{trace_path}")
-    rows.append(("runtime/sim_trace_replay",
-                 round(1e6 * sim_t["makespan"] / rec_ticks, 1),
-                 f"util_min={min(sim_t['utilization']):.2f};"
-                 f"max_tau={max(sim_t['max_tau_obs']):.0f};"
-                 f"mean_fwd_us={1e6 * mean_fwd:.0f};"
-                 f"mean_bwd_us={1e6 * mean_bwd:.0f}"))
-    full["trace_replay"] = {
-        "trace_path": os.path.relpath(trace_path, ART),
-        "recorded_ticks": rec_ticks,
-        "mean_fwd_s": mean_fwd, "mean_bwd_s": mean_bwd,
-        "utilization": list(sim_t["utilization"]),
-        "max_tau_obs": list(sim_t["max_tau_obs"]),
-        "max_stash": list(sim_t["max_stash"])}
+    if sections & {"trace", "adapt"}:
+        # trace calibration: measure real per-op latencies (the --record-trace
+        # hook; mb 0 pays compile, so the recorder is reset after a warmup
+        # tick), save the TraceDelay JSON, and replay the MEASURED
+        # distribution through the compute-free simulator
+        rec_ticks = max(steps // 4, 8)
+        rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
+                          RuntimeCfg(record_trace=True))
+        rt.init(jax.random.PRNGKey(0))
+        rt.run(batch_fn, 1)
+        rt.reset_recorder()  # drop the compile-inflated first-tick samples
+        rt.run(batch_fn, rec_ticks)
+        os.makedirs(ART, exist_ok=True)
+        rt.recorder.save(trace_path)
+        tr_traces = rt.recorder.traces()
+        mean_fwd = float(np.mean([x for row in tr_traces["fwd"] for x in row]))
+        mean_bwd = float(np.mean([x for row in tr_traces["bwd"] for x in row]))
+        sim_t = simulate_schedule(P=stages, K=1, n_ticks=rec_ticks,
+                                  delay_model=f"trace:{trace_path}")
+        rows.append(("runtime/sim_trace_replay",
+                     round(1e6 * sim_t["makespan"] / rec_ticks, 1),
+                     f"util_min={min(sim_t['utilization']):.2f};"
+                     f"max_tau={max(sim_t['max_tau_obs']):.0f};"
+                     f"mean_fwd_us={1e6 * mean_fwd:.0f};"
+                     f"mean_bwd_us={1e6 * mean_bwd:.0f}"))
+        full["trace_replay"] = {
+            "trace_path": os.path.relpath(trace_path, ART),
+            "recorded_ticks": rec_ticks,
+            "mean_fwd_s": mean_fwd, "mean_bwd_s": mean_bwd,
+            "utilization": list(sim_t["utilization"]),
+            "max_tau_obs": list(sim_t["max_tau_obs"]),
+            "max_stash": list(sim_t["max_stash"])}
 
-    # observed-tau-adaptive momentum vs the stage-index Eq. 13 keying, under
-    # regimes where measured staleness actually departs from the Eq. 5
-    # schedule — stragglers, jitter, churn, and the recorded real trace
-    m_obs = get_method("ours_delay_adaptive")
-    m_idx = dataclasses.replace(m_obs, name="ours_delay_adaptive_stage_index",
-                                tau_source="stage_index")
-    adapt_ticks = max(steps // 2, 12)
-    mid = 3 * (adapt_ticks // 2)
-    regimes = [("straggler", "straggler:1,4.0", None, 8),
-               ("jitter", "jitter:0.4", None, 8),
-               ("churn", "fixed", f"1,{mid},{mid // 3}", None),
-               ("trace", f"trace:{trace_path}", None, None)]
-    for tag, spec, churn, in_flight in regimes:
-        pair, wall = {}, {}
-        for vtag, meth in (("obs", m_obs), ("idx", m_idx)):
-            rte = EventRuntime(AsyncTrainer(cfg, ecfg, meth),
-                               RuntimeCfg(delay_model=spec, churn=churn,
-                                          in_flight=in_flight))
-            rte.init(jax.random.PRNGKey(0))  # same key -> identical init
-            rte.run(batch_fn, 1)  # compile per-stage jits outside the timer
-            t0 = time.time()
-            pair[vtag] = rte.run(batch_fn, adapt_ticks)
-            wall[vtag] = (time.time() - t0) / adapt_ticks
-        dl = np.abs(np.asarray(pair["obs"].losses)
-                    - np.asarray(pair["idx"].losses))
-        rows.append((f"runtime/adapt_{tag}", round(1e6 * wall["obs"], 1),
-                     f"final_obs={pair['obs'].losses[-1]:.4f};"
-                     f"final_idx={pair['idx'].losses[-1]:.4f};"
-                     f"max_dloss={dl.max():.4f};"
-                     f"max_tau={max(pair['obs'].max_tau_obs):.0f}"))
-        full[f"adapt_{tag}"] = {
-            "delay_model": spec, "churn": churn, "ticks": adapt_ticks,
-            "obs_losses": pair["obs"].losses, "idx_losses": pair["idx"].losses,
-            "mean_dloss": float(dl.mean()), "max_dloss": float(dl.max()),
-            "max_tau_obs": list(pair["obs"].max_tau_obs),
-            "taus_last": list(pair["obs"].taus[-1])}
+    if "adapt" in sections:
+        # observed-tau-adaptive momentum vs the stage-index Eq. 13 keying,
+        # under regimes where measured staleness actually departs from the
+        # Eq. 5 schedule — stragglers, jitter, churn, and the recorded trace
+        m_obs = get_method("ours_delay_adaptive")
+        m_idx = dataclasses.replace(m_obs,
+                                    name="ours_delay_adaptive_stage_index",
+                                    tau_source="stage_index")
+        adapt_ticks = max(steps // 2, 12)
+        mid = 3 * (adapt_ticks // 2)
+        regimes = [("straggler", "straggler:1,4.0", None, 8),
+                   ("jitter", "jitter:0.4", None, 8),
+                   ("churn", "fixed", f"1,{mid},{mid // 3}", None),
+                   ("trace", f"trace:{trace_path}", None, None)]
+        for tag, spec, churn, in_flight in regimes:
+            pair, wall = {}, {}
+            for vtag, meth in (("obs", m_obs), ("idx", m_idx)):
+                rte = EventRuntime(AsyncTrainer(cfg, ecfg, meth),
+                                   RuntimeCfg(delay_model=spec, churn=churn,
+                                              in_flight=in_flight))
+                rte.init(jax.random.PRNGKey(0))  # same key -> identical init
+                rte.run(batch_fn, 1)  # compile per-stage jits outside the timer
+                t0 = time.time()
+                pair[vtag] = rte.run(batch_fn, adapt_ticks)
+                wall[vtag] = (time.time() - t0) / adapt_ticks
+            dl = np.abs(np.asarray(pair["obs"].losses)
+                        - np.asarray(pair["idx"].losses))
+            rows.append((f"runtime/adapt_{tag}", round(1e6 * wall["obs"], 1),
+                         f"final_obs={pair['obs'].losses[-1]:.4f};"
+                         f"final_idx={pair['idx'].losses[-1]:.4f};"
+                         f"max_dloss={dl.max():.4f};"
+                         f"max_tau={max(pair['obs'].max_tau_obs):.0f}"))
+            full[f"adapt_{tag}"] = {
+                "delay_model": spec, "churn": churn, "ticks": adapt_ticks,
+                "obs_losses": pair["obs"].losses,
+                "idx_losses": pair["idx"].losses,
+                "mean_dloss": float(dl.mean()), "max_dloss": float(dl.max()),
+                "max_tau_obs": list(pair["obs"].max_tau_obs),
+                "taus_last": list(pair["obs"].taus[-1])}
 
-    # schedule-only simulations: throughput cost of delay + membership regimes
-    sim_cells = [("fixed", None), ("jitter:0.3", None), ("straggler:0,4.0", None),
-                 ("fixed", "1,200,100"), ("jitter:0.3", "1,200,100")]
-    for spec, churn in sim_cells:
-        sim = simulate_schedule(P=stages, K=1, n_ticks=200, delay_model=spec,
-                                churn=churn)
-        tag = spec.split(":")[0] + ("_churn" if churn else "")
-        derived = (f"util_min={min(sim['utilization']):.2f};"
-                   f"max_tau={max(sim['max_tau_obs']):.0f}")
-        if churn:
-            derived += (f";outage={max(sim['outage_time']):.0f};"
-                        f"max_stash={max(sim['max_stash'])}")
-        rows.append((f"runtime/sim_{tag}", round(1e6 * sim["makespan"] / 200, 1),
-                     derived))
-        full[f"sim_{spec}" + (f"_churn_{churn}" if churn else "")] = {
-            "utilization": list(sim["utilization"]),
-            "max_tau_obs": list(sim["max_tau_obs"]),
-            "max_stash": list(sim["max_stash"]),
-            "outage_time": list(sim["outage_time"]),
-            "mailbox_high_water": [list(hw) for hw in sim["mailbox_high_water"]]}
+    if "sim" in sections:
+        # schedule-only simulations: throughput cost of delay + membership
+        sim_cells = [("fixed", None), ("jitter:0.3", None),
+                     ("straggler:0,4.0", None),
+                     ("fixed", "1,200,100"), ("jitter:0.3", "1,200,100")]
+        for spec, churn in sim_cells:
+            sim = simulate_schedule(P=stages, K=1, n_ticks=200,
+                                    delay_model=spec, churn=churn)
+            tag = spec.split(":")[0] + ("_churn" if churn else "")
+            derived = (f"util_min={min(sim['utilization']):.2f};"
+                       f"max_tau={max(sim['max_tau_obs']):.0f}")
+            if churn:
+                derived += (f";outage={max(sim['outage_time']):.0f};"
+                            f"max_stash={max(sim['max_stash'])}")
+            rows.append((f"runtime/sim_{tag}",
+                         round(1e6 * sim["makespan"] / 200, 1), derived))
+            full[f"sim_{spec}" + (f"_churn_{churn}" if churn else "")] = {
+                "utilization": list(sim["utilization"]),
+                "max_tau_obs": list(sim["max_tau_obs"]),
+                "max_stash": list(sim["max_stash"]),
+                "outage_time": list(sim["outage_time"]),
+                "mailbox_high_water": [list(hw) for hw in sim["mailbox_high_water"]]}
 
+    if "k_equiv" in sections:
+        # K>1 per-microbatch replay equivalence A/B: event runtime vs the
+        # engine's grouped [P, K] stash replay (the default at K>1) and vs
+        # the pre-grouping single-point idealization (Eq. 5 scalar broadcast,
+        # the legacy [P]-vector path). grouped tracks the runtime at fp
+        # tolerance at every K; legacy only at K=1, where the two coincide.
+        k_ticks = max(steps // 5, 6)
+        for K in (1, 2, 4):
+            kb_fn, _ = make_batch_fn(cfg, K, 2, 64, seed=0)
+            ek = dataclasses.replace(ecfg, update_interval=K)
+
+            rt = EventRuntime(AsyncTrainer(cfg, ek, "ours"))
+            rt.init(jax.random.PRNGKey(0))
+            res = rt.run(kb_fn, k_ticks)
+
+            def engine_losses(taus_of_t):
+                tr = AsyncTrainer(cfg, ek, "ours")
+                s = tr.init(jax.random.PRNGKey(0))
+                step = tr.jit_step(donate=False)
+                losses, dts = [], []
+                for t in range(k_ticks):
+                    t0 = time.time()
+                    s, m = step(s, kb_fn(t), taus_of_t(t))
+                    losses.append(float(m["loss"]))
+                    dts.append(time.time() - t0)
+                # first tick pays compile; report the steady-state mean
+                return losses, float(np.mean(dts[1:] or dts))
+
+            grouped, g_dt = engine_losses(lambda t: None)  # [P, K] default
+            legacy, _ = engine_losses(
+                lambda t, v=jnp.asarray(delay.stage_delays(stages, K),
+                                        jnp.int32): v)
+            dl_g = float(np.abs(np.asarray(grouped)
+                                - np.asarray(res.losses)).max())
+            dl_l = float(np.abs(np.asarray(legacy)
+                                - np.asarray(res.losses)).max())
+            rows.append((f"runtime/k_equiv_K{K}", round(1e6 * g_dt, 1),
+                         f"max_dloss_grouped={dl_g:.2e};"
+                         f"max_dloss_legacy={dl_l:.2e};ticks={k_ticks}"))
+            full[f"k_equiv_K{K}"] = {
+                "K": K, "ticks": k_ticks,
+                "runtime_losses": res.losses,
+                "engine_grouped_losses": grouped,
+                "engine_legacy_losses": legacy,
+                "max_dloss_grouped": dl_g, "max_dloss_legacy": dl_l,
+                "tau_groups_last": [list(g) for g in res.tau_groups[-1]],
+                "stage_mb_delays": [list(r) for r in
+                                    delay.stage_mb_delays(stages, K)]}
+
+    if sections != set(SECTIONS):
+        # partial run: keep the other sections' entries in the artifact
+        path = os.path.join(ART, "BENCH_runtime.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                merged = json.load(f)
+            merged.update(full)
+            full = merged
     save_json("BENCH_runtime.json", full)
     emit_csv(rows)
-    print(f"# event runtime overhead vs jit engine: {ev_dt / jit_dt:.2f}x "
-          f"(per-stage dispatch + python event loop; deployment-faithful order)")
+    if ev_dt is not None:
+        print(f"# event runtime overhead vs jit engine: {ev_dt / jit_dt:.2f}x "
+              f"(per-stage dispatch + python event loop; deployment-faithful order)")
     return full
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--sections", default=None,
+                    help=f"comma list of {','.join(SECTIONS)} (default: all); "
+                         "a partial run merges into the existing artifact")
     a = ap.parse_args()
-    main(a.steps)
+    main(a.steps, sections=a.sections.split(",") if a.sections else None)

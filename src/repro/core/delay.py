@@ -14,8 +14,43 @@ def stage_delays(P: int, K: int = 1) -> tuple:
     return tuple(stage_delay(i, P, K) for i in range(1, P + 1))
 
 
+def stage_mb_delay(i: int, k: int, P: int, K: int = 1) -> int:
+    """Per-MICROBATCH steady-state staleness under fixed-delay 1F1B:
+
+        tau_{i,k} = max(ceil((P - i - k) / K), 0),   i in 1..P, k in 0..K-1
+
+    (k indexes the microbatch within an accumulation group). Derivation: stage
+    i forwards global microbatch g = tK + k at its live point, which has seen
+    u_fwd = max(floor((g - (P - i)) / K), 0) updates, so the observed delay is
+    t - u_fwd — the closed form above at steady state. Eq. 5's scalar is the
+    LAST microbatch of the group (k = K-1): stage_delay(i, P, K) ==
+    stage_mb_delay(i, K-1, P, K), while earlier microbatches in the group are
+    staler (up to ceil((P-i)/K) at k = 0) — the per-update mean the runtime
+    reports is fractional exactly because the group straddles these values.
+    Verified against simulate_schedule's observed taus (tests/test_runtime.py,
+    tests/test_delay_stash.py)."""
+    assert 1 <= i <= P and 0 <= k < K
+    return max(-((i + k - P) // K), 0)  # ceil((P-i-k)/K) via floor-div
+
+
+def stage_mb_delays(P: int, K: int = 1) -> tuple:
+    """[P][K] matrix of per-microbatch delays: rows ordered by stage (1..P),
+    columns by microbatch position within the accumulation group. The static
+    schedule the engine's per-microbatch stash replay defaults to at K > 1."""
+    return tuple(tuple(stage_mb_delay(i, k, P, K) for k in range(K))
+                 for i in range(1, P + 1))
+
+
 def max_delay(P: int, K: int = 1) -> int:
     return stage_delay(1, P, K)
+
+
+def max_mb_delay(P: int, K: int = 1) -> int:
+    """Largest per-microbatch delay (stage 1, first microbatch of its group):
+    ceil((P-1)/K) — EXCEEDS Eq. 5's floor((2(P-1)+1)/2K) whenever K does not
+    divide P-1, which is why per-microbatch stash rings must be sized off this
+    bound rather than the per-update scalar."""
+    return stage_mb_delay(1, 0, P, K)
 
 
 def validate_taus(taus, P: int) -> tuple:
@@ -31,23 +66,53 @@ def validate_taus(taus, P: int) -> tuple:
     return taus
 
 
-def validate_dynamic_taus(taus, P: int) -> list:
-    """Validate a per-TICK delay vector for the engine's dynamic path
-    (AsyncTrainer.step(..., taus=...)): a length-P sequence or [P] array,
-    possibly traced, typically one row of `RuntimeResult.taus` — the event
-    runtime's observed per-tick staleness fed back into the jit engine.
-    Entries may be fractional (K>1 accumulation groups average the delays of
-    their K microbatches). Returns the per-stage entries as a list; lengths
-    are static even for traced arrays, so this check costs nothing in jit."""
+def validate_dynamic_taus(taus, P: int, K: int = None) -> list:
+    """Validate a per-TICK delay input for the engine's dynamic path
+    (AsyncTrainer.step(..., taus=...)). Two accepted forms:
+
+    - length-P vector ([P] array or sequence, possibly traced): one delay per
+      stage, applied to EVERY microbatch of the tick — the legacy idealized
+      form (typically one row of `RuntimeResult.taus`; entries may be
+      fractional at K>1, where they are the group mean).
+    - [P, K] matrix (array or nested sequence, possibly traced): one delay per
+      (stage, microbatch) — the lossless form (one row of
+      `RuntimeResult.tau_groups`, or the static `stage_mb_delays` schedule)
+      that the per-microbatch stash replay consumes.
+
+    Returns the per-stage entries as a list: scalars for the vector form,
+    length-K rows for the matrix form. Lengths/shapes are static even for
+    traced arrays, so this check costs nothing in jit. K is only required to
+    validate the matrix form's second axis."""
     shape = getattr(taus, "shape", None)
     if shape is None and not hasattr(taus, "__len__"):
         raise ValueError(
-            f"dynamic taus must be a length-{P} per-stage vector, got the "
-            f"scalar {taus!r}")
-    n = len(taus) if shape is None else (shape[0] if len(shape) == 1 else -1)
+            f"dynamic taus must be a length-{P} per-stage vector or a "
+            f"[{P}, K] per-microbatch matrix, got the scalar {taus!r}")
+    n = len(taus) if shape is None else (shape[0] if shape else -1)
     if n != P:
         raise ValueError(
             f"dynamic taus must be a length-{P} per-stage vector (one entry "
-            f"per pipeline stage), got "
+            f"per pipeline stage) or a [{P}, K] per-microbatch matrix, got "
             f"{'shape ' + str(tuple(shape)) if shape is not None else f'{n} entries'}")
-    return [taus[i] for i in range(P)]
+    rows = [taus[i] for i in range(P)]
+    widths = []
+    for r in rows:
+        rs = getattr(r, "shape", None)
+        if rs is not None:
+            widths.append(rs[0] if len(rs) == 1 else (-1 if rs else None))
+        elif hasattr(r, "__len__"):
+            widths.append(len(r))
+        else:
+            widths.append(None)  # scalar entry: vector form
+    if all(w is None for w in widths):
+        return rows
+    if any(w is None or w < 0 for w in widths) or len(set(widths)) != 1:
+        raise ValueError(
+            f"per-microbatch dynamic taus must be a rectangular [{P}, K] "
+            f"matrix (every stage row the same length), got row widths "
+            f"{widths}")
+    if K is not None and widths[0] != K:
+        raise ValueError(
+            f"per-microbatch dynamic taus must have one column per "
+            f"accumulation microbatch (K={K}), got {widths[0]} columns")
+    return rows

@@ -12,10 +12,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import numbers
 from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import delay as delay_mod
 from repro.core import staged, stash
@@ -84,12 +86,21 @@ class AsyncTrainer:
         n_units = len(model_cfg.prelude) + model_cfg.n_periods + model_cfg.enc_periods
         P = min(ecfg.n_stages, max(n_units, 1))
         self.P = P
+        K = ecfg.update_interval
         if self.method.sync:
             self.taus = tuple(0 for _ in range(P))
+            self.taus_mb = tuple((0,) * K for _ in range(P))
         elif ecfg.straggler_delays is not None:
             self.taus = delay_mod.validate_taus(ecfg.straggler_delays, P)
+            # a pinned override fixes the stage's delay for every microbatch
+            self.taus_mb = tuple((t,) * K for t in self.taus)
         else:
-            self.taus = delay_mod.stage_delays(P, ecfg.update_interval)
+            self.taus = delay_mod.stage_delays(P, K)
+            # the static per-MICROBATCH schedule (delay.stage_mb_delays): at
+            # K > 1 the engine replays each microbatch of an update at its own
+            # staggered point instead of idealizing the whole group at Eq. 5's
+            # scalar — the K>1 event/engine equivalence contract (DESIGN.md §10)
+            self.taus_mb = delay_mod.stage_mb_delays(P, K)
         kw = dict(self.method.opt_kwargs())
         kw.setdefault("wd", ecfg.weight_decay)
         # kernel routing: with a pallas/interpret backend, the per-stage optimizer
@@ -153,7 +164,10 @@ class AsyncTrainer:
     def _stash_depth(self, i: int) -> int:
         if self.ecfg.max_dynamic_delay is not None:
             return stash.depth_for(self.ecfg.max_dynamic_delay)
-        return self.taus[i] + 1
+        # per-microbatch replay: the FIRST microbatch of a group is staler
+        # than Eq. 5's scalar (stage_mb_delay(i, 0) = ceil((P-i)/K) vs
+        # floor((2(P-i)+1)/2K)), so the ring must cover the group maximum
+        return max(max(self.taus_mb[i]), self.taus[i]) + 1
 
     # -- per-stage method semantics (shared by the jit engine and the event
     #    runtime, so both execution paths apply bit-identical update math) -----
@@ -164,13 +178,42 @@ class AsyncTrainer:
         runtime's measured staleness, or step(..., taus=...)); "stage_index"
         pins the static Eq. 5 / straggler-override schedule so corrections stay
         blind to measured delays. Stash selection always uses the live tau —
-        only the correction math is re-sourced."""
+        only the correction math is re-sourced. The live value may be a
+        per-microbatch GROUP (length-K tuple or [K] array) at K > 1; callers
+        collapse it via _reduce_tau (Method.tau_reduce)."""
         return tau if self.method.tau_source == "observed" else self.taus[i]
 
+    def _reduce_tau(self, tau):
+        """Collapse a per-microbatch delay group (length-K tuple or [K] array)
+        to the single per-update value the correction math consumes — the
+        method's explicit Method.tau_reduce policy ("mean" | "max" | "last").
+        Scalars pass through unchanged, so the K = 1 and legacy vector paths
+        are byte-identical to the pre-group engine. Static (python-number)
+        groups fold at trace time; traced groups lower to one jnp reduction."""
+        red = self.method.tau_reduce
+        if isinstance(tau, (tuple, list)):
+            if len(tau) == 1:
+                return tau[0]
+            if all(isinstance(x, (int, float)) for x in tau):
+                if red == "mean":
+                    return sum(tau) / len(tau)
+                return max(tau) if red == "max" else tau[-1]
+            tau = jnp.asarray(tau)
+        if getattr(tau, "ndim", 0) >= 1:
+            if tau.shape[0] == 1:
+                return tau[0]
+            if red == "mean":
+                return jnp.mean(jnp.asarray(tau, jnp.float32))
+            return jnp.max(tau) if red == "max" else tau[-1]
+        return tau
+
     def _bwd_weights(self, i: int, params, extra, W_stale, tau):
-        """Where stage i's VJP is linearized. tau: static int or traced/observed."""
+        """Where stage i's VJP is linearized. tau: static int or traced/observed
+        (per-microbatch callers pass each microbatch's own delay, so e.g.
+        PipeMare's prediction is linearized per microbatch — matching the event
+        runtime, which computes Wb at every backward's own tau_g)."""
         m = self.method
-        tau = self._method_tau(i, tau)
+        tau = self._reduce_tau(self._method_tau(i, tau))
         if m.bwd_point == "stash":
             return W_stale
         if m.bwd_point == "current":
@@ -192,15 +235,17 @@ class AsyncTrainer:
         """One stage's method-interpreted update at (possibly dynamic) delay tau.
 
         Returns (new_params, new_opt, new_extra, fwd_point, aux). tau may be a
-        python number (static Eq. 5 schedule — branches fold at trace time) or
-        a traced scalar (live observed delay from the event runtime).
+        python number (static Eq. 5 schedule — branches fold at trace time), a
+        traced scalar (live observed delay from the event runtime), or a
+        per-microbatch GROUP (length-K tuple / [K] array) which collapses to
+        one per-update value via the method's explicit Method.tau_reduce.
         """
         m = self.method
         if lr_t is None:
             lr_t = self.lr_sched(t)
         # corrections consume the method-selected tau source; the raw `tau`
         # argument stays the execution path's live value (stash selection)
-        tau_m = self._method_tau(i, tau)
+        tau_m = self._reduce_tau(self._method_tau(i, tau))
         new_extra = dict(extra)
         # gradient forecasting corrections (baselines of Sec. 5.4)
         if m.grad_forecast == "second_order":
@@ -245,42 +290,157 @@ class AsyncTrainer:
 
     # -- one tick -------------------------------------------------------------
 
+    def _host_check_taus(self, rows):
+        """Host-side depth-bound validation for CONCRETE dynamic taus (python /
+        numpy numbers, committed jax arrays): an oversized delay raises here
+        instead of reading a saturated ring slot. Traced entries are skipped —
+        they clamp inside stash.get/get_group (documented saturation)."""
+        for i, r in enumerate(rows):
+            if isinstance(r, numbers.Real):
+                vals = [float(r)]
+            elif isinstance(r, (tuple, list)):
+                if not all(isinstance(x, numbers.Real) for x in r):
+                    continue
+                vals = [float(x) for x in r]
+            elif isinstance(r, (np.ndarray, jax.Array)):
+                try:
+                    vals = np.asarray(r).reshape(-1).tolist()
+                except (jax.errors.ConcretizationTypeError,
+                        jax.errors.TracerArrayConversionError):
+                    continue  # traced: clamps in stash._check_tau instead
+            else:
+                continue
+            hi = self._stash_depth(i) - 1
+            bad = [v for v in vals if v < 0 or v > hi]
+            if bad:
+                raise ValueError(
+                    f"dynamic tau(s) {bad} for stage {i} exceed its stash ring "
+                    f"depth {hi + 1} (valid delays 0..{hi}): raise "
+                    f"EngineCfg.max_dynamic_delay to replay them exactly")
+
+    def _grouped_loss_and_grads(self, state: AsyncState, rows, batch, t):
+        """Per-microbatch stash replay: microbatch k of the tick forwards (and
+        backwards, for weight-stashing methods) through each stage's tick
+        (t - rows[i][k]) point — K staggered points per stage per tick instead
+        of one, Eq. 7 applied per microbatch. Accumulation mirrors
+        staged.grad_accum exactly (f32 cast, in-order sum via scan, 1/K scale)
+        so the K = 1 numerics are unchanged and the event runtime's in-order
+        per-microbatch accumulation is reproduced term for term.
+
+        Returns (loss, grads, Wfwd_g) with Wfwd_g the per-stage stacked [K]
+        forward points (leading microbatch axis, via stash.get_group)."""
+        m = self.method
+        P, K = self.P, self.ecfg.update_interval
+        Wfwd_g = [stash.get_group(state.stashes[i], t, rows[i],
+                                  like=state.params[i]) for i in range(P)]
+        # [K, P] per-microbatch delay columns (static rows fold to constants)
+        tau_cols = jnp.transpose(jnp.stack([jnp.asarray(r) for r in rows]))
+
+        def one_mb(Wf_k, b_k, tau_col):
+            Wb_k = (Wf_k if m.bwd_point == "stash" else
+                    [self._bwd_weights(i, state.params[i], state.extra[i],
+                                       Wf_k[i], tau_col[i]) for i in range(P)])
+            return staged.staged_loss_and_grads(self.stage_fns, Wf_k, Wb_k, b_k)
+
+        def at0(tree_):
+            return jax.tree.map(lambda x: x[0], tree_)
+
+        loss0, grads0 = one_mb([at0(g) for g in Wfwd_g], at0(batch), tau_cols[0])
+        if K == 1:
+            return loss0, grads0, Wfwd_g
+        grads0 = jax.tree.map(lambda g: g.astype(jnp.float32), grads0)
+
+        def body(acc, xs):
+            Wf_rest, b_k, tau_col = xs
+            Wf_k = list(Wf_rest)
+            loss_k, grads_k = one_mb(Wf_k, b_k, tau_col)
+            acc_loss, acc_grads = acc
+            acc_grads = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                     acc_grads, grads_k)
+            return (acc_loss + loss_k, acc_grads), None
+
+        rest = (tuple(jax.tree.map(lambda x: x[1:], g) for g in Wfwd_g),
+                jax.tree.map(lambda x: x[1:], batch), tau_cols[1:])
+        (loss, grads), _ = jax.lax.scan(body, (loss0, grads0), rest,
+                                        unroll=self.model_cfg.unroll)
+        scale = 1.0 / K
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads), Wfwd_g
+
     def step(self, state: AsyncState, batch, taus=None) -> tuple:
         """batch: pytree with leading microbatch axis [K, ...] (K = update_interval).
 
-        taus: optional per-tick delay vector (length-P sequence or int32 [P]
-        array, possibly traced) overriding the static schedule — the dynamic-tau
-        path driven by the event runtime's observed staleness (one row of
-        `RuntimeResult.taus`). Every entry must be <= the stash depth bound
-        (EngineCfg.max_dynamic_delay). The vector drives the stash replay for
-        every method; whether the method's correction math ALSO consumes it is
-        its `tau_source` axis (DESIGN.md §10).
+        taus: optional per-tick delay override of the static schedule — the
+        dynamic-tau path driven by the event runtime's observed staleness.
+        Two accepted shapes (delay.validate_dynamic_taus):
+
+        - [P] vector (length-P sequence or int32 array, possibly traced): one
+          delay per stage applied to every microbatch of the tick — the legacy
+          idealized form (one row of `RuntimeResult.taus`).
+        - [P, K] matrix: one delay per (stage, microbatch) — the lossless form
+          (one row of `RuntimeResult.tau_groups`) replayed per microbatch
+          through stash.get_group.
+
+        With taus=None at K > 1, async methods default to the static
+        per-microbatch schedule `delay.stage_mb_delays(P, K)` (whose k = K-1
+        column is exactly Eq. 5), closing the K>1 event/engine gap; at K = 1
+        the two schedules coincide and the legacy single-point program is
+        emitted unchanged. Concrete entries are depth-validated host-side;
+        traced entries saturate at the ring depth (stash._check_tau). Whether
+        the method's correction math ALSO consumes the live value is its
+        `tau_source` axis, and how a K-group collapses for that math is its
+        `tau_reduce` policy (DESIGN.md §10).
         """
         m = self.method
         t = state.step
         P = self.P
+        K = self.ecfg.update_interval
         if taus is None:
-            taus_t = list(self.taus)
-        else:
-            taus_t = delay_mod.validate_dynamic_taus(taus, P)
-
-        # 1) forward/backward points per stage
-        Wfwd = []
-        for i in range(P):
-            if m.sync:
-                Wfwd.append(state.params[i])
+            if m.sync or K == 1:
+                rows = list(self.taus)
             else:
-                Wfwd.append(stash.get(state.stashes[i], t, taus_t[i], like=state.params[i]))
-        Wbwd = ([self._bwd_weights(i, state.params[i], state.extra[i], Wfwd[i], taus_t[i])
-                 for i in range(P)]
-                if m.bwd_point != "stash" else Wfwd)
+                rows = list(self.taus_mb)
+        else:
+            rows = delay_mod.validate_dynamic_taus(taus, P, K)
+        grouped = any(isinstance(r, (tuple, list)) or getattr(r, "ndim", 0) >= 1
+                      for r in rows)
+        if grouped and K == 1:  # [P, 1] matrix == [P] vector: legacy program
+            rows = [r[0] for r in rows]
+            grouped = False
+        self._host_check_taus(rows)
+        grouped = grouped and not m.sync  # sync ignores stashes entirely
 
-        # 2) staggered-stale forward + per-stage VJP backward (+ grad accumulation)
-        def lg(Wf, Wb, b):
-            return staged.staged_loss_and_grads(self.stage_fns, Wf, Wb, b)
+        if grouped:
+            # 1+2) K staggered points per stage; per-microbatch fwd/bwd + accum
+            loss, grads, Wfwd_g = self._grouped_loss_and_grads(state, rows, batch, t)
+            # the update-level stale point is the group's FINAL microbatch's
+            # (k = K-1) — the microbatch whose backward completes the update,
+            # matching the event runtime's W_used at the accumulation boundary
+            W_stale = [jax.tree.map(lambda x: x[-1], g) for g in Wfwd_g]
+            # metrics report the stalest point of the group (k = 0)
+            W_gap = [jax.tree.map(lambda x: x[0], g) for g in Wfwd_g]
+            taus_t = rows
+        else:
+            # 1) forward/backward points per stage (one staggered point each)
+            taus_t = rows
+            Wfwd = []
+            for i in range(P):
+                if m.sync:
+                    Wfwd.append(state.params[i])
+                else:
+                    Wfwd.append(stash.get(state.stashes[i], t, taus_t[i],
+                                          like=state.params[i]))
+            Wbwd = ([self._bwd_weights(i, state.params[i], state.extra[i],
+                                       Wfwd[i], taus_t[i]) for i in range(P)]
+                    if m.bwd_point != "stash" else Wfwd)
 
-        loss, grads = staged.grad_accum(lg, Wfwd, Wbwd, batch,
-                                        unroll=self.model_cfg.unroll)
+            # 2) staggered-stale forward + per-stage VJP backward (+ accum)
+            def lg(Wf, Wb, b):
+                return staged.staged_loss_and_grads(self.stage_fns, Wf, Wb, b)
+
+            loss, grads = staged.grad_accum(lg, Wfwd, Wbwd, batch,
+                                            unroll=self.model_cfg.unroll)
+            W_stale = Wfwd
+            W_gap = Wfwd
 
         # 3-5) per-stage method update (Sec. 5.4 corrections + Eq. 13 schedules),
         # then stash the next tick's forward point
@@ -290,7 +450,7 @@ class AsyncTrainer:
         for i in range(P):
             np_i, no_i, ne_i, fp_i, aux = self._stage_update(
                 i, state.params[i], grads[i], state.opt[i], state.extra[i],
-                taus_t[i], t, W_stale=Wfwd[i], lr_t=lr_t)
+                taus_t[i], t, W_stale=W_stale[i], lr_t=lr_t)
             new_params.append(np_i)
             new_opts.append(no_i)
             new_extras.append(ne_i)
@@ -302,7 +462,7 @@ class AsyncTrainer:
             # weight discrepancy Delta_t at stage 1 (largest delay) — Fig. 4 'gap'
             d = jax.tree.map(
                 lambda w, wb: w.astype(jnp.float32) - wb.astype(jnp.float32),
-                state.params[0], Wfwd[0])
+                state.params[0], W_gap[0])
             sq = sum(jnp.vdot(x, x) for x in jax.tree.leaves(d))
             n = sum(x.size for x in jax.tree.leaves(d))
             metrics["stage1_gap_rmse"] = jnp.sqrt(sq / n)

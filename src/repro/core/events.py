@@ -358,20 +358,46 @@ class TraceRecorder:
     def __init__(self, P: int, K: int = 1):
         self.P = P
         self.K = K
+        self.warmup_mb = 0  # samples below this GLOBAL mb index are warmup
         self._lat = {"fwd": [dict() for _ in range(P)],
                      "bwd": [dict() for _ in range(P)]}
 
     def add(self, stage: int, op: str, mb: int, seconds: float):
+        if mb < self.warmup_mb:
+            return  # compile-inflated warmup dispatch: never reaches a trace
         self._lat[op][stage][mb] = float(seconds)
 
     def __len__(self):
         return sum(len(row) for rows in self._lat.values() for row in rows)
 
+    def discard_warmup(self) -> int:
+        """Mark everything recorded so far as compile warmup and drop it.
+
+        Microbatch-aware: the boundary is (max recorded mb + 1) rounded UP to
+        a K multiple — a whole number of accumulation groups — so at K > 1 no
+        compile-inflated dispatch of a partially-recorded group survives, and
+        any straggling `add` for a pre-boundary microbatch (a warmup backward
+        landing after the reset) is ignored by INDEX rather than by when the
+        recorder object happened to be swapped. Keeps per-group microbatch
+        alignment for TraceDelay's `row[mb % len(row)]` replay. Returns the
+        new boundary."""
+        seen = [mb for rows in self._lat.values() for row in rows for mb in row]
+        if seen:
+            hi = max(self.warmup_mb, max(seen) + 1)
+            self.warmup_mb = -(-hi // self.K) * self.K
+        for rows in self._lat.values():
+            for row in rows:
+                row.clear()
+        return self.warmup_mb
+
     def traces(self) -> dict:
         """Emit the TraceDelay schema dict; per-stage rows are ordered by
         microbatch index (dense from the first recorded mb), so replay of the
-        same horizon reuses each microbatch's measured latency exactly."""
-        out = {"version": 1, "P": self.P, "K": self.K, "unit": "seconds"}
+        same horizon reuses each microbatch's measured latency exactly. The
+        `warmup_mb` key records how many leading microbatches were discarded
+        as compile warmup (provenance only — replay ignores unknown keys)."""
+        out = {"version": 1, "P": self.P, "K": self.K, "unit": "seconds",
+               "warmup_mb": self.warmup_mb}
         for op in ("fwd", "bwd"):
             out[op] = [[row[mb] for mb in sorted(row)] or [MIN_LATENCY]
                        for row in self._lat[op]]

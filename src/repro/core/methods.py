@@ -46,6 +46,21 @@ class Method:
     # tau == Eq. 5 and delay_momentum(tau_i) == stage_momentum(i)); they split
     # during warmup and under stragglers/jitter/churn (DESIGN.md §10).
     tau_source: str = "observed"  # observed | stage_index
+    # How the K per-microbatch delays of an accumulation group collapse to the
+    # ONE tau value the per-update correction math consumes (K>1 only; at K=1
+    # the group is a single delay and every policy is the identity):
+    #   "mean" — the group average (fractional at K>1). This is what the event
+    #            runtime has always fed back per update, so it is the default
+    #            for every registered method — but now an explicit contract
+    #            instead of a float inherited by accident from np.mean.
+    #   "max"  — the stalest microbatch of the group: conservative corrections
+    #            (discount/smooth for the worst delay the update saw).
+    #   "last" — the group's final microbatch (k = K-1), i.e. Eq. 5's literal
+    #            scalar at steady state (stage_mb_delay(i, K-1) == Eq. 5).
+    # Stash replay is NOT affected: each microbatch always replays at its own
+    # per-microbatch delay; tau_reduce only keys the update-level corrections
+    # (lr_discount, delay_momentum, forecasting, pipemare/xpipe prediction).
+    tau_reduce: str = "mean"  # mean | max | last
     # memory class as reported in Table 1 (P = stages, N = params)
     memory: str = "O(PN)"
 
@@ -54,6 +69,10 @@ class Method:
             raise ValueError(
                 f"tau_source must be 'observed' or 'stage_index', "
                 f"got {self.tau_source!r}")
+        if self.tau_reduce not in ("mean", "max", "last"):
+            raise ValueError(
+                f"tau_reduce must be 'mean', 'max', or 'last', "
+                f"got {self.tau_reduce!r}")
 
     def opt_kwargs(self):
         return dict(self.opt_kw)

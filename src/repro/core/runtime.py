@@ -78,11 +78,44 @@ class RuntimeCfg:
     seed: int = 0  # forwarded to spec-string delay models
 
 
+class _TauGroup:
+    """K-group accumulator for per-microbatch observed delays — the ONE shared
+    helper behind the full runtime's and simulate_schedule's update boundaries
+    (they used to hand-roll this separately). `add` records one backward's
+    observed tau; when the K-th lands, `take` emits the completed group as a
+    tuple (microbatch order) for lossless feedback/reporting — the per-update
+    mean is derived from it, not the other way around."""
+
+    __slots__ = ("K", "cur")
+
+    def __init__(self, K: int):
+        self.K = K
+        self.cur = []
+
+    def add(self, tau) -> bool:
+        """Record one observed tau; True when the group is complete."""
+        self.cur.append(float(tau))
+        return len(self.cur) == self.K
+
+    def take(self) -> tuple:
+        group = tuple(self.cur)
+        self.cur = []
+        return group
+
+    def __len__(self):
+        return len(self.cur)
+
+
 @dataclasses.dataclass
 class RuntimeResult:
     losses: list  # per tick (mean over the K microbatches of the update)
-    metrics: list  # per tick: {"loss", "lr", "tau_obs"}
-    taus: list  # per tick: tuple of per-stage observed delays (update units)
+    metrics: list  # per tick: {"loss", "lr", "tau_obs", "tau_group"}
+    taus: list  # per tick: tuple of per-stage observed delays (update units;
+    #             the K-group MEAN at K > 1 — fractional, legacy reporting)
+    tau_groups: list  # per tick: tuple of per-stage length-K tuples — every
+    #             microbatch's observed delay, lossless. Feed a row (as an
+    #             int32 [P, K] array) to AsyncTrainer.step(..., taus=...) to
+    #             replay this tick's staleness per microbatch.
     makespan: float  # simulated wall-clock of this run() call
     utilization: tuple  # per-stage busy fraction of the makespan
     max_stash: tuple  # per-stage peak stash entries (== max observed tau + 1)
@@ -100,7 +133,7 @@ _SEED_CT = object()  # last stage's backward seeds its own cotangent
 
 
 class _StageWorker:
-    def __init__(self, idx, params, opt_state, extra, fwd_point, n_updates):
+    def __init__(self, idx, params, opt_state, extra, fwd_point, n_updates, K=1):
         self.idx = idx
         self.params = params
         self.opt = opt_state
@@ -115,7 +148,8 @@ class _StageWorker:
         self.n_updates = n_updates  # global update count (== engine tick)
         self.acc = None  # gradient accumulator (K > 1)
         self.acc_n = 0
-        self.acc_tau = []
+        self.acc_tau = _TauGroup(K)  # per-microbatch observed delays of the group
+        self.last_tau_group = (0.0,) * K  # most recent completed group
         self.busy_until = 0.0
         self.busy_time = 0.0
         self.max_stash = 0
@@ -196,6 +230,13 @@ class EventRuntime:
         t = int(state.step)
         self._u_done = t
         self._stages = []
+        # update-boundary aggregation state persists ACROSS run() calls: a
+        # partial K-group rolled past a drain boundary (e.g. by a churn outage)
+        # is carried here and emitted by the run() that completes it, instead
+        # of KeyError-ing the drain-boundary loss grouping
+        self._losses = {}
+        self._taus_by_u = {}
+        self._tau_groups_by_u = {}
         for i in range(self.P):
             extra = dict(state.extra[i])
             rt = extra.pop("rt", None)
@@ -205,20 +246,29 @@ class EventRuntime:
             # newest stash entry, i.e. the live forward point of this worker
             fp = stash_mod.get(state.stashes[i], jnp.asarray(t, jnp.int32), 0,
                                like=state.params[i])
-            st = _StageWorker(i, state.params[i], state.opt[i], extra, fp, t)
+            st = _StageWorker(i, state.params[i], state.opt[i], extra, fp, t,
+                              K=self.K)
+            if rt is not None and "last_tau_group" in rt:
+                st.last_tau_group = tuple(
+                    float(x) for x in np.asarray(rt["last_tau_group"]).reshape(-1))
             st.next_fwd = st.next_bwd = t * self.K
             self._stages.append(st)
         self._build_jits()
         return self
 
     def reset_recorder(self) -> events.TraceRecorder:
-        """Swap in a fresh TraceRecorder (record_trace mode only). Call after a
-        one-tick warmup chunk so compile-inflated first-dispatch samples never
-        reach a saved trace — the calibration invariant every recording caller
-        (launch/train.py, benchmarks/runtime_bench.py) relies on (§10)."""
+        """Discard everything recorded so far as compile warmup (record_trace
+        mode only). Call after a one-tick warmup chunk so compile-inflated
+        first-dispatch samples never reach a saved trace — the calibration
+        invariant every recording caller (launch/train.py,
+        benchmarks/runtime_bench.py) relies on (§10). Microbatch-aware: the
+        recorder keeps its identity and ignores any late sample for a
+        pre-boundary microbatch by INDEX (whole K-groups), so at K > 1 a
+        warmup group's straggling backward cannot leak into the trace
+        (events.TraceRecorder.discard_warmup)."""
         if self.recorder is None:
             raise RuntimeError("reset_recorder requires RuntimeCfg.record_trace")
-        self.recorder = events.TraceRecorder(self.P, self.K)
+        self.recorder.discard_warmup()
         return self.recorder
 
     def export_state(self, include_runtime: bool = True) -> AsyncState:
@@ -240,7 +290,11 @@ class EventRuntime:
             if include_runtime:
                 e["rt"] = {"n_updates": jnp.asarray(st.n_updates, jnp.int32),
                            "max_tau_obs": jnp.asarray(st.max_tau, jnp.float32),
-                           "clock": jnp.asarray(self._clock, jnp.float32)}
+                           "clock": jnp.asarray(self._clock, jnp.float32),
+                           # the last update's K per-microbatch observed delays
+                           # (lossless provenance for the [P, K] dynamic path)
+                           "last_tau_group": jnp.asarray(st.last_tau_group,
+                                                         jnp.float32)}
             extras.append(e)
         return AsyncState(jnp.asarray(self._u_done, jnp.int32), tuple(params),
                           tuple(stashes), tuple(opts), tuple(extras))
@@ -313,8 +367,8 @@ class EventRuntime:
         P, K = self.P, self.K
         self._batch_fn = batch_fn
         self._tick_batches = {}
-        self._losses = {}
-        self._taus_by_u = {}
+        # NOTE: _losses/_taus_by_u/_tau_groups_by_u are NOT reset here — they
+        # carry partial K-groups across run() calls (init_from_state owns them)
         self._timeline = [] if self.rcfg.record_timeline else None
         u0 = self._u_done
         g_end = (u0 + n_ticks) * K
@@ -411,20 +465,27 @@ class EventRuntime:
         lr_host = np.broadcast_to(np.asarray(jax.device_get(
             self.trainer.lr_sched(jnp.arange(u0, u0 + n_ticks))), np.float32),
             (n_ticks,))  # constant() returns a scalar for any t
-        losses, metrics, taus = [], [], []
+        losses, metrics, taus, tau_groups = [], [], [], []
         for u in range(u0, u0 + n_ticks):
+            # pop-on-emit: anything this run() did not complete (a partial
+            # K-group carried past the drain) stays held for the next chunk
             group = [loss_host[g] for g in range(u * K, (u + 1) * K)]
+            for g in range(u * K, (u + 1) * K):
+                self._losses.pop(g, None)
             loss_u = float(np.mean(group))
-            tau_u = tuple(self._taus_by_u[u])
+            tau_u = tuple(self._taus_by_u.pop(u))
+            tau_grp = tuple(self._tau_groups_by_u.pop(u))
             losses.append(loss_u)
             taus.append(tau_u)
+            tau_groups.append(tau_grp)
             metrics.append({"loss": loss_u, "lr": float(lr_host[u - u0]),
-                            "tau_obs": tau_u})
+                            "tau_obs": tau_u, "tau_group": tau_grp})
         span = self._clock - t_start
         util = tuple((st.busy_time - b0) / span if span > 0 else 0.0
                      for st, b0 in zip(self._stages, busy0))
         return RuntimeResult(
-            losses=losses, metrics=metrics, taus=taus, makespan=span,
+            losses=losses, metrics=metrics, taus=taus, tau_groups=tau_groups,
+            makespan=span,
             utilization=util,
             max_stash=tuple(st.max_stash for st in self._stages),
             max_tau_obs=tuple(st.max_tau for st in self._stages),
@@ -472,18 +533,29 @@ class EventRuntime:
                 ready = st.acc_n == self.K
                 grads = (jax.tree.map(lambda a: a * (1.0 / self.K), st.acc)
                          if ready else None)
-            st.acc_tau.append(float(tau_g))
+            st.acc_tau.add(tau_g)
             if ready:
                 u = st.n_updates
-                tau_u = float(np.mean(st.acc_tau))
+                group = st.acc_tau.take()  # the K per-microbatch observed taus
+                st.last_tau_group = group
+                tau_u = float(np.mean(group))
+                # K > 1 feeds the method the WHOLE group ([K] f32): the update
+                # collapses it via its explicit Method.tau_reduce — the same
+                # reduction the engine applies to a [P, K] matrix row, so the
+                # two paths' correction math agrees bit-for-bit. K == 1 keeps
+                # the scalar signature (identical pre-group compiled program).
+                tau_arg = (jnp.asarray(group, jnp.float32) if self.K > 1
+                           else jnp.asarray(tau_u, jnp.float32))
                 np_, no_, ne_, fp_, _aux = self._upd[s](
                     st.params, grads, st.opt, st.extra,
-                    jnp.asarray(tau_u, jnp.float32), jnp.asarray(u, jnp.int32),
+                    tau_arg, jnp.asarray(u, jnp.int32),
                     W_used)
                 st.params, st.opt, st.extra, st.fwd_point = np_, no_, dict(ne_), fp_
                 st.n_updates = u + 1
-                st.acc, st.acc_n, st.acc_tau = None, 0, []
+                st.acc, st.acc_n = None, 0
                 self._taus_by_u.setdefault(u, [0.0] * self.P)[s] = tau_u
+                self._tau_groups_by_u.setdefault(
+                    u, [(0.0,) * self.K] * self.P)[s] = group
             lat = self.dm.latency(s, "bwd", g)
             done = now + lat
             st.busy_until = done
@@ -543,7 +615,8 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
                       in_flight=None, sync: bool = False, seed: int = 0,
                       churn=None) -> dict:
     """Run the runtime's 1F1B event discipline with no tensor math: returns
-    {"makespan", "utilization", "taus" (per-update per-stage observed),
+    {"makespan", "utilization", "taus" (per-update per-stage observed means),
+    "tau_groups" (per-update per-stage length-K per-microbatch groups),
     "max_tau_obs", "max_stash", "outage_time", "mailbox_high_water"}. Same
     capacity, priority, and membership (churn) rules as EventRuntime, so its
     fixed-delay taus equal core/delay.stage_delays and its churn schedules
@@ -575,12 +648,13 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
             self.busy_until = self.busy_time = 0.0
             self.fwd_box, self.bwd_box = events.Mailbox(), events.Mailbox()
             self.stash = set()
-            self.acc_tau = []
+            self.acc_tau = _TauGroup(K)  # same K-group helper as EventRuntime
             self.max_stash, self.max_tau = 0, 0.0
             self.alive, self.left_at, self.outage_time = True, 0.0, 0.0
 
     stages = [_S() for _ in range(P)]
     taus_by_u = {}
+    tau_groups_by_u = {}
     q = events.EventQueue()
     tau_of = {}  # (stage, mb) -> observed tau at forward
     for g in range(g_end):
@@ -600,12 +674,13 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
             st.bwd_box.take(g)
             st.stash.discard(g)
             st.next_bwd += 1
-            st.acc_tau.append(tau_of.pop((s, g)))
-            if len(st.acc_tau) == K:
+            if st.acc_tau.add(tau_of.pop((s, g))):
+                group = st.acc_tau.take()
                 taus_by_u.setdefault(st.n_updates, [0.0] * P)[s] = float(
-                    np.mean(st.acc_tau))
+                    np.mean(group))
+                tau_groups_by_u.setdefault(
+                    st.n_updates, [(0.0,) * K] * P)[s] = group
                 st.n_updates += 1
-                st.acc_tau = []
             lat = dm.latency(s, "bwd", g)
             st.busy_until = now + lat
             st.busy_time += lat
@@ -668,6 +743,7 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
         "utilization": tuple(st.busy_time / makespan if makespan else 0.0
                              for st in stages),
         "taus": [tuple(taus_by_u[u]) for u in range(n_ticks)],
+        "tau_groups": [tuple(tau_groups_by_u[u]) for u in range(n_ticks)],
         "max_tau_obs": tuple(st.max_tau for st in stages),
         "max_stash": tuple(st.max_stash for st in stages),
         "outage_time": tuple(st.outage_time for st in stages),

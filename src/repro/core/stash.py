@@ -7,11 +7,19 @@ buffers shard like the params they stash (leading axis unsharded).
 Dynamic delays: `t` and `tau` may both be traced scalars, so one compiled
 program serves any per-tick tau_t <= depth - 1 — the jit engine's dynamic-tau
 path (`AsyncTrainer.step(..., taus=...)`) indexes the same ring with a live
-delay vector. Size the ring with `depth_for(max_tau)`; a tau larger than
-depth - 1 silently aliases a newer slot, so the depth bound is the caller's
-contract (EngineCfg.max_dynamic_delay).
+delay vector. Size the ring with `depth_for(max_tau)`.
+
+Depth bound: a tau beyond depth - 1 used to silently alias a NEWER slot
+(mod-index wraparound), corrupting the replay with fresher weights than asked
+for. `get`/`get_group` now enforce the bound: a concrete out-of-range tau
+raises at trace time, and a traced one SATURATES to depth - 1 (the oldest
+entry the ring still holds — the conservative direction: never fresher than
+requested). Callers that need exact replay of larger delays must size the
+ring up front (EngineCfg.max_dynamic_delay).
 """
 from __future__ import annotations
+
+import numbers
 
 import jax
 import jax.numpy as jnp
@@ -47,11 +55,50 @@ def push(stash, tree, t):
     return jax.tree.map(upd, stash, tree)
 
 
+def _check_tau(tau, depth: int):
+    """Enforce the ring-depth bound. Concrete taus (python/numpy numbers, or
+    concrete 0-d arrays) are validated host-side — an out-of-range value
+    raises instead of aliasing a newer slot. Traced taus are clamped to
+    [0, depth - 1]: the read saturates at the oldest entry the ring holds
+    (documented degradation, never a silently FRESHER point)."""
+    if isinstance(tau, numbers.Real):
+        if not 0 <= tau <= depth - 1:
+            raise ValueError(
+                f"stash tau {tau} outside ring depth {depth} (valid delays "
+                f"0..{depth - 1}): a larger ring is required to replay this "
+                f"delay exactly (stash.depth_for / EngineCfg.max_dynamic_delay)")
+        return tau
+    return jnp.clip(tau, 0, depth - 1)
+
+
 def get(stash, t, tau: int, like=None):
-    """Read the entry written at tick (t - tau). If like is given, cast to its dtypes."""
+    """Read the entry written at tick (t - tau). If like is given, cast to its
+    dtypes. tau must lie in [0, depth - 1] (see _check_tau)."""
     depth = stash_depth(stash)
-    slot = jnp.mod(t - tau, depth)
+    slot = jnp.mod(t - _check_tau(tau, depth), depth)
     out = jax.tree.map(lambda buf: jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False), stash)
+    if like is not None:
+        out = jax.tree.map(lambda o, l: o.astype(l.dtype), out, like)
+    return out
+
+
+def get_group(stash, t, taus, like=None):
+    """Vectorized per-microbatch read: `taus` is a length-K delay vector (one
+    entry per microbatch of an accumulation group — a row of the engine's
+    [P, K] tau matrix). Returns the stashed entries with a leading [K] axis,
+    entry k being the tick (t - taus[k]) forward point — the K staggered
+    points the per-microbatch stash replay forwards through (Eq. 7 applied
+    per microbatch). Concrete entries are bound-checked like `get`; traced
+    entries saturate at the ring depth."""
+    depth = stash_depth(stash)
+    if isinstance(taus, (tuple, list)):
+        taus = [_check_tau(x, depth) for x in taus]
+    taus_k = jnp.asarray(taus)
+    if taus_k.ndim != 1:
+        raise ValueError(f"get_group taus must be a length-K vector, got "
+                         f"shape {tuple(taus_k.shape)}")
+    slots = jnp.mod(t - _check_tau(taus_k, depth), depth)
+    out = jax.tree.map(lambda buf: jnp.take(buf, slots, axis=0), stash)
     if like is not None:
         out = jax.tree.map(lambda o, l: o.astype(l.dtype), out, like)
     return out

@@ -245,6 +245,11 @@ def sim_schedule_report(n_stages: int, accum: int, ticks: int, models: list,
             "max_tau_obs": list(r["max_tau_obs"]),
             "max_stash": list(r["max_stash"]),
         }
+        if accum > 1:
+            # steady-state per-stage per-microbatch delay groups (last tick):
+            # the [P, K] row the engine's per-microbatch replay consumes —
+            # under fixed delays this equals delay.stage_mb_delays(P, K)
+            rec["steady_tau_groups"] = [list(g) for g in r["tau_groups"][-1]]
         if churn is not None:
             rec["churn"] = churn
             rec["outage_time"] = [round(t, 3) for t in r["outage_time"]]

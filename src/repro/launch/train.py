@@ -96,8 +96,13 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
         if ckpt_dir and ckpt_every and (done % ckpt_every == 0 or at_end):
             ckpt.save_step(ckpt_dir, rt.export_state(), done)
         if log_every and (done % log_every == 0 or at_end):
+            # at K > 1 the per-stage mean is fractional; show the per-microbatch
+            # group (the lossless form the engine's [P, K] dynamic path replays)
+            tau_s = (f"tau_groups={r.tau_groups[-1]}"
+                     if trainer.ecfg.update_interval > 1
+                     else f"tau_obs={r.taus[-1]}")
             log_fn(f"step {done}: loss={res.losses[-1]:.4f} "
-                   f"tau_obs={r.taus[-1]} util={tuple(round(u, 2) for u in r.utilization)}")
+                   f"{tau_s} util={tuple(round(u, 2) for u in r.utilization)}")
     res.wall_s = time.time() - t0
     if record_trace:
         if len(rt.recorder):

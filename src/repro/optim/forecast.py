@@ -65,7 +65,12 @@ def _poly_design(hist: int, tau):
 
 
 def polyfft_predict(state, hist: int, tau: float, fft_weight=0.5):
-    """Forecast grad tau steps ahead from the ring buffer (ordered oldest->newest)."""
+    """Forecast grad tau steps ahead from the ring buffer (ordered oldest->newest).
+
+    tau may be static or traced, and fractional: at K > 1 it is the update's
+    Method.tau_reduce collapse of the K per-microbatch observed delays (the
+    "mean" default is fractional by construction) — the design matrix and FFT
+    phase advance are continuous in tau, so no rounding is involved."""
     t = state["count"]
     w_poly = _poly_design(hist, tau)
 

@@ -32,7 +32,10 @@ def lr_discount_factor(tau_i, t, T: int):
     step(..., taus=...) path), or a traced per-stage vector sourced from
     `RuntimeResult.taus` — the factor broadcasts elementwise. tau_i <= 1 is a
     no-op factor of 1 either way. Which source feeds it is the method's
-    `tau_source` axis (core/methods.py, DESIGN.md §10).
+    `tau_source` axis; at K > 1 the per-update value is the Method.tau_reduce
+    collapse of the K per-microbatch delays (fractional under "mean") — both
+    execution paths reduce the SAME group, so the factor agrees bit-for-bit
+    (core/methods.py, DESIGN.md §10).
     """
     tau = jnp.maximum(jnp.asarray(tau_i, jnp.float32), 1.0)
     tf = t.astype(jnp.float32) if hasattr(t, "astype") else jnp.asarray(t, jnp.float32)
@@ -58,7 +61,9 @@ def delay_momentum(tau, P: int, K: int = 1, lo=0.9, hi=0.99):
     outage inflates the observed tau — more smoothing exactly when gradients
     are more stale. `tau` may be a python number (folds at trace time), a
     traced scalar (live runtime feedback), or a traced per-stage vector
-    (step(..., taus=...)); the result broadcasts accordingly.
+    (step(..., taus=...)); the result broadcasts accordingly. At K > 1 the
+    scalar fed here is the Method.tau_reduce collapse of the update's K
+    per-microbatch observed delays (core/methods.py).
     """
     frac = jnp.clip(jnp.asarray(tau, jnp.float32) * (K / P), 0.0, 1.0)
     return lo + (hi - lo) * frac

@@ -105,3 +105,118 @@ def test_stash_dtype_cast():
     assert jax.tree.leaves(buf)[0].dtype == jnp.bfloat16
     out = stash.get(buf, jnp.asarray(0), 0, like=tree)
     assert jax.tree.leaves(out)[0].dtype == jnp.float32
+
+
+# ---- per-microbatch schedule (stage_mb_delays) -------------------------------
+
+
+def test_stage_mb_delays_known_values():
+    # P=4, K=2: mb 0 of each group is staler than Eq. 5's scalar; mb K-1 IS it
+    assert delay.stage_mb_delays(4, 2) == ((2, 1), (1, 1), (1, 0), (0, 0))
+    assert delay.stage_mb_delays(4, 1) == ((3,), (2,), (1,), (0,))
+    assert delay.max_mb_delay(4, 2) == 2
+    assert delay.max_mb_delay(8, 3) == 3  # ceil(7/3) > floor(15/6) = 2
+
+
+@given(P=st.integers(1, 32), K=st.integers(1, 8))
+def test_stage_mb_delay_group_properties(P, K):
+    mb = delay.stage_mb_delays(P, K)
+    taus = delay.stage_delays(P, K)
+    assert len(mb) == P and all(len(row) == K for row in mb)
+    for i, row in enumerate(mb, start=1):
+        # Eq. 5's scalar is exactly the LAST microbatch of the group
+        assert row[-1] == delay.stage_delay(i, P, K) == taus[i - 1]
+        # within a group staleness is monotone non-increasing in k
+        assert all(row[k] >= row[k + 1] for k in range(K - 1))
+        # closed form == ceil((P - i - k)/K) clamped at 0
+        assert all(row[k] == max(-((i + k - P) // K), 0) for k in range(K))
+    # across stages: earlier stages are staler, per microbatch position
+    for k in range(K):
+        col = [row[k] for row in mb]
+        assert all(col[s] >= col[s + 1] for s in range(P - 1))
+    # the group maximum is the ring-depth bound
+    assert delay.max_mb_delay(P, K) == mb[0][0] == max(max(r) for r in mb)
+
+
+# ---- stash depth-bound enforcement (oversized-tau regression) ----------------
+
+
+def test_stash_get_oversized_tau_raises():
+    """Regression (ISSUE 6 satellite): an out-of-range concrete tau used to
+    silently alias a NEWER ring slot via mod wraparound; it must raise."""
+    tree = {"w": jnp.arange(3.0)}
+    buf = stash.init_stash(tree, 3)
+    for t in range(1, 5):
+        buf = stash.push(buf, jax.tree.map(lambda x: x + 10.0 * t, tree), t)
+    with pytest.raises(ValueError, match="outside ring depth"):
+        stash.get(buf, jnp.asarray(4), 3)  # depth 3: valid delays are 0..2
+    with pytest.raises(ValueError, match="outside ring depth"):
+        stash.get(buf, jnp.asarray(4), -1)
+    with pytest.raises(ValueError, match="outside ring depth"):
+        stash.get_group(buf, jnp.asarray(4), [0, 3])
+
+
+def test_stash_get_traced_oversized_tau_saturates():
+    """A TRACED oversized tau cannot raise at trace time; it saturates at the
+    oldest entry (depth - 1) instead of wrapping around to a fresher slot."""
+    tree = {"w": jnp.arange(3.0)}
+    buf = stash.init_stash(tree, 3)
+    for t in range(1, 5):
+        buf = stash.push(buf, jax.tree.map(lambda x: x + 10.0 * t, tree), t)
+
+    get = jax.jit(lambda b, t, tau: stash.get(b, t, tau))
+    oldest = get(buf, jnp.asarray(4), jnp.asarray(2))
+    sat = get(buf, jnp.asarray(4), jnp.asarray(5))  # 5 > depth-1: saturate
+    for a, b in zip(jax.tree.leaves(sat), jax.tree.leaves(oldest)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the pre-fix behaviour read slot (4 - 5) mod 3 == slot 2 == the NEWEST
+    # entry (pushed at t=4); saturation must not return that fresher point
+    newest = get(buf, jnp.asarray(4), jnp.asarray(0))
+    assert not np.allclose(np.asarray(jax.tree.leaves(sat)[0]),
+                           np.asarray(jax.tree.leaves(newest)[0]))
+
+
+def test_stash_get_group_matches_stacked_gets():
+    """get_group(t, [tau_0..tau_{K-1}]) == stack of get(t, tau_k): one
+    vectorized ring read per stage serves the whole accumulation group."""
+    tree = {"w": jnp.arange(3.0), "b": {"x": jnp.ones((2, 2))}}
+    depth = 4
+    buf = stash.init_stash(tree, depth)
+    for t in range(1, 7):
+        buf = stash.push(buf, jax.tree.map(lambda x: x + 10.0 * t, tree), t)
+    taus = [3, 1, 0, 2]
+    grp = stash.get_group(buf, jnp.asarray(6), taus)
+    for k, tau in enumerate(taus):
+        one = stash.get(buf, jnp.asarray(6), tau)
+        for a, b in zip(jax.tree.leaves(jax.tree.map(lambda x: x[k], grp)),
+                        jax.tree.leaves(one)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # like= casts every microbatch row
+    grp16 = stash.get_group(buf, jnp.asarray(6), taus,
+                            like=jax.tree.map(lambda x: x.astype(jnp.bfloat16), tree))
+    assert all(x.dtype == jnp.bfloat16 for x in jax.tree.leaves(grp16))
+    with pytest.raises(ValueError, match="length-K vector"):
+        stash.get_group(buf, jnp.asarray(6), jnp.zeros((2, 2), jnp.int32))
+
+
+# ---- dynamic-tau validation: [P] vector and [P, K] matrix forms --------------
+
+
+def test_validate_dynamic_taus_matrix_forms():
+    # vector form: scalar entries pass through
+    rows = delay.validate_dynamic_taus([3, 2, 1, 0], 4)
+    assert rows == [3, 2, 1, 0]
+    # matrix form: per-stage K-rows (nested sequences and arrays both work)
+    rows = delay.validate_dynamic_taus(((2, 1), (1, 1), (1, 0), (0, 0)), 4, K=2)
+    assert [tuple(r) for r in rows] == [(2, 1), (1, 1), (1, 0), (0, 0)]
+    arr = jnp.asarray([[2, 1], [1, 1], [1, 0], [0, 0]], jnp.int32)
+    rows = delay.validate_dynamic_taus(arr, 4, K=2)
+    assert all(r.shape == (2,) for r in rows)
+    with pytest.raises(ValueError, match="length-4"):
+        delay.validate_dynamic_taus(jnp.zeros((3, 2), jnp.int32), 4, K=2)
+    with pytest.raises(ValueError, match="rectangular"):
+        delay.validate_dynamic_taus(((2, 1), (1,), (1, 0), (0, 0)), 4, K=2)
+    with pytest.raises(ValueError, match="one column per"):
+        delay.validate_dynamic_taus(jnp.zeros((4, 3), jnp.int32), 4, K=2)
+    with pytest.raises(ValueError, match="scalar"):
+        delay.validate_dynamic_taus(3, 4)
