@@ -32,6 +32,7 @@ from repro.kernels import dispatch as kdispatch
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.nag_update import nag_update
+from repro.kernels.paged_attention import paged_attn_decode, paged_attn_decode_ref
 from repro.kernels.rmsnorm_residual import rmsnorm_residual, rmsnorm_residual_ref
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -109,6 +110,22 @@ def micro_rows():
     gk, gr = _grad_pair("nag_update", (p, m, v2, g), dict(**kw, block=1024))
     rows.append(("kernel/nag_update/bwd", round(timeit(gk, p, m, v2, g), 1),
                  f"ref_us={timeit(gr, p, m, v2, g):.1f};fallback=ref_vjp"))
+
+    # paged decode attention (serving path): inference-only, fwd row only
+    Bp, Hp, Hkvp, dp, PS, NP, MAXP = 4, 4, 2, 64, 16, 64, 8
+    qd = jax.random.normal(key, (Bp, Hp, dp))
+    kp = jax.random.normal(jax.random.fold_in(key, 10), (NP, PS, Hkvp, dp))
+    vp = jax.random.normal(jax.random.fold_in(key, 11), (NP, PS, Hkvp, dp))
+    pt = jax.random.permutation(
+        jax.random.fold_in(key, 12), NP)[:Bp * MAXP].reshape(Bp, MAXP)
+    lens = jax.random.randint(jax.random.fold_in(key, 13), (Bp,), 1, MAXP * PS)
+    pk = jax.jit(lambda *a_: paged_attn_decode(*a_, interpret=True))
+    pr = jax.jit(paged_attn_decode_ref)
+    err = float(jnp.max(jnp.abs(pk(qd, kp, vp, pt, lens) -
+                                pr(qd, kp, vp, pt, lens))))
+    rows.append(("kernel/paged_attn_decode/fwd",
+                 round(timeit(pk, qd, kp, vp, pt, lens), 1),
+                 f"ref_us={timeit(pr, qd, kp, vp, pt, lens):.1f};maxerr={err:.1e}"))
 
     x = jax.random.normal(key, (8, 128, 256))
     h = jax.random.normal(jax.random.fold_in(key, 8), (8, 128, 256))

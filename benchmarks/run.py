@@ -29,11 +29,14 @@ def main() -> None:
     import fig7_discount_ablation
     import fig8_swarm
     import roofline_report
+    import serve_bench
 
     print("# === kernels (interpret mode) ===")
     kernel_bench.main()
     print("# === runtime: event-driven vs jit engine ===")
     runtime_bench.main(steps=max(20, steps // 4))
+    print("# === serving: continuous batching under Poisson load ===")
+    serve_bench.main(requests=8 if args.quick else 16)
     print("# === Table 1: methods ===")
     table1_methods.main(steps=steps)
     print("# === Fig 4: delay-correction mechanisms ===")

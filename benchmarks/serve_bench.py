@@ -1,0 +1,101 @@
+"""`serve` rows: continuous-batching service under Poisson load.
+
+Drives a keyed Poisson request trace (core/events.poisson_trace) through the
+ServeEngine (launch/serve.py) on the reduced model and reports service-level
+objectives: throughput (total + steady-state, excluding the compile-paying
+first step), time-to-first-token and per-output-token latency at p50/p99.
+The same trace is also replayed through the compute-free twin
+(core/runtime.simulate_serve_schedule) so scheduling effects (admission
+queueing, page pressure) are separable from compute cost.
+
+Every run writes ``artifacts/BENCH_serve.json`` (schema: docs/cli.md) so the
+serving trajectory is tracked across PRs. CPU wall-times are call-overhead
+tracking, not accelerator perf — same caveat as kernel_bench.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from common import emit_csv, save_json
+from repro.configs import get_config
+from repro.core import events
+from repro.core.runtime import simulate_serve_schedule
+from repro.launch import serve
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def main(requests=12, rate=8.0, seed=0, arch="nanogpt_134m",
+         prompt_lens=(4, 16), gen_lens=(2, 8), n_slots=4, page_size=4,
+         n_pages=32, temperature=0.0):
+    cfg = get_config(arch, reduced=True)
+    params = serve.make_demo_inputs(cfg, seed, 1, 1)[0]
+    scfg = serve.ServeCfg(n_slots=n_slots, page_size=page_size,
+                          n_pages=n_pages,
+                          max_pages_per_seq=-(-max(prompt_lens[1] + gen_lens[1],
+                                                   page_size) // page_size),
+                          temperature=temperature, seed=seed)
+    trace = events.poisson_trace(requests, rate=rate, seed=seed,
+                                 prompt_lens=prompt_lens, gen_lens=gen_lens)
+    out = serve.ServeEngine(params, cfg, scfg).run(trace)
+
+    ttft = [r["ttft_s"] for r in out["results"].values()]
+    tpot = [r["tpot_s"] for r in out["results"].values()]
+    sim = simulate_serve_schedule(trace, n_slots=n_slots, page_size=page_size,
+                                  n_pages=n_pages)
+    rows = [
+        ("serve/steady_tok_s", round(out["steady_tok_s"], 1),
+         f"total_tok_s={out['tok_s']:.1f};requests={requests};rate={rate}"),
+        ("serve/ttft_us/p50", round(_pct(ttft, 50) * 1e6, 1),
+         f"p99_us={_pct(ttft, 99) * 1e6:.1f}"),
+        ("serve/tpot_us/p50", round(_pct(tpot, 50) * 1e6, 1),
+         f"p99_us={_pct(tpot, 99) * 1e6:.1f}"),
+        ("serve/pages_high_water", out["pages"]["high_water"],
+         f"total={out['pages']['total']}"),
+        ("serve/sim_twin_tok_s", round(sim["tok_s"], 1),
+         f"decode_util={sim['utilization']['decode']:.2f};"
+         f"peak_pages={sim['peak_pages']}"),
+    ]
+    emit_csv(rows)
+    save_json("BENCH_serve.json", {
+        "meta": {"platform": jax.default_backend(), "jax": jax.__version__,
+                 "arch": arch, "requests": requests, "rate": rate,
+                 "seed": seed, "prompt_lens": list(prompt_lens),
+                 "gen_lens": list(gen_lens), "n_slots": n_slots,
+                 "page_size": page_size, "n_pages": n_pages,
+                 "temperature": temperature},
+        "service": {
+            "tok_s": out["tok_s"],
+            "steady_tok_s": out["steady_tok_s"],
+            "makespan_s": out["makespan_s"],
+            "gen_tokens": out["gen_tokens"],
+            "decode_steps": out["decode_steps"],
+            "ttft_s": {"p50": _pct(ttft, 50), "p99": _pct(ttft, 99),
+                       "max": float(max(ttft))},
+            "tpot_s": {"p50": _pct(tpot, 50), "p99": _pct(tpot, 99),
+                       "max": float(max(tpot))},
+            "pages": out["pages"],
+        },
+        "sim_twin": {k: sim[k] for k in
+                     ("makespan", "tok_s", "utilization", "peak_pages",
+                      "queue_high_water")} | {
+            "ttft_p50": _pct(sim["ttft"], 50),
+            "ttft_p99": _pct(sim["ttft"], 99)},
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    main(requests=args.requests, rate=args.rate, seed=args.seed,
+         n_slots=args.slots)

@@ -71,6 +71,20 @@ class EventQueue:
             out.append(heapq.heappop(self._heap)[2])
         return out
 
+    def next_time(self) -> Optional[float]:
+        """Earliest queued timestamp, or None when empty (serving admission
+        uses this to fast-forward an idle engine to the next arrival)."""
+        return self._heap[0][0] if self._heap else None
+
+    def pop_until(self, t: float) -> list:
+        """Pop every event with time <= t, in (time, insertion) order — the
+        wall-clock-driven form of pop_batch used by the serving engine, which
+        advances on real time rather than on simulated op completions."""
+        out = []
+        while self._heap and self._heap[0][0] <= t:
+            out.append(heapq.heappop(self._heap)[2])
+        return out
+
     def only_membership(self) -> bool:
         """True when every queued event is a leave/join — no work left for the
         churn to affect. The runtime uses this to stop a drained run instead of
@@ -473,3 +487,62 @@ def make_delay_model(spec: str | DelayModel | None, seed: int = 0) -> DelayModel
     if name == "trace":
         return TraceDelay.from_json(args)
     raise ValueError(f"unknown delay model spec {spec!r}")
+
+
+# ---------------------------------------------------------------------------
+# Serving traffic: requests as microbatch events (launch/serve.py)
+# ---------------------------------------------------------------------------
+#
+# A serving request is the inference-side analogue of a training microbatch:
+# it enters the pipeline as an event, is admitted under the same in-flight-cap
+# discipline 1F1B uses for microbatches (the decode-slot count is the cap), and
+# its KV pages are the stash-ring memory it occupies while in flight. The trace
+# generator below is keyed per request id — like DelayModel._rng, draws are
+# independent of simulation order, so a (seed, rate, dists) tuple always yields
+# the identical trace (tests/test_serve.py).
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One inference request in a traffic trace (times in seconds)."""
+
+    rid: int
+    arrival: float
+    prompt_len: int
+    gen_len: int
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.gen_len
+
+
+def _serve_rng(seed: int, rid: int, field: int) -> np.random.Generator:
+    word = (1 << 48) | (field << 40) | (rid & 0xFFFFFFFF)
+    return np.random.Generator(np.random.Philox(
+        key=np.array([seed & 0xFFFFFFFFFFFFFFFF, word], dtype=np.uint64)))
+
+
+def poisson_trace(n_requests: int, *, rate: float = 1.0, seed: int = 0,
+                  prompt_lens: Sequence[int] = (4, 16),
+                  gen_lens: Sequence[int] = (2, 8)) -> tuple:
+    """Poisson-arrival traffic: n requests, exp(rate) inter-arrival gaps,
+    prompt/gen lengths uniform over [lo, hi] inclusive.
+
+    Deterministic under (seed, rate, dists): every draw is keyed by request id,
+    never by generator state, so traces are reproducible and order-independent.
+    """
+    if n_requests < 0:
+        raise ValueError(f"n_requests must be >= 0, got {n_requests}")
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    for name, (lo, hi) in (("prompt_lens", tuple(prompt_lens)),
+                           ("gen_lens", tuple(gen_lens))):
+        if lo < 1 or hi < lo:
+            raise ValueError(f"{name} must satisfy 1 <= lo <= hi, got {(lo, hi)}")
+    reqs, t = [], 0.0
+    for rid in range(n_requests):
+        t += float(_serve_rng(seed, rid, 0).exponential(1.0 / rate))
+        pl = int(_serve_rng(seed, rid, 1).integers(prompt_lens[0], prompt_lens[1] + 1))
+        gl = int(_serve_rng(seed, rid, 2).integers(gen_lens[0], gen_lens[1] + 1))
+        reqs.append(Request(rid=rid, arrival=t, prompt_len=pl, gen_len=gl))
+    return tuple(reqs)

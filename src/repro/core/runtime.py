@@ -750,3 +750,113 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
         "mailbox_high_water": tuple(
             (st.fwd_box.high_water, st.bwd_box.high_water) for st in stages),
     }
+
+
+def simulate_serve_schedule(requests, *, n_slots: int = 4, page_size: int = 8,
+                            n_pages: int = 64, prefill_tok_s: float = 4096.0,
+                            decode_step_s: float = 0.02) -> dict:
+    """Compute-free twin of launch/serve.ServeEngine: dry-run a traffic trace.
+
+    Prefill and decode are modelled as two disaggregated pipeline roles on one
+    event clock — requests (events.Request) enter as microbatch events, the
+    prefill worker serves FIFO one prompt at a time (latency prompt_len /
+    prefill_tok_s), and the decode worker advances all admitted sequences one
+    token per decode_step_s. Admission is the serving in-flight cap: a request
+    starts prefill only when a decode slot AND enough free KV pages exist;
+    pages return to the pool at retirement. Same discipline as the real engine
+    (slots, page reservation, FIFO), so relative numbers — queueing delay,
+    page high-water, role utilization — transfer without compiling a model.
+
+    Returns {"makespan", "tok_s", "ttft" (sorted per-request seconds), "tpot"
+    (per-request s/token), "utilization" {prefill, decode}, "peak_pages",
+    "queue_high_water", "n_requests"}.
+    """
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+
+    def pages_for(r):
+        return -(-(r.prompt_len + r.gen_len) // page_size)
+
+    for r in reqs:
+        if r.prompt_len < 1 or r.gen_len < 1:
+            raise ValueError(f"request {r.rid}: prompt_len/gen_len must be >= 1")
+        if pages_for(r) > n_pages:
+            raise ValueError(f"request {r.rid} needs {pages_for(r)} pages "
+                             f"> pool n_pages={n_pages}")
+
+    q = events.EventQueue()
+    for r in reqs:
+        q.push(r.arrival, "arrive", 0, r.rid, payload=r)
+    waiting: list = []
+    active: dict = {}      # rid -> Request
+    emitted: dict = {}     # rid -> tokens produced so far
+    held_pages: dict = {}  # rid -> pages reserved
+    free_slots, free_pages = n_slots, n_pages
+    peak_pages = queue_high_water = 0
+    prefill_free_t = prefill_busy = decode_busy = 0.0
+    step_scheduled = False
+    ttft, t_first, done_t = {}, {}, {}
+    now = 0.0
+
+    def retire(rid, t):
+        nonlocal free_slots, free_pages
+        free_slots += 1
+        free_pages += held_pages.pop(rid)
+        done_t[rid] = t
+
+    while q:
+        evs = q.pop_batch()
+        now = evs[0].time
+        for ev in evs:
+            if ev.kind == "arrive":
+                waiting.append(ev.payload)
+            elif ev.kind == "prefill_done":
+                r = ev.payload
+                ttft[r.rid] = now - r.arrival
+                t_first[r.rid] = now
+                emitted[r.rid] = 1  # first token comes out of prefill logits
+                if r.gen_len <= 1:
+                    retire(r.rid, now)
+                else:
+                    active[r.rid] = r
+            elif ev.kind == "step":
+                step_scheduled = False
+                if active:
+                    decode_busy += decode_step_s
+                    for rid in list(active):
+                        emitted[rid] += 1
+                        if emitted[rid] >= active[rid].gen_len:
+                            del active[rid]
+                            retire(rid, now)
+        queue_high_water = max(queue_high_water, len(waiting))
+        while waiting and free_slots > 0 and free_pages >= pages_for(waiting[0]):
+            r = waiting.pop(0)
+            free_slots -= 1
+            free_pages -= pages_for(r)
+            held_pages[r.rid] = pages_for(r)
+            peak_pages = max(peak_pages, n_pages - free_pages)
+            start = max(now, prefill_free_t)
+            lat = max(r.prompt_len / prefill_tok_s, events.MIN_LATENCY)
+            prefill_free_t = start + lat
+            prefill_busy += lat
+            q.push(prefill_free_t, "prefill_done", 0, r.rid, payload=r)
+        if active and not step_scheduled:
+            q.push(now + decode_step_s, "step", 1)
+            step_scheduled = True
+
+    makespan = max(done_t.values(), default=0.0)
+    total_tokens = sum(emitted.values())
+    tpot = {r.rid: (done_t[r.rid] - t_first[r.rid]) / max(r.gen_len - 1, 1)
+            for r in reqs}
+    return {
+        "makespan": makespan,
+        "tok_s": total_tokens / makespan if makespan > 0 else 0.0,
+        "ttft": sorted(ttft.values()),
+        "tpot": [tpot[r.rid] for r in reqs],
+        "utilization": {
+            "prefill": prefill_busy / makespan if makespan else 0.0,
+            "decode": decode_busy / makespan if makespan else 0.0,
+        },
+        "peak_pages": peak_pages,
+        "queue_high_water": queue_high_water,
+        "n_requests": len(reqs),
+    }

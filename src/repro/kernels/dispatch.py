@@ -50,6 +50,8 @@ from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import (flash_attention as _flash_attention,
                                            flash_attention_bwd as _flash_attention_bwd)
 from repro.kernels.nag_update import nag_update as _nag_update
+from repro.kernels.paged_attention import (paged_attn_decode as _paged_attn_decode,
+                                           paged_attn_decode_ref as _paged_attn_decode_ref)
 from repro.kernels.rmsnorm_residual import (rmsnorm_residual as _rmsnorm_residual,
                                             rmsnorm_residual_bwd as _rmsnorm_residual_bwd)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan, ssd_scan_bwd as _ssd_scan_bwd
@@ -350,6 +352,35 @@ def _rms_case(shape, block_rows=8):
         return (x, h, scale), dict(block_rows=block_rows)
     return make
 
+
+def _paged_case(B, H, Hkv, d, PS, n_pages, maxp, **kw):
+    def make(key, dtype):
+        q = jax.random.normal(key, (B, H, d)).astype(dtype)
+        kp = jax.random.normal(jax.random.fold_in(key, 1),
+                               (n_pages, PS, Hkv, d)).astype(dtype)
+        vp = jax.random.normal(jax.random.fold_in(key, 2),
+                               (n_pages, PS, Hkv, d)).astype(dtype)
+        # non-contiguous page chains: a random permutation of the pool, so the
+        # kernel's table-chased gathers are exercised, not an identity layout
+        pt = jax.random.permutation(jax.random.fold_in(key, 3),
+                                    n_pages)[:B * maxp].reshape(B, maxp)
+        ln = jax.random.randint(jax.random.fold_in(key, 4), (B,), 1, maxp * PS + 1)
+        return (q, kp, vp, pt.astype(jnp.int32), ln.astype(jnp.int32)), dict(**kw)
+    return make
+
+
+register(
+    # serving decode read (launch/serve.py): one query token per sequence
+    # against a paged KV pool. Inference-only — no dedicated backward; the
+    # ref-VJP fallback covers dispatch_grad should anyone differentiate it.
+    "paged_attn_decode", pallas=_paged_attn_decode, ref=_paged_attn_decode_ref,
+    cases=(
+        ParityCase("gqa_ragged_lengths", _paged_case(3, 4, 2, 32, 8, 16, 4)),
+        ParityCase("mha_two_pages", _paged_case(2, 2, 2, 16, 16, 8, 2)),
+        ParityCase("window_softcap", _paged_case(2, 4, 4, 16, 8, 12, 3,
+                                                 window=5, softcap=20.0)),
+        ParityCase("single_token", _paged_case(1, 2, 1, 32, 4, 4, 1)),
+    ))
 
 register(
     "flash_attention", pallas=_flash_attention, ref=_attention_ref,

@@ -1,0 +1,165 @@
+"""Paged-attention decode kernel: flash decode over a fixed-size KV page pool.
+
+The serving path (launch/serve.py) keeps each sequence's KV cache as a chain of
+fixed-size pages inside one shared pool, so sequences of wildly different
+lengths share memory and pages freed at retirement are recycled (the stash.py
+ring discipline, applied to serving). This op is the read side: one decode step
+of grouped causal attention where the keys/values are gathered *by the kernel*
+through a page table instead of living contiguously.
+
+Shapes (one query token per sequence — decode):
+
+  q          [B, H, d]              current-step queries
+  k_pages    [n_pages, PS, Hkv, d]  shared key pool (PS = page size)
+  v_pages    [n_pages, PS, Hkv, d]  shared value pool
+  page_table [B, MAXP] int32        page ids per sequence, in order; unused
+                                    entries MUST hold a valid pool index (0 is
+                                    fine) — masking, not the table, bounds reads
+  lengths    [B] int32              tokens live in the cache per sequence,
+                                    INCLUDING the current step's token
+
+Returns [B, H, d] in q.dtype.
+
+The Pallas kernel runs grid (B, Hkv, MAXP) with the page axis last (sequential
+on TPU), streaming one page per step through an online-softmax accumulator in
+VMEM — the flash_attention.py discipline. The page table and lengths ride in as
+scalar-prefetch operands so the k/v BlockSpec index_map can chase
+``page_table[b, j]`` while the next block's DMA is being issued.
+
+Masking: key position ``j*PS + t`` is live iff ``< lengths[b]``; with a sliding
+window also ``> lengths[b] - 1 - window`` (identical semantics to
+layers._mask_bias with q_pos = lengths-1). Fully-masked rows (inactive lanes)
+degrade to a uniform average of pool garbage — finite, and ignored by callers.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def paged_attn_decode_ref(q, k_pages, v_pages, page_table, lengths, *,
+                          scale: Optional[float] = None,
+                          window: Optional[int] = None,
+                          softcap: Optional[float] = None):
+    """Pure-jnp oracle: gather the pages densely, mask by length, attend."""
+    B, H, d = q.shape
+    n_pages, PS, Hkv, _ = k_pages.shape
+    MAXP = page_table.shape[1]
+    G = H // Hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    L = MAXP * PS
+    k = k_pages[page_table].reshape(B, L, Hkv, d)  # [B, MAXP, PS, Hkv, d] ->
+    v = v_pages[page_table].reshape(B, L, Hkv, d)
+    qg = q.reshape(B, Hkv, G, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,blhd->bhgl", qg, k.astype(jnp.float32)) * sc
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(L)[None, :]
+    ok = pos < lengths[:, None]
+    if window is not None:
+        ok &= pos > (lengths[:, None] - 1 - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    # manual softmax so fully-masked rows match the kernel (uniform, not NaN)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(l, 1e-30)
+    out = jnp.einsum("bhgl,blhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, d).astype(q.dtype)
+
+
+def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale, window, softcap,
+                   page_size, n_pages_grid):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)        # [G, d]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [PS, d]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # [PS, d]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [G, PS]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    L = len_ref[b]
+    kpos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    ok = kpos < L
+    if window is not None:
+        ok &= kpos > L - 1 - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                         # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                      # [G, PS]
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages_grid - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attn_decode(q, k_pages, v_pages, page_table, lengths, *,
+                      scale: Optional[float] = None,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      interpret: Optional[bool] = None):
+    """Pallas paged decode attention (see module docstring for the contract)."""
+    B, H, d = q.shape
+    n_pages, PS, Hkv, dk = k_pages.shape
+    MAXP = page_table.shape[1]
+    if H % Hkv != 0:
+        raise ValueError(f"H={H} not a multiple of Hkv={Hkv}")
+    if dk != d or v_pages.shape != k_pages.shape:
+        raise ValueError("q/k_pages/v_pages head-dim or pool-shape mismatch")
+    if page_table.shape[0] != B or lengths.shape != (B,):
+        raise ValueError("page_table/lengths batch mismatch")
+    G = H // Hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    if interpret is None:
+        interpret = jax.devices()[0].platform == "cpu"
+
+    q4 = q.reshape(B, Hkv, G, d)
+    kernel = functools.partial(
+        _decode_kernel, scale=sc, window=window, softcap=softcap,
+        page_size=PS, n_pages_grid=MAXP)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, MAXP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, PS, 1, d), lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, PS, 1, d), lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), q4, k_pages, v_pages)
+    return out.reshape(B, H, d)

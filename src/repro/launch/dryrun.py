@@ -282,7 +282,34 @@ def main():
     ap.add_argument("--sim-churn", default=None,
                     help="leave/join windows STAGE,START,DURATION[/...] applied "
                          "to every --sim-models cell (see core/events.ChurnModel)")
+    ap.add_argument("--sim-serve", default=None, metavar="N,RATE",
+                    help="compute-free serving dry-run: N Poisson requests at "
+                         "RATE req/s through runtime.simulate_serve_schedule "
+                         "(slots/pages from --serve-slots/--serve-pages)")
+    ap.add_argument("--serve-slots", type=int, default=4)
+    ap.add_argument("--serve-pages", type=int, default=64)
+    ap.add_argument("--serve-page-size", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.sim_serve:
+        from repro.core.events import poisson_trace
+        from repro.core.runtime import simulate_serve_schedule
+
+        n, rate = args.sim_serve.split(",")
+        trace = poisson_trace(int(n), rate=float(rate), seed=args.seed)
+        r = simulate_serve_schedule(trace, n_slots=args.serve_slots,
+                                    page_size=args.serve_page_size,
+                                    n_pages=args.serve_pages)
+        ttft = r.pop("ttft")
+        r["ttft_p50"] = round(ttft[len(ttft) // 2], 4) if ttft else None
+        r["ttft_p99"] = round(ttft[max(len(ttft) * 99 // 100 - 1, 0)], 4) if ttft else None
+        r.pop("tpot")
+        print(json.dumps(r, default=float), flush=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(r, f, indent=1, default=float)
+        return
 
     if args.sim_schedule:
         recs = sim_schedule_report(args.n_stages, args.accum or 1, args.sim_ticks,

@@ -1,23 +1,51 @@
-"""Serving launcher: batched prefill + decode loop with a KV/SSD cache.
+"""Serving launcher: continuously-batched inference on the event runtime.
+
+Two entry points:
+
+- ``generate`` — the original uniform-batch path: one prefill, then a dense
+  lock-step decode loop (every sequence the same length). Kept as the
+  equivalence oracle for the engine below and for quick smoke runs.
+- ``ServeEngine`` — a continuously-batched service: requests (core/events.py
+  ``Request``) arrive on an event queue, are admitted into one of ``n_slots``
+  decode lanes when a lane AND enough KV pages are free (the in-flight-cap
+  admission discipline of the training runtime, applied to inference), prefill
+  one at a time (ragged prompts, right-padded to a page-aligned bucket), then
+  join the shared decode batch at the next step. Finished sequences retire at
+  any step and their pages return to the ``PagePool`` free list for reuse —
+  the stash.py ring discipline applied to serving memory.
+
+  KV lives in fixed-size pages (``lm.init_paged_caches``) read by the
+  ``paged_attn_decode`` dispatch op; SSD (mamba2) state is per-lane. Archs with
+  SSD blocks prefill at exact prompt length (right-padding would corrupt the
+  recurrent state); attention-only archs prefill in page-aligned buckets, which
+  is exact under the causal mask.
+
+Quickstart:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --batch 4 --prompt-len 32 --gen 16
 
-The decode jit donates the cache argument (``donate_argnums``): the per-layer
-KV/SSD buffers are updated in place instead of being re-allocated every
-generated token, which is what keeps steady-state decode allocation-free. The
-launcher reports steady-state tok/s separately from the compile-inclusive
-first-token figure.
+  # continuous batching under Poisson traffic (the load generator)
+  PYTHONPATH=src python -m repro.launch.serve --arch nanogpt-134m --reduced \
+      --engine --requests 16 --rate 8.0 --gen 4,8
+
+The decode jit donates the cache argument (``donate_argnums``): the page pools
+are updated in place instead of re-allocated every step, which keeps
+steady-state decode allocation-free. Flag grammar: docs/cli.md.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
+from repro.core import events
 from repro.models import lm
 
 
@@ -26,6 +54,10 @@ def generate(params, cfg, prompt_tokens, gen_len, *, temperature=0.0, key=None,
     """Greedy / temperature decoding. Returns tokens [B, gen_len]; with
     ``return_stats=True`` returns (tokens, stats) where stats separates
     compile-inclusive prefill+first-step time from steady-state decode."""
+    if temperature > 0 and key is None:
+        raise ValueError(
+            "generate(temperature>0) samples and needs a PRNG key: pass "
+            "key=jax.random.PRNGKey(seed) (the CLI derives one from --seed)")
     B, S = prompt_tokens.shape
     max_len = S + gen_len
     batch = {"tokens": prompt_tokens}
@@ -69,25 +101,366 @@ def generate(params, cfg, prompt_tokens, gen_len, *, temperature=0.0, key=None,
     return out, stats
 
 
-def main():
-    ap = argparse.ArgumentParser()
+# ---------------------------------------------------------------------------
+# Page pool: the serving-side stash ring
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Free-list allocator over the shared KV page pool.
+
+    LIFO reuse (freshly-freed pages are handed out first) makes recycling
+    observable: ``high_water`` is the peak number of simultaneously-live pages,
+    asserted by tests/test_serve.py to prove retirement actually recycles."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, -1, -1))  # pop() yields 0, 1, ...
+        self.high_water = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[list]:
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self.high_water = max(self.high_water, self.in_use)
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            if not 0 <= i < self.n_pages or i in self._free:
+                raise ValueError(f"double/invalid free of page {i}")
+        self._free.extend(reversed(list(ids)))  # LIFO: reuse newest-freed first
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeCfg:
+    """Engine knobs. n_slots is the decode in-flight cap (admission control);
+    max_pages_per_seq is the page-table width — the serving analogue of the
+    stash ring depth bound (requests that would overflow it are rejected at
+    submit with a sizing hint, mirroring stash._check_tau)."""
+
+    n_slots: int = 4
+    page_size: int = 8
+    n_pages: int = 64
+    max_pages_per_seq: int = 8
+    prefill_bucket: int = 0  # pad prompts up to a multiple of this (0: one page)
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class ServeEngine:
+    """Continuously-batched serving over the paged caches (module docstring)."""
+
+    def __init__(self, params, cfg, scfg: ServeCfg = ServeCfg()):
+        if scfg.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {scfg.n_slots}")
+        bucket = scfg.prefill_bucket or scfg.page_size
+        if bucket % scfg.page_size:
+            raise ValueError(
+                f"prefill_bucket ({bucket}) must be a multiple of "
+                f"page_size ({scfg.page_size})")
+        self.params, self.cfg, self.scfg = params, cfg, scfg
+        self._bucket = bucket
+        # SSD recurrences integrate every input token, so right-padded prompts
+        # would corrupt the state: those archs prefill at exact prompt length
+        # (one retrace per distinct length; attention pages stay page-padded
+        # inside write_prefill_pages).
+        self._exact_prefill = any(
+            b.mixer == "ssm" for b in cfg.pattern + cfg.prelude)
+        self.caches = lm.init_paged_caches(  # raises for unsupported archs
+            cfg, scfg.n_slots, scfg.n_pages, scfg.page_size)
+        self.pool = PagePool(scfg.n_pages)
+        B, MAXP = scfg.n_slots, scfg.max_pages_per_seq
+        self._page_table = np.zeros((B, MAXP), np.int32)
+        self._lengths = np.zeros(B, np.int32)
+        self._active = np.zeros(B, bool)
+        self._tokens = np.zeros((B, 1), np.int32)
+        self._slot_req: list = [None] * B  # per-lane in-flight request state
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self._decode = jax.jit(lm.serve_decode_paged, static_argnames="cfg",
+                               donate_argnums=(1,))
+        self._prefill = jax.jit(self._prefill_to_pages, donate_argnums=(1,))
+
+    # -- jitted bodies ------------------------------------------------------
+
+    def _prefill_to_pages(self, params, paged, tokens, last_pos, page_ids, slot):
+        logits, dense = lm.serve_prefill(params, {"tokens": tokens}, self.cfg,
+                                         last_pos=last_pos)
+        paged = lm.write_prefill_pages(paged, dense, page_ids, slot,
+                                       self.scfg.page_size)
+        return logits[:, -1], paged
+
+    # -- admission ----------------------------------------------------------
+
+    def pages_needed(self, req: events.Request) -> int:
+        PS = self.scfg.page_size
+        bucket = self._bucket_len(req.prompt_len)
+        return max(-(-bucket // PS), -(-(req.prompt_len + req.gen_len) // PS))
+
+    def _bucket_len(self, prompt_len: int) -> int:
+        if self._exact_prefill:
+            return prompt_len
+        return -(-prompt_len // self._bucket) * self._bucket
+
+    def _check_request(self, req: events.Request) -> None:
+        if req.prompt_len < 1 or req.gen_len < 1:
+            raise ValueError(f"request {req.rid}: prompt_len and gen_len must "
+                             f"be >= 1, got {(req.prompt_len, req.gen_len)}")
+        need = self.pages_needed(req)
+        if need > self.scfg.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages > max_pages_per_seq="
+                f"{self.scfg.max_pages_per_seq}; raise max_pages_per_seq or "
+                f"page_size (the serving analogue of a stash ring too shallow "
+                f"for the observed delay)")
+        if need > self.scfg.n_pages:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages > pool n_pages="
+                f"{self.scfg.n_pages}; raise n_pages")
+
+    def _sample(self, row_logits, rid: int, idx: int) -> int:
+        if self.scfg.temperature <= 0:
+            return int(np.argmax(np.asarray(row_logits)))
+        # keyed per (request, emitted index): retirement/admission churn in the
+        # batch never perturbs another request's sample stream
+        k = jax.random.fold_in(jax.random.fold_in(self._key, rid), idx)
+        return int(jax.random.categorical(
+            k, jnp.asarray(row_logits) / self.scfg.temperature))
+
+    # -- the serving loop ---------------------------------------------------
+
+    def run(self, requests: Sequence[events.Request],
+            prompts: Optional[Dict[int, np.ndarray]] = None) -> dict:
+        """Serve a whole trace; returns per-request results + service metrics.
+
+        prompts: optional {rid: 1-D int32 prompt tokens} (defaults to synthetic
+        tokens keyed by (seed, rid)). The clock is wall time, fast-forwarded
+        over idle gaps so a sparse trace doesn't sleep through its own bench.
+        """
+        for r in requests:
+            self._check_request(r)
+        prompts = dict(prompts or {})
+        for r in requests:
+            if r.rid not in prompts:
+                k = jax.random.fold_in(jax.random.PRNGKey(self.scfg.seed ^ 0x5EED), r.rid)
+                prompts[r.rid] = np.asarray(jax.random.randint(
+                    k, (r.prompt_len,), 0, self.cfg.vocab_size), np.int32)
+            elif len(prompts[r.rid]) != r.prompt_len:
+                raise ValueError(f"prompt for rid {r.rid} has length "
+                                 f"{len(prompts[r.rid])} != {r.prompt_len}")
+
+        q = events.EventQueue()
+        for r in requests:
+            q.push(r.arrival, "arrive", stage=0, mb=r.rid, payload=r)
+        waiting: list = []  # admission queue, FIFO
+        results: dict = {}
+        step_times: list = []
+        step_tokens: list = []  # active lanes per step = tokens emitted by it
+        t0 = time.perf_counter()
+        skew = 0.0  # virtual fast-forward over idle gaps
+
+        def now() -> float:
+            return time.perf_counter() - t0 + skew
+
+        while q or waiting or self._active.any():
+            # 1) ingest arrivals up to the current clock; if idle, jump ahead
+            if not self._active.any() and not waiting and q:
+                skew = max(skew, q.next_time() - (time.perf_counter() - t0))
+            for ev in q.pop_until(now()):
+                waiting.append(ev.payload)
+
+            # 2) admission: a free lane AND enough free pages (in-flight caps)
+            while waiting:
+                req = waiting[0]
+                free_slots = np.flatnonzero(~self._active)
+                if not free_slots.size:
+                    break
+                ids = self.pool.alloc(self.pages_needed(req))
+                if ids is None:
+                    break
+                waiting.pop(0)
+                slot = int(free_slots[0])
+                self._admit(req, prompts[req.rid], slot, ids, results, now)
+
+            # 3) one continuous-batching decode step over all active lanes
+            if self._active.any():
+                step_tokens.append(int(self._active.sum()))
+                t_step = time.perf_counter()
+                logits, self.caches = self._decode(
+                    self.params, self.caches, jnp.asarray(self._tokens),
+                    self.cfg, jnp.asarray(self._page_table),
+                    jnp.asarray(self._lengths), jnp.asarray(self._active))
+                logits = np.asarray(logits)
+                step_times.append(time.perf_counter() - t_step)
+                t_now = now()
+                for slot in np.flatnonzero(self._active):
+                    st = self._slot_req[slot]
+                    tok = self._sample(logits[slot], st["req"].rid, len(st["tokens"]))
+                    st["tokens"].append(tok)
+                    self._lengths[slot] += 1
+                    self._tokens[slot, 0] = tok
+                    if len(st["tokens"]) >= st["req"].gen_len:
+                        self._retire(int(slot), t_now, results)
+
+        makespan = now()
+        gen_tokens = sum(len(r["tokens"]) for r in results.values())
+        steady_t = sum(step_times[1:])  # first decode step pays compile
+        steady_n = sum(step_tokens[1:])
+        return {
+            "results": results,
+            "makespan_s": makespan,
+            "gen_tokens": gen_tokens,
+            "tok_s": gen_tokens / makespan if makespan > 0 else float("nan"),
+            "steady_tok_s": steady_n / steady_t if steady_t > 0 else float("nan"),
+            "decode_steps": len(step_times),
+            "step_times_s": step_times,
+            "pages": {"total": self.pool.n_pages,
+                      "high_water": self.pool.high_water},
+        }
+
+    def _admit(self, req, prompt, slot, page_ids, results, now) -> None:
+        scfg = self.scfg
+        bucket = self._bucket_len(req.prompt_len)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :req.prompt_len] = prompt
+        n_prompt_pages = -(-bucket // scfg.page_size)
+        self._page_table[slot, :len(page_ids)] = page_ids
+        logits, self.caches = self._prefill(
+            self.params, self.caches, jnp.asarray(padded),
+            jnp.asarray([req.prompt_len - 1], jnp.int32),
+            jnp.asarray(page_ids[:n_prompt_pages], jnp.int32),
+            jnp.asarray(slot, jnp.int32))
+        logits = np.asarray(jax.block_until_ready(logits))
+        t_first = now()
+        first = self._sample(logits[0], req.rid, 0)
+        self._slot_req[slot] = {"req": req, "pages": list(page_ids),
+                                "tokens": [first], "t_first": t_first}
+        results[req.rid] = None  # placeholder keeps completion order visible
+        self._lengths[slot] = req.prompt_len
+        self._tokens[slot, 0] = first
+        self._active[slot] = True
+        if req.gen_len <= 1:
+            self._retire(slot, t_first, results)
+
+    def _retire(self, slot: int, t_done: float, results: dict) -> None:
+        st = self._slot_req[slot]
+        req = st["req"]
+        self.pool.free(st["pages"])
+        self._active[slot] = False
+        self._slot_req[slot] = None
+        n_decode = max(len(st["tokens"]) - 1, 1)
+        results[req.rid] = {
+            "tokens": st["tokens"],
+            "ttft_s": st["t_first"] - req.arrival,
+            "tpot_s": (t_done - st["t_first"]) / n_decode,
+            "done_s": t_done,
+        }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def make_demo_inputs(cfg, seed: int, batch: int, prompt_len: int):
+    """Init params and a synthetic prompt from INDEPENDENT key splits.
+
+    (Regression surface: the launcher used to reuse one key for both, making
+    the prompt a deterministic function of the weights' randomness.)"""
+    k_init, k_prompt, k_sample = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = lm.init_lm(k_init, cfg)
+    prompt = jax.random.randint(k_prompt, (batch, prompt_len), 0, cfg.vocab_size)
+    return params, prompt.astype(jnp.int32), k_sample
+
+
+def _positive_int(name):
+    def parse(s):
+        v = int(s)
+        if v < 1:
+            raise argparse.ArgumentTypeError(f"{name} must be >= 1, got {v}")
+        return v
+    return parse
+
+
+def _len_range(s: str) -> tuple:
+    """'LO,HI' or a single 'N' -> (lo, hi) inclusive."""
+    parts = [int(x) for x in s.split(",")]
+    if len(parts) == 1:
+        parts = parts * 2
+    if len(parts) != 2 or parts[0] < 1 or parts[1] < parts[0]:
+        raise argparse.ArgumentTypeError(
+            f"length range must be 'N' or 'LO,HI' with 1 <= LO <= HI, got {s!r}")
+    return tuple(parts)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--batch", type=_positive_int("--batch"), default=4)
+    ap.add_argument("--prompt-len", type=_positive_int("--prompt-len"), default=32)
+    ap.add_argument("--gen", type=_len_range, default=(16, 16),
+                    help="tokens to generate: N, or LO,HI sampled per request "
+                         "in --engine mode")
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    # continuous-batching engine + load generator
+    ap.add_argument("--engine", action="store_true",
+                    help="serve a Poisson trace through the continuous-batching "
+                         "engine instead of one uniform batch")
+    ap.add_argument("--requests", type=_positive_int("--requests"), default=16)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate (req/s) for --engine")
+    ap.add_argument("--prompt-lens", type=_len_range, default=None,
+                    help="LO,HI prompt-length range for --engine "
+                         "(default: --prompt-len for both ends)")
+    ap.add_argument("--slots", type=_positive_int("--slots"), default=4)
+    ap.add_argument("--page-size", type=_positive_int("--page-size"), default=8)
+    ap.add_argument("--pages", type=_positive_int("--pages"), default=64)
+    ap.add_argument("--max-pages-per-seq", type=_positive_int("--max-pages-per-seq"),
+                    default=8)
+    return ap
 
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
     cfg = get_config(args.arch, reduced=args.reduced)
-    key = jax.random.PRNGKey(args.seed)
-    params = lm.init_lm(key, cfg)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    params, prompt, k_sample = make_demo_inputs(cfg, args.seed, args.batch,
+                                                args.prompt_len)
+    if args.engine:
+        scfg = ServeCfg(n_slots=args.slots, page_size=args.page_size,
+                        n_pages=args.pages, max_pages_per_seq=args.max_pages_per_seq,
+                        temperature=args.temperature, seed=args.seed)
+        trace = events.poisson_trace(
+            args.requests, rate=args.rate, seed=args.seed,
+            prompt_lens=args.prompt_lens or (args.prompt_len, args.prompt_len),
+            gen_lens=args.gen)
+        out = ServeEngine(params, cfg, scfg).run(trace)
+        ttfts = sorted(r["ttft_s"] for r in out["results"].values())
+        print(f"served {len(trace)} requests, {out['gen_tokens']} tokens in "
+              f"{out['makespan_s']:.2f}s ({out['tok_s']:.1f} tok/s; steady "
+              f"{out['steady_tok_s']:.1f} tok/s)")
+        print(f"ttft p50 {ttfts[len(ttfts) // 2]:.3f}s  max {ttfts[-1]:.3f}s; "
+              f"pages high-water {out['pages']['high_water']}/{out['pages']['total']}")
+        return
+    gen_len = args.gen[0]
     t0 = time.perf_counter()
-    out, stats = generate(params, cfg, prompt.astype(jnp.int32), args.gen,
+    out, stats = generate(params, cfg, prompt, gen_len,
+                          temperature=args.temperature,
+                          key=k_sample if args.temperature > 0 else None,
                           return_stats=True)
     dt = time.perf_counter() - t0
-    ntok = args.batch * args.gen
+    ntok = args.batch * gen_len
     print(f"generated {out.shape} in {dt:.2f}s ({ntok/dt:.1f} tok/s incl. compile)")
     print(f"prefill {stats['prefill_s']:.2f}s; first token {stats['first_token_s']:.2f}s "
           f"(incl. decode compile); steady-state {stats['steady_tok_s']:.1f} tok/s")

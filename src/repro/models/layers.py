@@ -301,10 +301,14 @@ def attention_apply(
     cache=None,
     enc_out=None,
     iota_positions=False,
+    paging=None,
 ):
     """Self-attention (+ optional cross-attention block for whisper decoder).
 
-    cache: None (train/prefill full-seq) or dict(k,v,pos) for one-token decode.
+    cache: None (train/prefill full-seq), dict(k,v,pos) for dense one-token
+    decode, or dict(k_pages,v_pages) for paged decode (serving) — the paged
+    branch additionally needs `paging` (page_table/write_page/write_off/
+    read_len, shared across layers; see lm.serve_decode_paged).
     Returns (y, new_cache).
     """
     B, S, D = x.shape
@@ -331,7 +335,29 @@ def attention_apply(
     new_cache = None
     scale = 1.0 / math.sqrt(hd)
     mask_kw = dict(causal=blk.causal, window=blk.window, prefix_len=prefix_len)
-    if cache is not None:
+    if cache is not None and "k_pages" in cache:
+        # paged decode (serving): k/v live in a shared fixed-size page pool;
+        # per-slot routing (page table, write slot, live length) is computed
+        # once by lm.serve_decode_paged and shared by every layer. Inactive
+        # lanes carry write_page == n_pages: the scatter drops them, so
+        # retired slots never touch the pool (their pages may already be
+        # owned by a new sequence).
+        if paging is None:
+            raise ValueError("paged attention cache needs batch['paging'] routing")
+        if S != 1:
+            raise ValueError("paged attention cache is decode-only (S == 1)")
+        ck = cache["k_pages"].at[paging["write_page"], paging["write_off"]].set(
+            k[:, 0], mode="drop")
+        cv = cache["v_pages"].at[paging["write_page"], paging["write_off"]].set(
+            v[:, 0], mode="drop")
+        out = kdis.dispatch(
+            "paged_attn_decode", q[:, 0], ck, cv,
+            paging["page_table"], paging["read_len"],
+            backend=kernel_backend(cfg), window=blk.window,
+            softcap=cfg.attn_softcap, scale=scale)
+        out = out.reshape(B, 1, Hkv, G, hd)
+        new_cache = {"k_pages": ck, "v_pages": cv}
+    elif cache is not None:
         # prefill (S>1) or one-token decode; cache k/v [B, Smax, Hkv, hd]
         idx = cache["pos"]  # scalar int32 current length
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)

@@ -89,7 +89,8 @@ def init_lm(key, cfg: ModelCfg):
 
 
 def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=None,
-                enc_out=None, cache=None, shared=None, iota_positions=False):
+                enc_out=None, cache=None, shared=None, iota_positions=False,
+                paging=None):
     """Returns (x, aux, new_cache). iota_positions: static flag — True when
     `positions` is a generated arange (enables position-free fused attention)."""
     x = ax.constrain(x, ax.batch_axes(), None, None)
@@ -118,7 +119,7 @@ def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=No
             h, new_mix_cache = fn(bp["mixer"], h, cfg, blk, positions=positions,
                                   prefix_len=prefix_len, enc_out=enc_out,
                                   cache=None if cache is None else cache.get("mixer"),
-                                  iota_positions=iota_positions)
+                                  iota_positions=iota_positions, paging=paging)
         elif blk.mixer == "ssm":
             h, new_mix_cache = L.ssm_apply(bp["mixer"], h, cfg,
                                            cache=None if cache is None else cache.get("mixer"))
@@ -174,7 +175,7 @@ def block_apply(bp, blk: BlockDef, x, cfg: ModelCfg, *, positions, prefix_len=No
 
 def _scan_blocks(scan_params, pattern, x, cfg, *, positions, prefix_len=None,
                  enc_out=None, caches=None, shared=None, j0=0, j1=None,
-                 iota_positions=False):
+                 iota_positions=False, paging=None):
     """Run periods [j0, j1) of the scanned pattern. caches: stacked pytree or None."""
     n = (j1 if j1 is not None else jax.tree.leaves(scan_params)[0].shape[0]) - j0
     if n <= 0:
@@ -191,7 +192,8 @@ def _scan_blocks(scan_params, pattern, x, cfg, *, positions, prefix_len=None,
             xx, a, nc = block_apply(bp[f"b{j}"], blk, xx, cfg, positions=positions,
                                     prefix_len=prefix_len, enc_out=enc_out,
                                     cache=None if cc is None else cc[f"b{j}"],
-                                    shared=shared, iota_positions=iota_positions)
+                                    shared=shared, iota_positions=iota_positions,
+                                    paging=paging)
             aux = aux + a
             if new_cc is not None:
                 new_cc[f"b{j}"] = nc
@@ -398,13 +400,14 @@ def run_stage_ops(sp, ops, carry, batch, cfg: ModelCfg, *, caches=None):
             if positions is None:
                 positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
             prefix_len = batch.get("prefix_len")
+            paging = batch.get("paging")
             if o[0] == "prelude":
                 blk = cfg.prelude[o[1]]
                 cc = None if caches is None else caches["prelude"][f"p{o[1]}"]
                 x, a, nc = block_apply(sp["prelude"][f"p{o[1]}"], blk, x, cfg,
                                        positions=positions, prefix_len=prefix_len,
                                        enc_out=enc, cache=cc, shared=sp.get("shared"),
-                                       iota_positions=iota)
+                                       iota_positions=iota, paging=paging)
                 if caches is not None:
                     caches["prelude"] = dict(caches["prelude"])
                     caches["prelude"][f"p{o[1]}"] = nc
@@ -413,7 +416,8 @@ def run_stage_ops(sp, ops, carry, batch, cfg: ModelCfg, *, caches=None):
                 x, a, cs = _scan_blocks(sp["scan"], cfg.pattern, x, cfg,
                                         positions=positions, prefix_len=prefix_len,
                                         enc_out=enc, caches=cs, shared=sp.get("shared"),
-                                        j0=o[1], j1=o[2], iota_positions=iota)
+                                        j0=o[1], j1=o[2], iota_positions=iota,
+                                        paging=paging)
                 if caches is not None:
                     caches["scan"] = cs
             aux = aux + a
@@ -490,13 +494,21 @@ def init_caches(cfg: ModelCfg, batch_size, max_len):
     return caches
 
 
-def serve_prefill(params, batch, cfg: ModelCfg, max_len=None):
-    """Process the full prompt, fill caches, return (last_logits, caches)."""
+def serve_prefill(params, batch, cfg: ModelCfg, max_len=None, last_pos=None):
+    """Process the full prompt, fill caches, return (last_logits, caches).
+
+    last_pos: optional [B] int32 of each row's true last prompt position —
+    ragged prompts right-padded to a common S read their logits there instead
+    of at S-1 (padding never leaks backwards under the causal mask).
+    """
     B, S = batch["tokens"].shape
     max_len = max_len or S
     caches = init_caches(cfg, B, max_len)
     h, enc, caches = forward_hidden(params, batch, cfg, caches=caches)
-    h_last = h[:, -1:, :]
+    if last_pos is None:
+        h_last = h[:, -1:, :]
+    else:
+        h_last = jnp.take_along_axis(h, last_pos[:, None, None].astype(jnp.int32), axis=1)
     h_last = L.rmsnorm_apply(params["final_norm"], h_last, cfg.norm_eps)
     logits = _head_logits(params, cfg, h_last)
     if cfg.enc_periods:
@@ -519,3 +531,172 @@ def serve_decode(params, caches, tokens, cfg: ModelCfg, pos):
     if cfg.enc_periods:
         caches2["enc_out"] = caches.get("enc_out")
     return logits, caches2
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: shared KV page pools + per-slot SSD state (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# Layout: attention layers cache into ONE pool per layer of fixed-size pages
+# [n_pages, page_size, Hkv, hd]; a sequence owns a chain of page ids (its page
+# table row) and pages return to the allocator at retirement — the stash.py
+# mod-indexed ring discipline applied to serving memory (write slot is
+# `length // page_size` into the table, `length % page_size` into the page).
+# SSD (mamba2) layers keep their O(1)-per-sequence recurrent state per decode
+# SLOT, not per page. MLA latent caches and shared-attn blocks are not paged.
+
+
+def _init_block_paged(cfg: ModelCfg, blk: BlockDef, n_slots, n_pages, page_size):
+    if blk.mixer == "attn" and cfg.mla:
+        raise NotImplementedError("paged serving: MLA latent caches not supported")
+    if blk.mixer == "shared_attn":
+        raise NotImplementedError("paged serving: shared-attn blocks not supported")
+    if blk.mixer == "attn":
+        return {"mixer": {
+            "k_pages": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+            "v_pages": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), cfg.dtype)}}
+    if blk.mixer == "ssm":
+        d_inner, n_heads, conv_ch = L.ssm_dims(cfg)
+        s = cfg.ssm
+        return {"mixer": {
+            "conv": jnp.zeros((n_slots, s.d_conv - 1, conv_ch), cfg.dtype),
+            "state": jnp.zeros((n_slots, n_heads, s.d_state, s.head_dim), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32)}}
+    return {"mixer": None}
+
+
+def init_paged_caches(cfg: ModelCfg, n_slots, n_pages, page_size):
+    """Paged decode caches: n_slots concurrent sequences over n_pages shared pages."""
+    if cfg.enc_periods:
+        raise NotImplementedError("paged serving: encoder-decoder archs not supported")
+
+    def stack(n, mk):
+        one = mk()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy() if a is not None else None,
+            one)
+
+    return {
+        "prelude": {f"p{i}": _init_block_paged(cfg, blk, n_slots, n_pages, page_size)
+                    for i, blk in enumerate(cfg.prelude)},
+        "scan": stack(cfg.n_periods, lambda: {
+            f"b{j}": _init_block_paged(cfg, blk, n_slots, n_pages, page_size)
+            for j, blk in enumerate(cfg.pattern)}),
+    }
+
+
+def _tree_pool_dims(paged):
+    """(n_pages, page_size) from the first attention pool; (None, None) if pure-SSM."""
+    for leaf_name in ("k_pages",):
+        found = []
+
+        def visit(d):
+            if isinstance(d, dict):
+                if leaf_name in d:
+                    found.append(d[leaf_name])
+                for v in d.values():
+                    visit(v)
+
+        visit(paged)
+        if found:
+            shp = found[0].shape  # [..., n_pages, PS, Hkv, hd]
+            return shp[-4], shp[-3]
+    return None, None
+
+
+def _map_mixers(paged, dense_or_new, fn):
+    """Apply fn(paged_mixer, other_mixer, stacked) over the block-cache tree."""
+    out = {"prelude": {}, "scan": {}}
+    for k, blkc in paged["prelude"].items():
+        out["prelude"][k] = {"mixer": fn(blkc["mixer"], dense_or_new["prelude"][k]["mixer"], False)}
+    for k, blkc in paged["scan"].items():
+        out["scan"][k] = {"mixer": fn(blkc["mixer"], dense_or_new["scan"][k]["mixer"], True)}
+    return out
+
+
+def write_prefill_pages(paged, dense, page_ids, slot, page_size):
+    """Scatter one request's dense prefill caches (batch==1) into the pools.
+
+    page_ids: [ceil(S/page_size)] int32 allocated page ids (chain order).
+    slot: scalar int32 decode slot for per-slot (SSD) state. Jit-friendly:
+    page_ids/slot may be traced; shapes are static per prefill bucket.
+    """
+
+    def copy(pg, dn, stacked):
+        if pg is None:
+            return pg
+        if "k_pages" in pg:
+            def put(pool, kv):
+                S = kv.shape[-3]
+                npg = page_ids.shape[0]
+                pad = npg * page_size - S
+                if pad:
+                    widths = [(0, 0)] * kv.ndim
+                    widths[-3] = (0, pad)
+                    kv = jnp.pad(kv, widths)
+                pages = kv.reshape(kv.shape[:-4] + (npg, page_size) + kv.shape[-2:])
+                return pool.at[:, page_ids].set(pages) if stacked else pool.at[page_ids].set(pages)
+            return {"k_pages": put(pg["k_pages"], dn["k"]),
+                    "v_pages": put(pg["v_pages"], dn["v"])}
+        if "state" in pg:
+            def put(pool, st):
+                return pool.at[:, slot].set(st[:, 0]) if stacked else pool.at[slot].set(st[0])
+            return {**pg, "conv": put(pg["conv"], dn["conv"]),
+                    "state": put(pg["state"], dn["state"])}
+        return pg
+
+    return _map_mixers(paged, dense, copy)
+
+
+def _freeze_inactive(old, new, active):
+    """Keep per-slot recurrent state (SSD conv/state) frozen on inactive lanes.
+
+    Page pools need no masking — inactive lanes' writes were dropped — but the
+    SSD recurrence always advances its whole [n_slots] batch."""
+
+    def merge(o, n, stacked):
+        if o is None or n is None or "state" not in o:
+            return n
+        axis = 1 if stacked else 0
+
+        def mrg(a, b):
+            shp = [1] * b.ndim
+            shp[axis] = -1
+            return jnp.where(active.reshape(shp), b, a)
+
+        return {**n, "conv": mrg(o["conv"], n["conv"]), "state": mrg(o["state"], n["state"])}
+
+    return _map_mixers(old, new, merge)
+
+
+def serve_decode_paged(params, caches, tokens, cfg: ModelCfg, page_table, lengths, active):
+    """One continuous-batching decode step over the n_slots decode lanes.
+
+    tokens [B,1] current tokens; page_table [B, max_pages] int32 (unused entries
+    must hold any in-range page id); lengths [B] int32 tokens already cached per
+    slot (== the position of this step's token); active [B] bool. Inactive
+    lanes compute garbage but write nothing: pool writes are dropped and SSD
+    state is re-frozen. Returns (logits [B, vocab], new_caches).
+    """
+    B = tokens.shape[0]
+    n_pages, page_size = _tree_pool_dims(caches)
+    paging = None
+    if n_pages is not None:
+        wp = jnp.where(active, page_table[jnp.arange(B), lengths // page_size], n_pages)
+        paging = {
+            "page_table": page_table.astype(jnp.int32),
+            "write_page": wp.astype(jnp.int32),
+            "write_off": (lengths % page_size).astype(jnp.int32),
+            "read_len": (lengths + active.astype(jnp.int32)).astype(jnp.int32),
+        }
+    batch = {"tokens": tokens, "positions": lengths[:, None].astype(jnp.int32)}
+    if paging is not None:
+        batch["paging"] = paging
+    stages, op_chunks = split_stages(params, cfg, 1)
+    ops = [o for o in op_chunks[0] if o[0] not in ("head", "frames_in", "enc_blocks", "enc_out")]
+    carry = {"x": None, "enc": None, "aux": jnp.zeros((), jnp.float32)}
+    carry, caches2 = run_stage_ops(stages[0], ops, carry, batch, cfg, caches=caches)
+    caches2 = _freeze_inactive(caches, caches2, active)
+    h = L.rmsnorm_apply(params["final_norm"], carry["x"], cfg.norm_eps)
+    logits = _head_logits(params, cfg, h)
+    return logits[:, -1], caches2

@@ -104,3 +104,27 @@ def test_example_trace_is_valid_and_replayable():
     sim = simulate_schedule(P=4, n_ticks=8, delay_model=f"trace:{path}")
     assert sim["makespan"] > 0
     assert sim["taus"][-1] == (3.0, 2.0, 1.0, 0.0)  # near-uniform trace: Eq. 5
+
+
+_BENCH = re.compile(r"\b(BENCH_\w+\.json)\b")
+
+
+@pytest.mark.parametrize("doc", DOC_FILES)
+def test_bench_artifacts_named_in_docs_exist(doc):
+    """Docs-rot guard: every artifacts/BENCH_*.json a doc points at must
+    actually exist (benchmarks/run.py regenerates them), unless the sentence
+    explicitly flags it as stale/planned. ISSUE 7's trigger: ROADMAP.md cited
+    BENCH_kernels.json while only BENCH_runtime.json was checked in."""
+    with open(os.path.join(ROOT, doc)) as f:
+        lines = f.read().splitlines()
+    missing = []
+    for ln in lines:
+        for name in _BENCH.findall(ln):
+            if re.search(r"\b(stale|planned|future|TODO)\b", ln, re.I):
+                continue
+            if not os.path.exists(os.path.join(ROOT, "artifacts", name)):
+                missing.append(name)
+    assert not missing, (
+        f"{doc} names benchmark artifacts that don't exist: {sorted(set(missing))}"
+        " — run benchmarks/run.py (or the per-section bench) to regenerate,"
+        " or mark the mention stale")

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core import events
 from repro.launch import serve
 from repro.models import layers as L
 from repro.models import lm
@@ -77,3 +78,151 @@ def test_temperature_sampling_reproducible_under_fixed_key(setup):
     # a different fixed key is a different (deterministic) draw
     c = serve.generate(params, cfg, prompt, 8, key=jax.random.PRNGKey(8), **kw)
     assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# Launcher regressions (the serve-path correctness holes)
+# ---------------------------------------------------------------------------
+
+
+def test_generate_temperature_without_key_raises(setup):
+    """Regression: temperature>0 with key=None used to crash deep inside
+    jax.random.split(None); now it's a clear up-front ValueError."""
+    cfg, params, prompt = setup
+    with pytest.raises(ValueError, match="PRNG key"):
+        serve.generate(params, cfg, prompt, 2, temperature=0.8)
+
+
+def test_make_demo_inputs_does_not_reuse_init_key():
+    """Regression: the launcher reused one PRNGKey for both init_lm and the
+    prompt randint, so the prompt was a deterministic function of the weight
+    randomness. The fixed path must differ from the reused-key draw."""
+    cfg = get_config("nanogpt_134m", reduced=True)
+    _, prompt, k_sample = serve.make_demo_inputs(cfg, seed=3, batch=2,
+                                                 prompt_len=16)
+    reused = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0,
+                                cfg.vocab_size)
+    assert not np.array_equal(np.asarray(prompt), np.asarray(reused))
+    # the sampling key must also be independent of the raw seed key
+    assert not np.array_equal(np.asarray(k_sample),
+                              np.asarray(jax.random.PRNGKey(3)))
+
+
+@pytest.mark.parametrize("argv", [
+    ["--gen", "0"],
+    ["--prompt-len", "0"],
+    ["--batch", "-1"],
+    ["--gen", "5,2"],       # LO > HI
+    ["--requests", "0"],
+])
+def test_parser_rejects_degenerate_sizes(argv):
+    """Regression: --gen 0 / --prompt-len 0 used to crash mid-run with shape
+    errors; the parser now rejects them up front (argparse exits with 2)."""
+    with pytest.raises(SystemExit):
+        serve.build_parser().parse_args(argv)
+
+
+# ---------------------------------------------------------------------------
+# PagePool: the serving-side stash ring
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_alloc_free_discipline():
+    pool = serve.PagePool(4)
+    a = pool.alloc(3)
+    assert a == [0, 1, 2] and pool.free_pages == 1 and pool.high_water == 3
+    assert pool.alloc(2) is None          # over-ask: refused, not partial
+    pool.free(a)
+    assert pool.free_pages == 4
+    # LIFO: freshly-freed pages are handed out first (recycling observable)
+    assert pool.alloc(1) == [a[0]]
+    with pytest.raises(ValueError, match="double/invalid"):
+        pool.free([99])
+
+
+def test_engine_rejects_oversized_request_with_sizing_hint(setup):
+    cfg, params, _ = setup
+    scfg = serve.ServeCfg(n_slots=1, page_size=4, n_pages=8, max_pages_per_seq=2)
+    eng = serve.ServeEngine(params, cfg, scfg)
+    big = events.Request(rid=0, arrival=0.0, prompt_len=6, gen_len=8)
+    with pytest.raises(ValueError, match="max_pages_per_seq"):
+        eng.run([big])
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching == sequential decode (the tentpole equivalence)
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_batching_matches_sequential_argmax(setup):
+    """Temp-0 engine tokens for ragged, churning requests must be argmax-exact
+    against per-request sequential generate(): continuous batching, paged KV,
+    slot churn and page recycling change scheduling, never predictions."""
+    cfg, params, _ = setup
+    reqs = [
+        events.Request(rid=0, arrival=0.00, prompt_len=5, gen_len=4),
+        events.Request(rid=1, arrival=0.00, prompt_len=3, gen_len=6),
+        events.Request(rid=2, arrival=0.01, prompt_len=8, gen_len=2),
+    ]
+    prompts = {
+        r.rid: np.asarray(jax.random.randint(
+            jax.random.PRNGKey(100 + r.rid), (r.prompt_len,), 0,
+            cfg.vocab_size), np.int32)
+        for r in reqs
+    }
+    # 2 lanes for 3 requests: the third is admitted into a recycled lane
+    scfg = serve.ServeCfg(n_slots=2, page_size=4, n_pages=16,
+                          max_pages_per_seq=4)
+    out = serve.ServeEngine(params, cfg, scfg).run(reqs, prompts=prompts)
+    assert set(out["results"]) == {0, 1, 2}
+    for r in reqs:
+        ref = serve.generate(params, cfg,
+                             jnp.asarray(prompts[r.rid])[None, :], r.gen_len)
+        got = out["results"][r.rid]["tokens"]
+        assert got == np.asarray(ref[0]).tolist(), f"rid {r.rid}"
+    for res in out["results"].values():
+        assert np.isfinite(res["ttft_s"]) and np.isfinite(res["tpot_s"])
+    assert np.isfinite(out["steady_tok_s"]) or out["decode_steps"] <= 1
+
+
+def test_page_reuse_bounds_high_water(setup):
+    """Retirement must actually recycle: serving N requests through few lanes
+    keeps the page high-water at the concurrent working set, well under the
+    all-simultaneous demand, and drains the pool back to empty."""
+    cfg, params, _ = setup
+    reqs = [events.Request(rid=i, arrival=0.0, prompt_len=4, gen_len=3)
+            for i in range(6)]
+    scfg = serve.ServeCfg(n_slots=2, page_size=4, n_pages=16,
+                          max_pages_per_seq=2)
+    eng = serve.ServeEngine(params, cfg, scfg)
+    out = eng.run(reqs)
+    need = sum(eng.pages_needed(r) for r in reqs)   # 12 if all live at once
+    per_req = eng.pages_needed(reqs[0])
+    assert out["pages"]["high_water"] <= scfg.n_slots * per_req < need
+    assert eng.pool.free_pages == scfg.n_pages      # everything returned
+    assert len(out["results"]) == 6
+    assert all(len(r["tokens"]) == 3 for r in out["results"].values())
+
+
+# ---------------------------------------------------------------------------
+# Load generator: keyed Poisson traces
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_trace_deterministic_and_keyed():
+    t1 = events.poisson_trace(12, rate=4.0, seed=5, prompt_lens=(2, 9),
+                              gen_lens=(1, 6))
+    t2 = events.poisson_trace(12, rate=4.0, seed=5, prompt_lens=(2, 9),
+                              gen_lens=(1, 6))
+    assert t1 == t2
+    t3 = events.poisson_trace(12, rate=4.0, seed=6, prompt_lens=(2, 9),
+                              gen_lens=(1, 6))
+    assert t1 != t3
+    arr = [r.arrival for r in t1]
+    assert arr == sorted(arr) and arr[0] >= 0
+    for r in t1:
+        assert 2 <= r.prompt_len <= 9 and 1 <= r.gen_len <= 6
+    with pytest.raises(ValueError):
+        events.poisson_trace(4, rate=0.0)
+    with pytest.raises(ValueError):
+        events.poisson_trace(4, prompt_lens=(5, 2))
