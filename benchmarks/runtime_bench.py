@@ -21,9 +21,15 @@ artifacts/BENCH_runtime.json:
   to "which replay strategy matters at realistic K": (a) tracks the runtime
   at fp tolerance, (b) drifts as soon as K > 1.
 
+- `chaos_*`: fault-injection A/B/C (DESIGN.md §11) — the same seed run
+  fault-free, with faults injected (quarantine + transport retry only), and
+  with the full recovery stack (divergence watchdog rolling back to verified
+  checkpoints): the measured loss gap and wall overhead of surviving
+  `nan_grad`/`drop`/`dup` fault loads.
+
 Sections run individually via --sections (comma list of
-throughput,trace,adapt,sim,k_equiv); a partial run merges its rows into an
-existing BENCH_runtime.json instead of clobbering the other sections.
+throughput,trace,adapt,sim,k_equiv,chaos); a partial run merges its rows into
+an existing BENCH_runtime.json instead of clobbering the other sections.
 """
 from __future__ import annotations
 
@@ -45,7 +51,7 @@ from repro.core.methods import get_method
 from repro.core.runtime import EventRuntime, RuntimeCfg, simulate_schedule
 from repro.data.synthetic import make_batch_fn
 
-SECTIONS = ("throughput", "trace", "adapt", "sim", "k_equiv")
+SECTIONS = ("throughput", "trace", "adapt", "sim", "k_equiv", "chaos")
 
 
 def main(steps=40, stages=4, sections=None):
@@ -256,6 +262,73 @@ def main(steps=40, stages=4, sections=None):
                 "tau_groups_last": [list(g) for g in res.tau_groups[-1]],
                 "stage_mb_delays": [list(r) for r in
                                     delay.stage_mb_delays(stages, K)]}
+
+    if "chaos" in sections:
+        # fault-injection A/B/C: identical seed + data, (a) fault-free,
+        # (b) faults injected with only the always-on quarantine + transport
+        # retry defending, (c) faults + the full recovery stack (watchdog
+        # rollback to verified checkpoints). The (c)-vs-(a) loss gap and wall
+        # overhead are the measured price of surviving the fault load
+        # (DESIGN.md §11).
+        import tempfile
+
+        from repro.launch.train import run_event_loop
+
+        chaos_ticks = max(steps // 2, 12)
+        chaos_spec = "nan_grad=0.05,drop=0.03,dup=0.03"
+
+        rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
+        rt.init(jax.random.PRNGKey(0))
+        rt.run(batch_fn, 1)  # compile outside the timer
+        t0 = time.time()
+        base = rt.run(batch_fn, chaos_ticks)
+        base_dt = (time.time() - t0) / chaos_ticks
+
+        rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
+                          RuntimeCfg(faults=chaos_spec))
+        rt.init(jax.random.PRNGKey(0))
+        rt.run(batch_fn, 1)
+        t0 = time.time()
+        inj = rt.run(batch_fn, chaos_ticks)
+        inj_dt = (time.time() - t0) / chaos_ticks
+
+        with tempfile.TemporaryDirectory() as ckdir:
+            t0 = time.time()
+            _, rec = run_event_loop(
+                AsyncTrainer(cfg, ecfg, "ours"), batch_fn, chaos_ticks,
+                seed=0, ckpt_dir=ckdir, ckpt_every=max(chaos_ticks // 3, 4),
+                faults=chaos_spec, watchdog="on", max_rollbacks=50,
+                log_fn=lambda *_: None)
+            rec_dt = (time.time() - t0) / chaos_ticks
+
+        dl_inj = abs(inj.losses[-1] - base.losses[-1])
+        dl_rec = abs(rec.losses[-1] - base.losses[-1])
+        rows.append(("runtime/chaos_fault_free", round(1e6 * base_dt, 1),
+                     f"final={base.losses[-1]:.4f};ticks={chaos_ticks}"))
+        rows.append(("runtime/chaos_injected", round(1e6 * inj_dt, 1),
+                     f"final={inj.losses[-1]:.4f};dloss={dl_inj:.4f};"
+                     f"skipped={sum(inj.nonfinite_skipped)};"
+                     f"retx={inj.retransmits};dup={inj.duplicates}"))
+        rows.append(("runtime/chaos_recovery", round(1e6 * rec_dt, 1),
+                     f"final={rec.losses[-1]:.4f};dloss={dl_rec:.4f};"
+                     f"rollbacks={rec.rollbacks};"
+                     f"skipped={rec.nonfinite_skipped};"
+                     f"overhead_x={rec_dt / base_dt:.2f}"))
+        full["chaos"] = {
+            "faults": chaos_spec, "ticks": chaos_ticks,
+            "fault_free": {"losses": base.losses, "tick_s": base_dt},
+            "injected": {"losses": inj.losses, "tick_s": inj_dt,
+                         "nonfinite_skipped": list(inj.nonfinite_skipped),
+                         "retransmits": inj.retransmits,
+                         "duplicates": inj.duplicates,
+                         "final_dloss": dl_inj},
+            "recovery": {"losses": rec.losses, "tick_s": rec_dt,
+                         "nonfinite_skipped": rec.nonfinite_skipped,
+                         "retransmits": rec.retransmits,
+                         "rollbacks": rec.rollbacks,
+                         "final_dloss": dl_rec,
+                         "overhead_x": rec_dt / base_dt},
+        }
 
     if sections != set(SECTIONS):
         # partial run: keep the other sections' entries in the artifact

@@ -44,8 +44,9 @@ def main(requests=12, rate=8.0, seed=0, arch="nanogpt_134m",
                                  prompt_lens=prompt_lens, gen_lens=gen_lens)
     out = serve.ServeEngine(params, cfg, scfg).run(trace)
 
-    ttft = [r["ttft_s"] for r in out["results"].values()]
-    tpot = [r["tpot_s"] for r in out["results"].values()]
+    # shed/rejected requests never start and carry no latency samples
+    ttft = [r["ttft_s"] for r in out["results"].values() if r and "ttft_s" in r]
+    tpot = [r["tpot_s"] for r in out["results"].values() if r and "tpot_s" in r]
     sim = simulate_serve_schedule(trace, n_slots=n_slots, page_size=page_size,
                                   n_pages=n_pages)
     rows = [
@@ -79,6 +80,10 @@ def main(requests=12, rate=8.0, seed=0, arch="nanogpt_134m",
                        "max": float(max(ttft))},
             "tpot_s": {"p50": _pct(tpot, 50), "p99": _pct(tpot, 99),
                        "max": float(max(tpot))},
+            "completed": out["completed"],
+            "rejected": out["rejected"],
+            "shed": out["shed"],
+            "evicted": out["evicted"],
             "pages": out["pages"],
         },
         "sim_twin": {k: sim[k] for k in

@@ -11,9 +11,12 @@ on elastic events).
 from __future__ import annotations
 
 import json
+import logging
 import os
 import re
 import tempfile
+import zipfile
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -23,37 +26,85 @@ from jax.tree_util import tree_flatten_with_path, keystr
 
 from repro.models import lm as _lm
 
+logger = logging.getLogger(__name__)
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint file failed integrity verification (truncated zip, missing
+    arrays, or a per-array checksum mismatch). `restore_latest` treats it —
+    along with any other read failure — as 'fall back to the previous step'."""
+
 
 def _flat(state):
     leaves, treedef = tree_flatten_with_path(state)
     return {keystr(path): np.asarray(jax.device_get(x)) for path, x in leaves}, treedef
 
 
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
 def save(path: str, state, step: int, metadata: dict | None = None):
-    """Atomic save: write tmp then rename."""
+    """Atomic, durable save: write tmp, fsync it, rename, fsync the directory.
+
+    Without the fsyncs os.replace only orders the rename against other
+    *metadata* operations — after a power loss the new name could point at a
+    zero-length or partially-written file, which is exactly the torn state
+    `restore_latest` + per-array checksums recover from. `__meta__` carries a
+    `crc32` map (keystr path -> checksum) verified on restore.
+    """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrs, _ = _flat(state)
     meta = dict(metadata or {})
     meta["step"] = int(step)
+    meta["crc32"] = {k: _crc(v) for k, v in arrs.items()}
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
-    os.close(fd)
-    with open(tmp, "wb") as f:
-        np.savez(f, __meta__=json.dumps(meta), **arrs)
-    os.replace(tmp, path)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **arrs)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
+    dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
 
 
 def _restore_exact(path: str, like):
-    with np.load(path, allow_pickle=False) as z:
-        meta = json.loads(str(z["__meta__"]))
+    try:
+        z_ctx = np.load(path, allow_pickle=False)
+    except (OSError, ValueError, EOFError, zipfile.BadZipFile) as e:
+        # torn zip / bad magic / half a central directory
+        raise CorruptCheckpointError(f"{path}: unreadable ({e})") from e
+    with z_ctx as z:
+        try:
+            meta = json.loads(str(z["__meta__"]))
+        except Exception as e:
+            raise CorruptCheckpointError(f"{path}: bad __meta__ ({e})") from e
+        crcs = meta.get("crc32")  # absent in pre-integrity checkpoints
         leaves, treedef = tree_flatten_with_path(like)
         out = []
         for p, l in leaves:
             k = keystr(p)
             if k not in z:
                 raise KeyError(f"checkpoint missing {k}")
-            a = z[k]
+            try:
+                a = z[k]
+            except Exception as e:  # member truncated mid-array
+                raise CorruptCheckpointError(f"{path}: {k} unreadable ({e})") from e
             if tuple(a.shape) != tuple(l.shape):
                 raise ValueError(f"shape mismatch at {k}: ckpt {a.shape} vs state {l.shape}")
+            if crcs is not None and k in crcs and _crc(a) != crcs[k]:
+                raise CorruptCheckpointError(
+                    f"{path}: checksum mismatch at {k} (bit rot or torn write)")
             out.append(jnp.asarray(a, l.dtype))
     return jax.tree.unflatten(treedef, out), meta
 
@@ -113,26 +164,71 @@ def restore(path: str, like):
         return loaded._replace(opt=tuple(opt)), meta
 
 
-def latest(ckpt_dir: str):
-    """(path, step) of the newest ckpt-<step>.npz in dir, or (None, -1)."""
+def _steps_desc(ckpt_dir: str) -> list:
+    """All (path, step) candidates in the dir, newest first."""
     if not os.path.isdir(ckpt_dir):
-        return None, -1
-    best, best_step = None, -1
+        return []
+    out = []
     for f in os.listdir(ckpt_dir):
         m = re.fullmatch(r"ckpt-(\d+)\.npz", f)
-        if m and int(m.group(1)) > best_step:
-            best, best_step = os.path.join(ckpt_dir, f), int(m.group(1))
-    return best, best_step
+        if m:
+            out.append((os.path.join(ckpt_dir, f), int(m.group(1))))
+    return sorted(out, key=lambda x: -x[1])
+
+
+def _readable(path: str) -> bool:
+    """Cheap validity probe: the zip opens and `__meta__` reads back (the zip
+    layer CRC-checks the member). Does NOT verify per-array checksums — that
+    costs a full read and happens in restore(); a file passing here can still
+    fail restore, which is why restore_latest keeps stepping down."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            json.loads(str(z["__meta__"]))
+        return True
+    except Exception:
+        return False
+
+
+def latest(ckpt_dir: str):
+    """(path, step) of the newest *readable* ckpt-<step>.npz in dir, or
+    (None, -1). A truncated/corrupt newest file is skipped (with a warning)
+    and the previous step wins — a torn write must never brick resume."""
+    for path, step in _steps_desc(ckpt_dir):
+        if _readable(path):
+            return path, step
+        logger.warning("skipping corrupt checkpoint %s", path)
+    return None, -1
+
+
+def restore_latest(ckpt_dir: str, like):
+    """Restore the newest checkpoint that passes FULL integrity verification,
+    stepping down through older files on any failure (truncation, checksum
+    mismatch, structural mismatch). Returns (state, meta, path, step) or
+    (None, None, None, -1) when nothing in the directory is restorable."""
+    for path, step in _steps_desc(ckpt_dir):
+        try:
+            state, meta = restore(path, like)
+            return state, meta, path, step
+        except Exception as e:
+            logger.warning("checkpoint %s failed restore (%s); "
+                           "falling back to previous step", path, e)
+    return None, None, None, -1
 
 
 def save_step(ckpt_dir: str, state, step: int, keep: int = 3, metadata=None):
     save(os.path.join(ckpt_dir, f"ckpt-{step}.npz"), state, step, metadata)
-    # retention
+    # retention — tolerant: a concurrently-deleted or permission-locked stale
+    # file must not kill the training loop mid-run
     steps = sorted(
         int(re.fullmatch(r"ckpt-(\d+)\.npz", f).group(1))
         for f in os.listdir(ckpt_dir) if re.fullmatch(r"ckpt-(\d+)\.npz", f))
     for s in steps[:-keep]:
-        os.remove(os.path.join(ckpt_dir, f"ckpt-{s}.npz"))
+        stale = os.path.join(ckpt_dir, f"ckpt-{s}.npz")
+        try:
+            os.remove(stale)
+        except OSError as e:
+            logger.warning("retention: could not remove %s (%s); continuing",
+                           stale, e)
 
 
 def _stage_moments(state):

@@ -154,7 +154,10 @@ class AsyncTrainer:
         return AsyncState(jnp.zeros((), jnp.int32), tuple(stages_p), stashes, opt_states, extras)
 
     def _init_extra(self, sp):
-        e = {}
+        # non-finite quarantine counter (DESIGN.md §11): updates skipped
+        # because their gradients were NaN/Inf — maintained by _stage_update
+        # for every method, surfaced per run in RuntimeResult.nonfinite_skipped
+        e = {"nonfinite_skipped": jnp.zeros((), jnp.int32)}
         if self.method.grad_forecast == "polyfft":
             e["hist"] = forecast.init_history(sp, self.method.forecast_hist)
         if self.method.bwd_point == "pipemare_predict":
@@ -286,7 +289,33 @@ class AsyncTrainer:
                 new_params, aux["step_dir"])
         else:
             raise ValueError(m.fwd_point)
-        return new_params, new_opt, new_extra, fp, aux
+        # Non-finite quarantine (DESIGN.md §11): a poisoned or overflowed
+        # gradient must never reach the weights, the optimizer moments, or the
+        # method state (a NaN momentum entry would re-poison every later
+        # update). Skip-and-count: one all-leaves isfinite flag selects every
+        # candidate against its pre-update value; the forward point falls back
+        # to the current params (a zero update — sane under every fwd_point
+        # mode). The guard is always on: with finite grads the select is the
+        # identity, so the fault-free path computes the same update.
+        leaves = jax.tree.leaves(grads)
+        ok = (jnp.all(jnp.stack([jnp.all(jnp.isfinite(g)) for g in leaves]))
+              if leaves else jnp.asarray(True))
+        skipped = extra.get("nonfinite_skipped", jnp.zeros((), jnp.int32))
+
+        def _sel(a, b):
+            return jnp.where(ok, a, b)
+
+        new_params = jax.tree.map(_sel, new_params, params)
+        new_opt = jax.tree.map(_sel, new_opt, opt_state)
+        fp = jax.tree.map(_sel, fp, params)
+        quar_extra = {}
+        for k, v in new_extra.items():
+            if k == "nonfinite_skipped":
+                continue
+            old = extra.get(k)
+            quar_extra[k] = jax.tree.map(_sel, v, old) if old is not None else v
+        quar_extra["nonfinite_skipped"] = skipped + (1 - ok.astype(jnp.int32))
+        return new_params, new_opt, quar_extra, fp, aux
 
     # -- one tick -------------------------------------------------------------
 

@@ -42,7 +42,7 @@ _OP_IDS = {"fwd": 0, "bwd": 1, "comm_fwd": 2, "comm_bwd": 3, "update": 4}
 @dataclasses.dataclass
 class Event:
     time: float
-    kind: str  # "fwd_arrive" | "bwd_arrive" | "free" | "leave" | "join"
+    kind: str  # "fwd_arrive" | "bwd_arrive" | "free" | "leave" | "join" | "retry"
     stage: int
     mb: int = -1
     payload: Any = None
@@ -110,15 +110,29 @@ class Mailbox:
     Contract (DESIGN.md §9): deliveries may arrive out of order; consumption is
     strictly in microbatch order; an item is delivered exactly once. `high_water`
     tracks the peak number of buffered items (mailbox memory pressure).
+
+    A duplicate delivery is a transport bug in the default (strict) mode and
+    raises. Under fault injection (`core/faults.py` `dup=RATE`) the runtime
+    opts into `dedupe=True`: a redelivery of any microbatch ever put — buffered
+    OR already consumed — is dropped and counted in `duplicates` (at-least-once
+    transport with receiver-side dedup).
     """
 
-    def __init__(self):
+    def __init__(self, dedupe: bool = False):
         self._items: dict = {}
         self.high_water = 0
+        self.dedupe = dedupe
+        self.duplicates = 0
+        self._seen: set = set()
 
     def put(self, mb: int, item):
-        if mb in self._items:
+        if mb in self._items or (self.dedupe and mb in self._seen):
+            if self.dedupe:
+                self.duplicates += 1
+                return
             raise RuntimeError(f"duplicate delivery for microbatch {mb}")
+        if self.dedupe:
+            self._seen.add(mb)
         self._items[mb] = item
         self.high_water = max(self.high_water, len(self._items))
 

@@ -1,0 +1,295 @@
+"""Keyed, deterministic fault injection for the async pipeline stack.
+
+The same treatment `DelayModel`/`ChurnModel` give latency and membership,
+applied to *faults*: every injection decision is a counter-based PRNG draw on
+`(seed, epoch, kind, stage, microbatch, attempt)`, never on generator state,
+so a fault schedule is a pure function of the spec — independent of event
+interleaving, replayable, and A/B-able against a fault-free run.
+
+Fault kinds (spec grammar in docs/cli.md, `make_fault_model` below):
+
+- `nan_grad=RATE`   — poison a stage's backward cotangent+grads (NaN/Inf)
+- `nan_act=RATE`    — poison a stage's forward activations (at the last stage
+                      this poisons the recorded loss)
+- `drop=RATE`       — drop a fwd/bwd message at the Mailbox boundary; the
+                      runtime recovers by retransmit-with-backoff, escalating
+                      a repeatedly-unreachable stage into a synthesized
+                      leave/join (PR 4's outage path) instead of deadlocking
+- `dup=RATE`        — deliver a message twice (the Mailbox dedupes + counts)
+- `crash=N@T`       — N workers crash mid-tick starting at simulated clock T
+                      (mapped onto the churn leave/join machinery)
+- `ckpt_trunc=RATE` — truncate a checkpoint file right after it is written
+                      (exercises `checkpoint.restore_latest` fallback)
+
+Contract: an **empty FaultModel is a bitwise no-op** — the runtime treats
+`FaultModel()` exactly like `faults=None` (it never consults the model), so
+every existing equivalence test is unchanged bit for bit
+(tests/test_faults.py).
+
+`DivergenceWatchdog` is the recovery half: an EMA loss-spike detector (plus
+non-finite-loss and quarantine-budget trips) that `launch/train.py` uses to
+roll a run back to the last *valid* checkpoint (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Optional, Sequence
+
+import numpy as np
+
+from . import events
+
+# Distinct from events._OP_IDS: fault draws live in their own keyed stream.
+_FAULT_IDS = {"nan_grad": 0, "nan_act": 1, "drop": 2, "dup": 3,
+              "ckpt_trunc": 4, "crash": 5, "poison_mode": 6}
+
+_RATE_KEYS = ("nan_grad", "nan_act", "drop", "dup", "ckpt_trunc")
+
+
+@dataclasses.dataclass
+class FaultModel:
+    """Keyed Bernoulli fault sampler. All rates in [0, 1]; all-zero + no
+    crashes == empty == never consulted by the runtime (bitwise no-op).
+
+    `epoch` salts every draw and is bumped by the training loop on each
+    watchdog rollback: injected faults are *transient* — the replayed ticks
+    re-sample rather than deterministically re-hitting the identical fault,
+    which would force an infinite rollback loop. Still fully deterministic
+    given (seed, rollback history).
+    """
+
+    nan_grad: float = 0.0
+    nan_act: float = 0.0
+    drop: float = 0.0
+    dup: float = 0.0
+    ckpt_trunc: float = 0.0
+    crashes: tuple = ()  # ((count, start), ...) simulated-clock crash plans
+    crash_duration: float = 6.0
+    seed: int = 0
+    epoch: int = 0
+
+    def __post_init__(self):
+        for k in _RATE_KEYS:
+            v = getattr(self, k)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"fault rate {k}={v} must be in [0, 1]")
+        for cnt, start in self.crashes:
+            if cnt < 1 or start < 0:
+                raise ValueError(
+                    f"crash plan must be COUNT>=1 @ START>=0, got {cnt}@{start}")
+        if self.crash_duration <= 0:
+            raise ValueError(
+                f"crash_duration must be > 0, got {self.crash_duration}")
+
+    # -- keyed sampling ------------------------------------------------------
+
+    @property
+    def is_empty(self) -> bool:
+        return (all(getattr(self, k) == 0.0 for k in _RATE_KEYS)
+                and not self.crashes)
+
+    @property
+    def affects_messages(self) -> bool:
+        return self.drop > 0.0 or self.dup > 0.0
+
+    def _uniform(self, kind: str, stage: int, mb: int, attempt: int = 0) -> float:
+        word = ((_FAULT_IDS[kind] << 59) | ((self.epoch & 0x7FF) << 48)
+                | ((attempt & 0xF) << 44) | ((stage & 0xFFF) << 32)
+                | (mb & 0xFFFFFFFF))
+        rng = np.random.Generator(np.random.Philox(
+            key=np.array([self.seed & 0xFFFFFFFFFFFFFFFF, word],
+                         dtype=np.uint64)))
+        return float(rng.random())
+
+    def hit(self, kind: str, stage: int, mb: int, attempt: int = 0) -> bool:
+        rate = getattr(self, kind)
+        return rate > 0.0 and self._uniform(kind, stage, mb, attempt) < rate
+
+    def drop_hit(self, op: str, dst: int, mb: int, attempt: int) -> bool:
+        """Message-drop draw for a fwd ("fwd") / bwd ("bwd") edge into `dst`.
+        The op is folded into the mb word (bit 31 is unused by real microbatch
+        indices at any plausible horizon) so fwd/bwd edges draw independently."""
+        mb_key = (mb & 0x7FFFFFFF) | ((1 << 31) if op == "bwd" else 0)
+        return self.drop > 0.0 and self._uniform(
+            "drop", dst, mb_key, attempt) < self.drop
+
+    def dup_hit(self, op: str, dst: int, mb: int) -> bool:
+        mb_key = (mb & 0x7FFFFFFF) | ((1 << 31) if op == "bwd" else 0)
+        return self.dup > 0.0 and self._uniform("dup", dst, mb_key) < self.dup
+
+    def poison_value(self, stage: int, mb: int) -> float:
+        """NaN or +Inf, keyed per (stage, mb) — both non-finite classes must
+        flow through the quarantine path (jnp.isfinite catches either)."""
+        return (math.nan if self._uniform("poison_mode", stage, mb) < 0.5
+                else math.inf)
+
+    # -- structural faults ---------------------------------------------------
+
+    def crash_outages(self, P: int) -> tuple:
+        """Materialize the crash plan as churn `Outage` windows: each crash
+        picks a keyed stage in [0, P) and knocks it out for `crash_duration`
+        simulated units starting at the plan's clock. Successive crashes in one
+        plan are staggered so their windows cannot overlap on one stage (an
+        overlapping double-leave is the hung-worker path, not a crash)."""
+        outs = []
+        for plan_i, (cnt, start) in enumerate(self.crashes):
+            for j in range(cnt):
+                u = self._uniform("crash", plan_i, j)
+                stage = min(int(u * P), P - 1)
+                t0 = start + j * 2.0 * self.crash_duration
+                outs.append(events.Outage(stage, t0, self.crash_duration))
+        return tuple(outs)
+
+    def maybe_truncate_checkpoint(self, path: str, step: int) -> bool:
+        """Chaos-inject a torn write: with prob `ckpt_trunc` (keyed per step),
+        truncate the just-written checkpoint to half its size. Returns True if
+        the file was truncated."""
+        if not self.hit("ckpt_trunc", 0, step):
+            return False
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+        return True
+
+
+def make_fault_model(spec, seed: int = 0) -> Optional[FaultModel]:
+    """Parse a CLI-friendly fault spec (docs/cli.md):
+
+      "nan_grad=0.01,drop=0.005,crash=2@40"   (optional leading "faults:" tag)
+
+    Fields: `nan_grad= nan_act= drop= dup= ckpt_trunc=` take a rate in [0, 1];
+    `crash=N@T` schedules N keyed-stage crashes from simulated clock T (may
+    repeat for several plans); `crash_dur=SECONDS` sets the outage length.
+    Unknown keys, malformed fields, or out-of-range rates raise ValueError.
+    Returns None for None/"" (no fault model at all).
+    """
+    if spec is None or spec == "":
+        return None
+    if isinstance(spec, FaultModel):
+        return spec
+    name, sep, args = spec.partition(":")
+    if sep and name != "faults":
+        raise ValueError(f"unknown fault spec {spec!r}")
+    body = args if sep else spec
+    kw: dict = {}
+    crashes = []
+    for field in body.split(","):
+        key, eq, val = field.partition("=")
+        key, val = key.strip(), val.strip()
+        if not eq or not key or not val:
+            raise ValueError(f"fault spec field {field!r} must be KEY=VALUE")
+        if key in _RATE_KEYS:
+            if key in kw:
+                raise ValueError(f"duplicate fault key {key!r} in {spec!r}")
+            kw[key] = float(val)
+        elif key == "crash":
+            cnt_s, at, start_s = val.partition("@")
+            if not at:
+                raise ValueError(
+                    f"crash plan {val!r} must be COUNT@START (e.g. crash=2@40)")
+            crashes.append((int(cnt_s), float(start_s)))
+        elif key == "crash_dur":
+            if "crash_duration" in kw:
+                raise ValueError(f"duplicate fault key {key!r} in {spec!r}")
+            kw["crash_duration"] = float(val)
+        else:
+            raise ValueError(f"unknown fault key {key!r} in spec {spec!r}")
+    return FaultModel(crashes=tuple(crashes), seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# divergence watchdog
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DivergenceWatchdog:
+    """EMA loss-spike detector + quarantine budget: decides when a run has
+    diverged badly enough to roll back to the last valid checkpoint.
+
+    Trips (observe_chunk returns a reason string) on any of:
+      - a non-finite loss in the chunk (poisoned activations reached the head);
+      - after `warmup` finite observations, a loss exceeding
+        `spike_factor * EMA + margin` (classic divergence);
+      - `skip_limit` or more quarantined (non-finite-grad) updates since the
+        last clean chunk — sustained corruption even when the loss trajectory
+        still looks healthy, because skipped stages silently stop learning.
+
+    `reset()` is called after a rollback: the EMA re-seeds from the restored
+    trajectory rather than comparing it against the diverged one.
+    """
+
+    beta: float = 0.9
+    spike_factor: float = 3.0
+    margin: float = 1.0
+    warmup: int = 5
+    skip_limit: int = 3
+
+    def __post_init__(self):
+        if not 0.0 < self.beta < 1.0:
+            raise ValueError(f"watchdog beta must be in (0, 1), got {self.beta}")
+        if self.spike_factor <= 1.0:
+            raise ValueError(
+                f"watchdog factor must be > 1, got {self.spike_factor}")
+        if self.warmup < 1 or self.skip_limit < 1:
+            raise ValueError("watchdog warmup and skips must be >= 1")
+        self.reset()
+
+    def reset(self):
+        self._ema: Optional[float] = None
+        self._n = 0
+        self._skips = 0
+
+    def observe_chunk(self, losses: Sequence[float],
+                      nonfinite_delta: int = 0) -> Optional[str]:
+        """Feed one chunk of per-tick losses + the chunk's quarantined-update
+        count. Returns a trip reason (roll back now, do NOT checkpoint this
+        chunk) or None (chunk is healthy — safe to checkpoint)."""
+        self._skips += int(nonfinite_delta)
+        if self._skips >= self.skip_limit:
+            reason = f"{self._skips} non-finite updates quarantined"
+            self._skips = 0
+            return reason
+        for loss in losses:
+            loss = float(loss)
+            if not math.isfinite(loss):
+                return f"non-finite loss {loss}"
+            if (self._n >= self.warmup
+                    and loss > self.spike_factor * self._ema + self.margin):
+                return (f"loss spike {loss:.4g} > "
+                        f"{self.spike_factor:g}*EMA({self._ema:.4g})"
+                        f"+{self.margin:g}")
+            self._ema = (loss if self._ema is None
+                         else self.beta * self._ema + (1.0 - self.beta) * loss)
+            self._n += 1
+        if nonfinite_delta == 0:
+            self._skips = 0  # clean chunk: the quarantine budget re-arms
+        return None
+
+
+def make_watchdog(spec) -> Optional[DivergenceWatchdog]:
+    """Parse a watchdog spec: None/""/"off" -> None; "on"/"auto"/"default" ->
+    defaults; else "beta=0.9,factor=3.0,margin=1.0,warmup=5,skips=3" (any
+    subset). Unknown keys raise ValueError."""
+    if spec is None or spec in ("", "off", "none"):
+        return None
+    if isinstance(spec, DivergenceWatchdog):
+        return spec
+    if spec in ("on", "auto", "default"):
+        return DivergenceWatchdog()
+    kw: dict = {}
+    names = {"beta": ("beta", float), "factor": ("spike_factor", float),
+             "margin": ("margin", float), "warmup": ("warmup", int),
+             "skips": ("skip_limit", int)}
+    for field in spec.split(","):
+        key, eq, val = field.partition("=")
+        key, val = key.strip(), val.strip()
+        if not eq or key not in names or not val:
+            raise ValueError(f"unknown watchdog field {field!r} in {spec!r}")
+        dest, cast = names[key]
+        if dest in kw:
+            raise ValueError(f"duplicate watchdog key {key!r} in {spec!r}")
+        kw[dest] = cast(val)
+    return DivergenceWatchdog(**kw)

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import events, staged
+from repro.core import faults as faults_mod
 from repro.core import stash as stash_mod
 from repro.core.engine import AsyncState, AsyncTrainer
 
@@ -75,7 +76,19 @@ class RuntimeCfg:
     # behind `launch/train.py --record-trace` (docs/cli.md, DESIGN.md §10).
     # Each timed op forces a device sync, so leave off unless calibrating.
     record_trace: bool = False
-    seed: int = 0  # forwarded to spec-string delay models
+    seed: int = 0  # forwarded to spec-string delay models and fault models
+    # None -> no fault injection; or a faults.FaultModel / spec string
+    # ("nan_grad=0.01,drop=0.005,crash=2@40", docs/cli.md). An empty model is
+    # treated exactly like None — the bitwise no-op contract (DESIGN.md §11).
+    faults: Optional[object] = None
+    # Message-drop recovery (only consulted when `faults` injects drops):
+    # retransmit after retry_timeout * 2^attempt simulated units; at
+    # escalate_after consecutive drops the destination is presumed hung and a
+    # leave/join outage is synthesized (PR 4's degradation path); a message
+    # dropped more than max_retries times raises instead of spinning forever.
+    retry_timeout: float = 4.0
+    escalate_after: int = 3
+    max_retries: int = 16
 
 
 class _TauGroup:
@@ -126,14 +139,30 @@ class RuntimeResult:
     # memory pressure; bounded by the in-flight caps of the neighbour stages
     # (stage 0's fwd box is the preloaded data source, not a transport buffer)
     mailbox_high_water: tuple = ()
+    # fault-recovery observability (all zero on a fault-free run):
+    # per-stage updates skipped by the non-finite quarantine during this run()
+    nonfinite_skipped: tuple = ()
+    retransmits: int = 0  # messages re-sent after an injected drop
+    duplicates: int = 0  # injected duplicate deliveries absorbed by Mailboxes
+    escalations: int = 0  # hung-stage leave/join outages synthesized
     timeline: Optional[list] = None  # (stage, op, mb, start, end) if recorded
 
 
 _SEED_CT = object()  # last stage's backward seeds its own cotangent
 
 
+def _poison_tree(tree, value: float):
+    """Overwrite every inexact leaf with `value` (NaN/Inf payload corruption);
+    integer leaves (token ids, counters) pass through untouched."""
+    return jax.tree.map(
+        lambda x: (jnp.full_like(x, value)
+                   if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact) else x),
+        tree)
+
+
 class _StageWorker:
-    def __init__(self, idx, params, opt_state, extra, fwd_point, n_updates, K=1):
+    def __init__(self, idx, params, opt_state, extra, fwd_point, n_updates, K=1,
+                 dedupe=False):
         self.idx = idx
         self.params = params
         self.opt = opt_state
@@ -141,8 +170,8 @@ class _StageWorker:
         self.fwd_point = fwd_point  # latest stashed forward point
         self.stash = {}  # mb -> (W_used, tau_obs): PipeDream stash, dict form
         self.carries = {}  # mb -> input carry (VJP linearization point)
-        self.fwd_box = events.Mailbox()
-        self.bwd_box = events.Mailbox()
+        self.fwd_box = events.Mailbox(dedupe=dedupe)
+        self.bwd_box = events.Mailbox(dedupe=dedupe)
         self.next_fwd = 0  # overwritten by the runtime (global mb index)
         self.next_bwd = 0
         self.n_updates = n_updates  # global update count (== engine tick)
@@ -184,8 +213,23 @@ class EventRuntime:
                          if self.rcfg.record_trace else None)
         self.churn = (events.make_churn_model(self.rcfg.churn).validate(self.P)
                       if self.rcfg.churn is not None else None)
+        # fault model: an empty model is normalized to None so the fault-free
+        # path never consults it — the bitwise no-op contract (DESIGN.md §11)
+        fm = faults_mod.make_fault_model(self.rcfg.faults, seed=self.rcfg.seed)
+        self.fm = fm if fm is not None and not fm.is_empty else None
+        if self.fm is not None and self.fm.crashes:
+            # mid-tick worker crashes ride the churn leave/join machinery:
+            # materialize the keyed crash plan as extra outage windows
+            crash = self.fm.crash_outages(self.P)
+            self.churn = (events.ChurnModel(crash) if self.churn is None else
+                          dataclasses.replace(
+                              self.churn,
+                              outages=self.churn.outages + crash)).validate(self.P)
         self._dead = set()  # stages currently left (membership view)
         self._churn_fired = set()  # outage indices already scheduled
+        self._quarantined = set()  # stages under a synthesized hang outage
+        self._retransmits = 0
+        self._escalations = 0
         self._stages = None
         self._clock = 0.0
         self._u_done = 0
@@ -196,7 +240,9 @@ class EventRuntime:
         upstream keeps forwarding through the outage, paying it in stash and
         mailbox memory — and observed tau — instead of a barrier."""
         if self._dead and any(j > s for j in self._dead):
-            if self.churn.slack is None:
+            # no churn model (a faults-escalation synthesized this leave) ==
+            # unbounded slack: nothing configured a memory bound for the outage
+            if self.churn is None or self.churn.slack is None:
                 return float("inf")
             return self.caps[s] + self.churn.slack
         return self.caps[s]
@@ -247,7 +293,8 @@ class EventRuntime:
             fp = stash_mod.get(state.stashes[i], jnp.asarray(t, jnp.int32), 0,
                                like=state.params[i])
             st = _StageWorker(i, state.params[i], state.opt[i], extra, fp, t,
-                              K=self.K)
+                              K=self.K,
+                              dedupe=self.fm is not None and self.fm.dup > 0)
             if rt is not None and "last_tau_group" in rt:
                 st.last_tau_group = tuple(
                     float(x) for x in np.asarray(rt["last_tau_group"]).reshape(-1))
@@ -295,6 +342,12 @@ class EventRuntime:
                            # (lossless provenance for the [P, K] dynamic path)
                            "last_tau_group": jnp.asarray(st.last_tau_group,
                                                          jnp.float32)}
+                if "nonfinite_skipped" in st.extra:
+                    # quarantine provenance rides along with the runtime
+                    # counters (the live counter itself lives in extra proper,
+                    # where the engine's _stage_update maintains it)
+                    e["rt"]["nonfinite_skipped"] = jnp.asarray(
+                        st.extra["nonfinite_skipped"], jnp.int32)
             extras.append(e)
         return AsyncState(jnp.asarray(self._u_done, jnp.int32), tuple(params),
                           tuple(stashes), tuple(opts), tuple(extras))
@@ -355,6 +408,52 @@ class EventRuntime:
             if ent[1] <= 0:
                 del self._tick_batches[u]
 
+    # -- fault-aware transport -------------------------------------------------
+
+    def _nonfinite_host(self) -> tuple:
+        """Per-stage quarantine counters (host ints). Zero for states restored
+        from pre-quarantine checkpoints that lack the counter."""
+        vals = [st.extra.get("nonfinite_skipped") for st in self._stages]
+        if any(v is None for v in vals):
+            return (0,) * self.P
+        return tuple(int(x) for x in jax.device_get(vals))
+
+    def _send(self, q, t, kind, dst, g, payload, attempt=0):
+        """Cross-stage message hand-off through the fault model. With no fault
+        model (or none touching messages) this is exactly `q.push` — the
+        fault-free event order is untouched. An injected drop never loses the
+        message: it is retransmitted after an exponential backoff ("retry"
+        event), keeping simulated time flowing so the loop cannot deadlock;
+        at `escalate_after` consecutive drops the destination is presumed hung
+        and a leave/join outage is synthesized around the retransmit horizon —
+        the bounded-wait escalation that degrades a dead transport into PR 4's
+        churn path (DESIGN.md §11)."""
+        fm = self.fm
+        if fm is None or not fm.affects_messages:
+            q.push(t, kind, dst, g, payload)
+            return
+        op = "bwd" if kind == "bwd_arrive" else "fwd"
+        if fm.drop_hit(op, dst, g, attempt):
+            nxt = attempt + 1
+            if nxt > self.rcfg.max_retries:
+                raise RuntimeError(
+                    f"message {op}:{g} -> stage {dst} dropped {nxt} times "
+                    f"(max_retries={self.rcfg.max_retries})")
+            backoff = self.rcfg.retry_timeout * (2.0 ** attempt)
+            q.push(t + backoff, "retry", dst, g, payload=(kind, payload, nxt))
+            self._retransmits += 1
+            if (nxt == self.rcfg.escalate_after
+                    and dst not in self._quarantined
+                    and self._stages[dst].alive):
+                self._escalations += 1
+                self._quarantined.add(dst)
+                q.push(t, "leave", dst)
+                q.push(t + backoff, "join", dst)
+            return
+        q.push(t, kind, dst, g, payload)
+        if fm.dup_hit(op, dst, g):
+            q.push(t, kind, dst, g, payload)  # Mailbox dedupes + counts
+
     # -- the event loop --------------------------------------------------------
 
     def run(self, batch_fn: Callable[[int], dict], n_ticks: int) -> RuntimeResult:
@@ -375,6 +474,10 @@ class EventRuntime:
         t_start = self._clock
         busy0 = [st.busy_time for st in self._stages]
         out0 = [st.outage_time for st in self._stages]
+        nf0 = self._nonfinite_host()
+        ret0, esc0 = self._retransmits, self._escalations
+        dup0 = sum(st.fwd_box.duplicates + st.bwd_box.duplicates
+                   for st in self._stages)
 
         q = events.EventQueue()
         src = self._stages[0]
@@ -419,27 +522,42 @@ class EventRuntime:
                     st.fwd_box.put(ev.mb, ev.payload)
                 elif ev.kind == "bwd_arrive":
                     st.bwd_box.put(ev.mb, ev.payload)
+                elif ev.kind == "retry":
+                    # retransmit a dropped message (fault injection): re-route
+                    # through _send so a repeat drop backs off / escalates
+                    kind2, payload2, attempt = ev.payload
+                    self._send(q, now, kind2, ev.stage, ev.mb, payload2,
+                               attempt=attempt)
                 elif ev.kind == "leave":
-                    st.alive = False
-                    st.left_at = now
-                    self._dead.add(ev.stage)
-                    fired_leaves.add(ev.payload)
-                    # upstream caps just turned elastic: stages idling at their
-                    # old capacity get no further events (no cotangents flow
-                    # through a dead stage), so re-dispatch them here
-                    touched.update(range(ev.stage))
-                    if self._timeline is not None:
-                        self._timeline.append((ev.stage, "leave", -1, now, now))
+                    if ev.payload is not None:
+                        fired_leaves.add(ev.payload)
+                    # guard: a synthesized hang-escalation leave may race a
+                    # churn window on the same stage — a dead worker stays dead
+                    if st.alive:
+                        st.alive = False
+                        st.left_at = now
+                        self._dead.add(ev.stage)
+                        # upstream caps just turned elastic: stages idling at
+                        # their old capacity get no further events (no
+                        # cotangents flow through a dead stage), so
+                        # re-dispatch them here
+                        touched.update(range(ev.stage))
+                        if self._timeline is not None:
+                            self._timeline.append(
+                                (ev.stage, "leave", -1, now, now))
                 elif ev.kind == "join":
                     # re-adopt the live params: the worker resumes from its own
                     # weights — nothing restages, the buffered backlog replays
                     # and the inflated observed tau flows through _stage_update
-                    st.alive = True
-                    st.outage_time += now - st.left_at
-                    st.busy_until = max(st.busy_until, now)
-                    self._dead.discard(ev.stage)
-                    if self._timeline is not None:
-                        self._timeline.append((ev.stage, "join", -1, now, now))
+                    self._quarantined.discard(ev.stage)
+                    if not st.alive:
+                        st.alive = True
+                        st.outage_time += now - st.left_at
+                        st.busy_until = max(st.busy_until, now)
+                        self._dead.discard(ev.stage)
+                        if self._timeline is not None:
+                            self._timeline.append(
+                                (ev.stage, "join", -1, now, now))
                 touched.add(ev.stage)
             for s in sorted(touched):
                 self._dispatch(s, now, q, g_end)
@@ -494,6 +612,12 @@ class EventRuntime:
             mailbox_high_water=tuple(
                 (st.fwd_box.high_water, st.bwd_box.high_water)
                 for st in self._stages),
+            nonfinite_skipped=tuple(
+                a - b for a, b in zip(self._nonfinite_host(), nf0)),
+            retransmits=self._retransmits - ret0,
+            duplicates=sum(st.fwd_box.duplicates + st.bwd_box.duplicates
+                           for st in self._stages) - dup0,
+            escalations=self._escalations - esc0,
             timeline=self._timeline)
 
     def _dispatch(self, s: int, now: float, q: events.EventQueue, g_end: int):
@@ -518,6 +642,13 @@ class EventRuntime:
             if self.recorder is not None:
                 jax.block_until_ready((gW, ct_in))
                 self.recorder.add(s, "bwd", g, time.perf_counter() - t_host)
+            if self.fm is not None and self.fm.hit("nan_grad", s, g):
+                # payload corruption: this stage's grads AND the outgoing
+                # cotangent go non-finite — every stage the poison reaches
+                # quarantines its update (engine._stage_update isfinite guard)
+                bad = self.fm.poison_value(s, g)
+                gW = _poison_tree(gW, bad)
+                ct_in = _poison_tree(ct_in, bad)
             st.next_bwd += 1
             # accumulate exactly like staged.grad_accum: K == 1 passes grads
             # through untouched; K > 1 casts to f32, sums in order, scales 1/K
@@ -562,8 +693,8 @@ class EventRuntime:
             st.busy_time += lat
             q.push(done, "free", s)
             if s > 0:
-                q.push(done + self.dm.latency(s, "comm_bwd", g),
-                       "bwd_arrive", s - 1, g, ct_in)
+                self._send(q, done + self.dm.latency(s, "comm_bwd", g),
+                           "bwd_arrive", s - 1, g, ct_in)
             else:
                 self._release(g)
             if self._timeline is not None:
@@ -583,6 +714,11 @@ class EventRuntime:
             if self.recorder is not None:
                 jax.block_until_ready(carry_out)
                 self.recorder.add(s, "fwd", g, time.perf_counter() - t_host)
+            if self.fm is not None and self.fm.hit("nan_act", s, g):
+                # activation corruption: downstream forwards (and the loss, if
+                # this is the last stage) go non-finite; the backward from the
+                # poisoned carry produces non-finite grads -> quarantined
+                carry_out = _poison_tree(carry_out, self.fm.poison_value(s, g))
             st.stash[g] = (W, tau_g)
             st.carries[g] = carry_in
             st.max_stash = max(st.max_stash, len(st.stash))
@@ -594,8 +730,8 @@ class EventRuntime:
             st.busy_time += lat
             q.push(done, "free", s)
             if s < self.P - 1:
-                q.push(done + self.dm.latency(s, "comm_fwd", g),
-                       "fwd_arrive", s + 1, g, carry_out)
+                self._send(q, done + self.dm.latency(s, "comm_fwd", g),
+                           "fwd_arrive", s + 1, g, carry_out)
             else:
                 # keep the loss on device — run() gathers them all in ONE
                 # device_get at the drain boundary (a float() here would block
@@ -613,7 +749,8 @@ class EventRuntime:
 
 def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
                       in_flight=None, sync: bool = False, seed: int = 0,
-                      churn=None) -> dict:
+                      churn=None, faults=None, retry_timeout: float = 4.0,
+                      escalate_after: int = 3, max_retries: int = 16) -> dict:
     """Run the runtime's 1F1B event discipline with no tensor math: returns
     {"makespan", "utilization", "taus" (per-update per-stage observed means),
     "tau_groups" (per-update per-stage length-K per-microbatch groups),
@@ -622,9 +759,20 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
     fixed-delay taus equal core/delay.stage_delays and its churn schedules
     match the full runtime event for event (asserted in tests/test_runtime.py);
     used by `launch/dryrun.py --sim-schedule` to estimate straggler / jitter /
-    outage throughput without compiling a model."""
+    outage throughput without compiling a model. `faults` mirrors the schedule-
+    affecting half of `RuntimeCfg.faults` — message drops (retransmit/backoff/
+    hang escalation, same keyed draws as the full runtime, so the two schedules
+    match event for event) and crashes (merged into churn); nan/dup rates do
+    not move the schedule, so the twin stays valid under them too. Adds
+    {"retransmits", "escalations"} to the returned dict."""
     dm = events.make_delay_model(delay_model, seed=seed)
     cm = events.make_churn_model(churn).validate(P) if churn is not None else None
+    fm = faults_mod.make_fault_model(faults, seed=seed)
+    fm = fm if fm is not None and not fm.is_empty else None
+    if fm is not None and fm.crashes:
+        crash = fm.crash_outages(P)
+        cm = (events.ChurnModel(crash) if cm is None else
+              dataclasses.replace(cm, outages=cm.outages + crash)).validate(P)
     if in_flight is not None:
         caps = tuple(int(x) for x in (in_flight if isinstance(in_flight, (tuple, list))
                                       else (in_flight,) * P))
@@ -635,7 +783,8 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
 
     def eff_cap(s):
         if dead and any(j > s for j in dead):
-            return float("inf") if cm.slack is None else caps[s] + cm.slack
+            return (float("inf") if cm is None or cm.slack is None
+                    else caps[s] + cm.slack)
         return caps[s]
 
     class _S:
@@ -646,7 +795,9 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
         def __init__(self):
             self.next_fwd = self.next_bwd = self.n_updates = 0
             self.busy_until = self.busy_time = 0.0
-            self.fwd_box, self.bwd_box = events.Mailbox(), events.Mailbox()
+            dd = fm is not None and fm.dup > 0
+            self.fwd_box, self.bwd_box = (events.Mailbox(dedupe=dd),
+                                          events.Mailbox(dedupe=dd))
             self.stash = set()
             self.acc_tau = _TauGroup(K)  # same K-group helper as EventRuntime
             self.max_stash, self.max_tau = 0, 0.0
@@ -664,6 +815,35 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
             q.push(o.start, "leave", o.stage)
             q.push(o.start + o.duration, "join", o.stage)
     q.push(0.0, "free", 0)
+    counters = {"retransmits": 0, "escalations": 0}
+    quarantined = set()
+
+    def send(t, kind, dst, g, attempt=0):
+        # same drop/retry/escalation discipline (and keyed draws) as
+        # EventRuntime._send, so injected-drop schedules match event for event
+        if fm is None or not fm.affects_messages:
+            q.push(t, kind, dst, g)
+            return
+        op = "bwd" if kind == "bwd_arrive" else "fwd"
+        if fm.drop_hit(op, dst, g, attempt):
+            nxt = attempt + 1
+            if nxt > max_retries:
+                raise RuntimeError(
+                    f"message {op}:{g} -> stage {dst} dropped {nxt} times "
+                    f"(max_retries={max_retries})")
+            backoff = retry_timeout * (2.0 ** attempt)
+            q.push(t + backoff, "retry", dst, g, payload=(kind, nxt))
+            counters["retransmits"] += 1
+            if (nxt == escalate_after and dst not in quarantined
+                    and stages[dst].alive):
+                counters["escalations"] += 1
+                quarantined.add(dst)
+                q.push(t, "leave", dst)
+                q.push(t + backoff, "join", dst)
+            return
+        q.push(t, kind, dst, g)
+        if fm.dup_hit(op, dst, g):
+            q.push(t, kind, dst, g)
 
     def dispatch(s, now):
         st = stages[s]
@@ -686,8 +866,8 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
             st.busy_time += lat
             q.push(st.busy_until, "free", s)
             if s > 0:
-                q.push(st.busy_until + dm.latency(s, "comm_bwd", g),
-                       "bwd_arrive", s - 1, g)
+                send(st.busy_until + dm.latency(s, "comm_bwd", g),
+                     "bwd_arrive", s - 1, g)
             return
         g = st.next_fwd
         if g < g_end and st.fwd_box.ready(g) and st.next_fwd - st.next_bwd < eff_cap(s):
@@ -703,8 +883,8 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
             st.busy_time += lat
             q.push(st.busy_until, "free", s)
             if s < P - 1:
-                q.push(st.busy_until + dm.latency(s, "comm_fwd", g),
-                       "fwd_arrive", s + 1, g)
+                send(st.busy_until + dm.latency(s, "comm_fwd", g),
+                     "fwd_arrive", s + 1, g)
             else:
                 q.push(st.busy_until, "bwd_arrive", s, g)
 
@@ -724,15 +904,21 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
                 st.fwd_box.put(ev.mb, None)
             elif ev.kind == "bwd_arrive":
                 st.bwd_box.put(ev.mb, None)
+            elif ev.kind == "retry":
+                kind2, attempt = ev.payload
+                send(now, kind2, ev.stage, ev.mb, attempt)
             elif ev.kind == "leave":
-                st.alive, st.left_at = False, now
-                dead.add(ev.stage)
-                touched.update(range(ev.stage))  # upstream caps turned elastic
+                if st.alive:
+                    st.alive, st.left_at = False, now
+                    dead.add(ev.stage)
+                    touched.update(range(ev.stage))  # caps turned elastic
             elif ev.kind == "join":
-                st.alive = True
-                st.outage_time += now - st.left_at
-                st.busy_until = max(st.busy_until, now)
-                dead.discard(ev.stage)
+                quarantined.discard(ev.stage)
+                if not st.alive:
+                    st.alive = True
+                    st.outage_time += now - st.left_at
+                    st.busy_until = max(st.busy_until, now)
+                    dead.discard(ev.stage)
             touched.add(ev.stage)
         for s in sorted(touched):
             dispatch(s, now)
@@ -749,6 +935,8 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
         "outage_time": tuple(st.outage_time for st in stages),
         "mailbox_high_water": tuple(
             (st.fwd_box.high_water, st.bwd_box.high_water) for st in stages),
+        "retransmits": counters["retransmits"],
+        "escalations": counters["escalations"],
     }
 
 

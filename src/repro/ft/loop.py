@@ -38,6 +38,10 @@ class LoopResult:
     metrics: list = field(default_factory=list)
     resumed_from: int = -1
     wall_s: float = 0.0
+    # fault-recovery observability (run_event_loop; zero on fault-free runs)
+    nonfinite_skipped: int = 0  # updates skipped by the non-finite quarantine
+    rollbacks: int = 0  # watchdog-triggered checkpoint rollbacks
+    retransmits: int = 0  # dropped messages re-sent by the runtime transport
 
 
 def train_loop(trainer, batch_fn: Callable[[int], dict], steps: int, *,
@@ -55,9 +59,11 @@ def train_loop(trainer, batch_fn: Callable[[int], dict], steps: int, *,
         state = trainer.init(key if key is not None else jax.random.PRNGKey(0))
     start = 0
     if ckpt_dir:
-        path, step0 = ckpt.latest(ckpt_dir)
-        if path is not None:
-            state, meta = ckpt.restore(path, state)
+        # integrity-verified resume: a truncated/corrupt newest checkpoint
+        # falls back to the previous step instead of crashing the run
+        restored, meta, path, _ = ckpt.restore_latest(ckpt_dir, state)
+        if restored is not None:
+            state = restored
             start = meta["step"]
             res.resumed_from = start
     step_fn = trainer.jit_step()

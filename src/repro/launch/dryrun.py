@@ -223,19 +223,20 @@ def run_cell(arch, shape, *, multi_pod=False, method="ours", n_stages=4,
 
 
 def sim_schedule_report(n_stages: int, accum: int, ticks: int, models: list,
-                        churn=None) -> list:
+                        churn=None, faults=None) -> list:
     """Compute-free pipeline-schedule dry-run: run the event runtime's 1F1B
     discipline (core/runtime.simulate_schedule) under each delay model — and
-    optionally a churn (leave/join) schedule — and report makespan / per-stage
-    utilization / observed-staleness envelope / outage + mailbox memory cost:
-    capacity planning for stragglers, jittery links, and elastic membership
-    without compiling a single HLO."""
+    optionally a churn (leave/join) schedule and/or a fault-injection spec —
+    and report makespan / per-stage utilization / observed-staleness envelope /
+    outage + mailbox memory cost / retransmit + escalation counts: capacity
+    planning for stragglers, jittery links, elastic membership, and lossy
+    transports without compiling a single HLO."""
     from repro.core.runtime import simulate_schedule
 
     recs = []
     for spec in models:
         r = simulate_schedule(P=n_stages, K=accum, n_ticks=ticks,
-                              delay_model=spec, churn=churn)
+                              delay_model=spec, churn=churn, faults=faults)
         rec = {
             "delay_model": spec,
             "P": n_stages, "K": accum, "ticks": ticks,
@@ -250,10 +251,15 @@ def sim_schedule_report(n_stages: int, accum: int, ticks: int, models: list,
             # the [P, K] row the engine's per-microbatch replay consumes —
             # under fixed delays this equals delay.stage_mb_delays(P, K)
             rec["steady_tau_groups"] = [list(g) for g in r["tau_groups"][-1]]
-        if churn is not None:
-            rec["churn"] = churn
+        if churn is not None or faults is not None:
             rec["outage_time"] = [round(t, 3) for t in r["outage_time"]]
             rec["mailbox_high_water"] = [list(hw) for hw in r["mailbox_high_water"]]
+        if churn is not None:
+            rec["churn"] = churn
+        if faults is not None:
+            rec["faults"] = faults
+            rec["retransmits"] = r["retransmits"]
+            rec["escalations"] = r["escalations"]
         recs.append(rec)
     return recs
 
@@ -282,6 +288,11 @@ def main():
     ap.add_argument("--sim-churn", default=None,
                     help="leave/join windows STAGE,START,DURATION[/...] applied "
                          "to every --sim-models cell (see core/events.ChurnModel)")
+    ap.add_argument("--sim-faults", default=None,
+                    help="fault-injection spec (drop=P,dup=P,crash=N@T...) "
+                         "applied to every --sim-models cell — message-level "
+                         "faults only; payload faults need real compute "
+                         "(see core/faults.py and docs/cli.md)")
     ap.add_argument("--sim-serve", default=None, metavar="N,RATE",
                     help="compute-free serving dry-run: N Poisson requests at "
                          "RATE req/s through runtime.simulate_serve_schedule "
@@ -314,7 +325,7 @@ def main():
     if args.sim_schedule:
         recs = sim_schedule_report(args.n_stages, args.accum or 1, args.sim_ticks,
                                    args.sim_models.split(";"),
-                                   churn=args.sim_churn)
+                                   churn=args.sim_churn, faults=args.sim_faults)
         for rec in recs:
             print(json.dumps(rec), flush=True)
         if args.out:

@@ -156,6 +156,15 @@ class ServeCfg:
     prefill_bucket: int = 0  # pad prompts up to a multiple of this (0: one page)
     temperature: float = 0.0
     seed: int = 0
+    # service-level controls (0 = unbounded / disabled). A request that cannot
+    # start within ttft_deadline_s is shed from the admission queue; one that
+    # cannot finish within deadline_s of arrival is evicted mid-decode (its
+    # pages return to the pool, its partial tokens are reported); arrivals
+    # beyond max_queue waiting requests are rejected outright. All three are
+    # counted in run()'s return — load shedding is observable, never silent.
+    ttft_deadline_s: float = 0.0
+    deadline_s: float = 0.0
+    max_queue: int = 0
 
 
 class ServeEngine:
@@ -164,6 +173,11 @@ class ServeEngine:
     def __init__(self, params, cfg, scfg: ServeCfg = ServeCfg()):
         if scfg.n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {scfg.n_slots}")
+        if scfg.ttft_deadline_s < 0 or scfg.deadline_s < 0 or scfg.max_queue < 0:
+            raise ValueError(
+                f"deadlines/max_queue must be >= 0 (0 disables), got "
+                f"ttft_deadline_s={scfg.ttft_deadline_s} "
+                f"deadline_s={scfg.deadline_s} max_queue={scfg.max_queue}")
         bucket = scfg.prefill_bucket or scfg.page_size
         if bucket % scfg.page_size:
             raise ValueError(
@@ -266,54 +280,97 @@ class ServeEngine:
         results: dict = {}
         step_times: list = []
         step_tokens: list = []  # active lanes per step = tokens emitted by it
+        n_rejected = n_shed = n_evicted = 0
+        scfg = self.scfg
         t0 = time.perf_counter()
         skew = 0.0  # virtual fast-forward over idle gaps
 
         def now() -> float:
             return time.perf_counter() - t0 + skew
 
-        while q or waiting or self._active.any():
-            # 1) ingest arrivals up to the current clock; if idle, jump ahead
-            if not self._active.any() and not waiting and q:
-                skew = max(skew, q.next_time() - (time.perf_counter() - t0))
-            for ev in q.pop_until(now()):
-                waiting.append(ev.payload)
+        # the finally block is the page-leak firewall: whatever unwinds out of
+        # the loop (an injected decode exception, a KeyboardInterrupt), every
+        # active lane's pages go back to the pool before the stack does —
+        # tests/test_serve.py asserts the pool drains to full after a crash
+        try:
+            while q or waiting or self._active.any():
+                # 1) ingest arrivals up to the current clock; if idle, jump ahead
+                if not self._active.any() and not waiting and q:
+                    skew = max(skew, q.next_time() - (time.perf_counter() - t0))
+                for ev in q.pop_until(now()):
+                    if scfg.max_queue and len(waiting) >= scfg.max_queue:
+                        n_rejected += 1  # bounded queue: counted, not silent
+                        results[ev.payload.rid] = {"rejected": True}
+                        continue
+                    waiting.append(ev.payload)
 
-            # 2) admission: a free lane AND enough free pages (in-flight caps)
-            while waiting:
-                req = waiting[0]
-                free_slots = np.flatnonzero(~self._active)
-                if not free_slots.size:
-                    break
-                ids = self.pool.alloc(self.pages_needed(req))
-                if ids is None:
-                    break
-                waiting.pop(0)
-                slot = int(free_slots[0])
-                self._admit(req, prompts[req.rid], slot, ids, results, now)
+                # 2) shed waiters whose time-to-first-token deadline already
+                # passed — admitting them would burn a prefill on a request the
+                # client has given up on
+                if scfg.ttft_deadline_s:
+                    t_now = now()
+                    still = []
+                    for req in waiting:
+                        if t_now - req.arrival > scfg.ttft_deadline_s:
+                            n_shed += 1
+                            results[req.rid] = {"shed": True,
+                                                "waited_s": t_now - req.arrival}
+                        else:
+                            still.append(req)
+                    waiting = still
 
-            # 3) one continuous-batching decode step over all active lanes
-            if self._active.any():
-                step_tokens.append(int(self._active.sum()))
-                t_step = time.perf_counter()
-                logits, self.caches = self._decode(
-                    self.params, self.caches, jnp.asarray(self._tokens),
-                    self.cfg, jnp.asarray(self._page_table),
-                    jnp.asarray(self._lengths), jnp.asarray(self._active))
-                logits = np.asarray(logits)
-                step_times.append(time.perf_counter() - t_step)
-                t_now = now()
-                for slot in np.flatnonzero(self._active):
-                    st = self._slot_req[slot]
-                    tok = self._sample(logits[slot], st["req"].rid, len(st["tokens"]))
-                    st["tokens"].append(tok)
-                    self._lengths[slot] += 1
-                    self._tokens[slot, 0] = tok
-                    if len(st["tokens"]) >= st["req"].gen_len:
-                        self._retire(int(slot), t_now, results)
+                # 3) admission: a free lane AND enough free pages (in-flight caps)
+                while waiting:
+                    req = waiting[0]
+                    free_slots = np.flatnonzero(~self._active)
+                    if not free_slots.size:
+                        break
+                    ids = self.pool.alloc(self.pages_needed(req))
+                    if ids is None:
+                        break
+                    waiting.pop(0)
+                    slot = int(free_slots[0])
+                    self._admit(req, prompts[req.rid], slot, ids, results, now)
+
+                # 4) one continuous-batching decode step over all active lanes
+                if self._active.any():
+                    step_tokens.append(int(self._active.sum()))
+                    t_step = time.perf_counter()
+                    logits, self.caches = self._decode(
+                        self.params, self.caches, jnp.asarray(self._tokens),
+                        self.cfg, jnp.asarray(self._page_table),
+                        jnp.asarray(self._lengths), jnp.asarray(self._active))
+                    logits = np.asarray(logits)
+                    step_times.append(time.perf_counter() - t_step)
+                    t_now = now()
+                    for slot in np.flatnonzero(self._active):
+                        st = self._slot_req[slot]
+                        tok = self._sample(logits[slot], st["req"].rid,
+                                           len(st["tokens"]))
+                        st["tokens"].append(tok)
+                        self._lengths[slot] += 1
+                        self._tokens[slot, 0] = tok
+                        if len(st["tokens"]) >= st["req"].gen_len:
+                            self._retire(int(slot), t_now, results)
+                        elif (scfg.deadline_s and
+                              t_now - st["req"].arrival > scfg.deadline_s):
+                            # total-latency breach: evict, return the lane and
+                            # its pages, report the partial generation
+                            n_evicted += 1
+                            self._retire(int(slot), t_now, results, evicted=True)
+        finally:
+            for slot in np.flatnonzero(self._active):
+                st = self._slot_req[slot]
+                if st is not None:
+                    self.pool.free(st["pages"])
+                    self._slot_req[slot] = None
+            self._active[:] = False
 
         makespan = now()
-        gen_tokens = sum(len(r["tokens"]) for r in results.values())
+        gen_tokens = sum(len(r["tokens"]) for r in results.values()
+                         if r and "tokens" in r)
+        completed = sum(1 for r in results.values()
+                        if r and "tokens" in r and not r.get("evicted"))
         steady_t = sum(step_times[1:])  # first decode step pays compile
         steady_n = sum(step_tokens[1:])
         return {
@@ -324,6 +381,10 @@ class ServeEngine:
             "steady_tok_s": steady_n / steady_t if steady_t > 0 else float("nan"),
             "decode_steps": len(step_times),
             "step_times_s": step_times,
+            "completed": completed,
+            "rejected": n_rejected,
+            "shed": n_shed,
+            "evicted": n_evicted,
             "pages": {"total": self.pool.n_pages,
                       "high_water": self.pool.high_water},
         }
@@ -352,7 +413,8 @@ class ServeEngine:
         if req.gen_len <= 1:
             self._retire(slot, t_first, results)
 
-    def _retire(self, slot: int, t_done: float, results: dict) -> None:
+    def _retire(self, slot: int, t_done: float, results: dict,
+                evicted: bool = False) -> None:
         st = self._slot_req[slot]
         req = st["req"]
         self.pool.free(st["pages"])
@@ -360,11 +422,13 @@ class ServeEngine:
         self._slot_req[slot] = None
         n_decode = max(len(st["tokens"]) - 1, 1)
         results[req.rid] = {
-            "tokens": st["tokens"],
+            "tokens": st["tokens"],  # partial when evicted
             "ttft_s": st["t_first"] - req.arrival,
             "tpot_s": (t_done - st["t_first"]) / n_decode,
             "done_s": t_done,
         }
+        if evicted:
+            results[req.rid]["evicted"] = True
 
 
 # ---------------------------------------------------------------------------
@@ -429,6 +493,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--pages", type=_positive_int("--pages"), default=64)
     ap.add_argument("--max-pages-per-seq", type=_positive_int("--max-pages-per-seq"),
                     default=8)
+    ap.add_argument("--ttft-deadline-ms", type=float, default=0.0,
+                    help="shed waiting requests that cannot see a first token "
+                         "within this many ms of arrival (0 = no deadline)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="evict requests still decoding this many ms after "
+                         "arrival; pages return to the pool and the partial "
+                         "generation is reported (0 = no deadline)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="reject arrivals beyond this many waiting requests "
+                         "(0 = unbounded admission queue)")
     return ap
 
 
@@ -440,18 +514,26 @@ def main(argv=None):
     if args.engine:
         scfg = ServeCfg(n_slots=args.slots, page_size=args.page_size,
                         n_pages=args.pages, max_pages_per_seq=args.max_pages_per_seq,
-                        temperature=args.temperature, seed=args.seed)
+                        temperature=args.temperature, seed=args.seed,
+                        ttft_deadline_s=args.ttft_deadline_ms / 1e3,
+                        deadline_s=args.deadline_ms / 1e3,
+                        max_queue=args.max_queue)
         trace = events.poisson_trace(
             args.requests, rate=args.rate, seed=args.seed,
             prompt_lens=args.prompt_lens or (args.prompt_len, args.prompt_len),
             gen_lens=args.gen)
         out = ServeEngine(params, cfg, scfg).run(trace)
-        ttfts = sorted(r["ttft_s"] for r in out["results"].values())
-        print(f"served {len(trace)} requests, {out['gen_tokens']} tokens in "
+        # shed/rejected entries never started, so they carry no ttft
+        ttfts = sorted(r["ttft_s"] for r in out["results"].values()
+                       if r and "ttft_s" in r)
+        print(f"served {len(trace)} requests ({out['completed']} completed, "
+              f"{out['evicted']} evicted, {out['shed']} shed, "
+              f"{out['rejected']} rejected), {out['gen_tokens']} tokens in "
               f"{out['makespan_s']:.2f}s ({out['tok_s']:.1f} tok/s; steady "
               f"{out['steady_tok_s']:.1f} tok/s)")
-        print(f"ttft p50 {ttfts[len(ttfts) // 2]:.3f}s  max {ttfts[-1]:.3f}s; "
-              f"pages high-water {out['pages']['high_water']}/{out['pages']['total']}")
+        if ttfts:
+            print(f"ttft p50 {ttfts[len(ttfts) // 2]:.3f}s  max {ttfts[-1]:.3f}s; "
+                  f"pages high-water {out['pages']['high_water']}/{out['pages']['total']}")
         return
     gen_len = args.gen[0]
     t0 = time.perf_counter()

@@ -35,7 +35,8 @@ from repro.ft import loop as ftloop
 
 def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None,
                    churn=None, seed=0, ckpt_dir=None, ckpt_every=0, log_every=0,
-                   record_trace=None, log_fn=print):
+                   record_trace=None, faults=None, watchdog=None,
+                   max_rollbacks=8, log_fn=print):
     """Event-runtime counterpart of ft.loop.train_loop: resume + periodic ckpt.
 
     churn: optional events.ChurnModel / spec ("STAGE,START,DURATION[/...]") of
@@ -48,32 +49,53 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
     TraceDelay JSON schema at the end of the run (docs/cli.md). The first
     tick's samples pay JAX compilation (seconds vs steady-state milliseconds)
     and would replay as a recurring op cost, so the recorder is reset after a
-    one-tick warmup chunk — training itself is unaffected."""
+    one-tick warmup chunk — training itself is unaffected.
+
+    faults: optional faults.FaultModel / spec ("nan_grad=0.01,drop=0.005,
+    crash=2@40", docs/cli.md) injected into the runtime. watchdog: optional
+    faults.DivergenceWatchdog / spec; requires ckpt_dir + ckpt_every. Each
+    checkpoint chunk's losses + quarantine counters feed the watchdog BEFORE
+    the chunk is checkpointed; on a trip the chunk is discarded — the loop
+    rolls back to the newest checkpoint that passes integrity verification
+    (checkpoint.restore_latest), re-derives stash/tau state via
+    checkpoint.restage, bumps the fault model's epoch (transient faults
+    re-sample on replay rather than deterministically re-firing), and resumes.
+    More than max_rollbacks rollbacks raises — a divergence the rollback
+    cannot clear should fail loudly, not loop forever (DESIGN.md §11)."""
     from repro.checkpoint import checkpoint as ckpt
+    from repro.core import faults as faults_mod
     from repro.core.runtime import EventRuntime, RuntimeCfg
 
     import math
 
+    fm = faults_mod.make_fault_model(faults, seed=seed)
+    wd = faults_mod.make_watchdog(watchdog)
+    if wd is not None and not (ckpt_dir and ckpt_every):
+        raise ValueError("watchdog rollback requires ckpt_dir + ckpt_every "
+                         "(it restores the last valid checkpoint)")
     rt = EventRuntime(trainer, RuntimeCfg(delay_model=delay_model,
                                           in_flight=in_flight, churn=churn,
                                           record_trace=bool(record_trace),
-                                          seed=seed))
+                                          seed=seed, faults=fm))
     rt.init(jax.random.PRNGKey(seed))
     resumed_from = -1
     if ckpt_dir:
-        path, step0 = ckpt.latest(ckpt_dir)
-        if path is not None:
-            # restore against the runtime-counter-free template so checkpoints
-            # written by EITHER execution path load (the jit engine's ckpts have
-            # no extra['rt']; init_from_state treats it as optional either way —
-            # only the simulated clock resets when resuming a jit-engine ckpt)
-            restored, meta = ckpt.restore(
-                path, rt.export_state(include_runtime=False))
+        # restore against the runtime-counter-free template so checkpoints
+        # written by EITHER execution path load (the jit engine's ckpts have
+        # no extra['rt']; init_from_state treats it as optional either way —
+        # only the simulated clock resets when resuming a jit-engine ckpt).
+        # restore_latest steps past truncated/corrupt files (DESIGN.md §11).
+        restored, meta, _, _ = ckpt.restore_latest(
+            ckpt_dir, rt.export_state(include_runtime=False))
+        if restored is not None:
             rt.init_from_state(restored)
             resumed_from = meta["step"]
     res = ftloop.LoopResult(resumed_from=resumed_from)
     t0 = time.time()
     done = rt._u_done
+    if wd is not None and done < steps:
+        # guarantee a rollback target exists before the first faulty chunk
+        ckpt.save_step(ckpt_dir, rt.export_state(), done)
     # chunk at the gcd of the cadences so `done` lands exactly on every
     # checkpoint/log boundary; save/log only on their own boundaries
     cadence = math.gcd(ckpt_every if ckpt_dir else 0, log_every) or 25
@@ -89,12 +111,46 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
             if rt._u_done < steps:  # keep the only samples of a 1-tick run
                 rt.reset_recorder()
             warmed = True
+        chunk_skips = sum(r.nonfinite_skipped)
+        res.nonfinite_skipped += chunk_skips
+        res.retransmits += r.retransmits
+        trip = (wd.observe_chunk(r.losses, chunk_skips)
+                if wd is not None else None)
+        if trip is not None:
+            # rollback: this chunk's trajectory is discarded (never saved, and
+            # its losses stay out of res); resume from the last valid ckpt
+            res.rollbacks += 1
+            if res.rollbacks > max_rollbacks:
+                raise RuntimeError(
+                    f"watchdog tripped {res.rollbacks} times "
+                    f"(max_rollbacks={max_rollbacks}); last reason: {trip}")
+            if fm is not None:
+                fm.epoch += 1  # injected faults are transient: re-sample
+            state, meta, path, step = ckpt.restore_latest(
+                ckpt_dir, rt.export_state(include_runtime=False))
+            if state is None:
+                raise RuntimeError(
+                    f"watchdog tripped ({trip}) but no valid checkpoint "
+                    f"remains in {ckpt_dir}")
+            # restage re-derives stash/tau state from the restored weights
+            # (staleness history resets — the documented elastic-event
+            # behaviour) and zeroes the quarantine counters
+            rt.init_from_state(ckpt.restage(state, trainer, trainer))
+            wd.reset()
+            done = rt._u_done
+            log_fn(f"watchdog: {trip}; rolled back to step {step} "
+                   f"(rollback {res.rollbacks}/{max_rollbacks})")
+            continue
         res.losses.extend(r.losses)
         res.metrics.extend(r.metrics)
         done = rt._u_done
         at_end = done >= steps
         if ckpt_dir and ckpt_every and (done % ckpt_every == 0 or at_end):
             ckpt.save_step(ckpt_dir, rt.export_state(), done)
+            if fm is not None and fm.ckpt_trunc > 0:
+                p = os.path.join(ckpt_dir, f"ckpt-{done}.npz")
+                if fm.maybe_truncate_checkpoint(p, done):
+                    log_fn(f"faults: truncated {p} (ckpt_trunc injection)")
         if log_every and (done % log_every == 0 or at_end):
             # at K > 1 the per-stage mean is fractional; show the per-microbatch
             # group (the lossless form the engine's [P, K] dynamic path replays)
@@ -159,6 +215,18 @@ def main():
                          "trace:PATH or dryrun --sim-models trace:PATH; "
                          "see docs/cli.md)")
     ap.add_argument("--max-dynamic-delay", type=int, default=None)
+    ap.add_argument("--faults", default=None,
+                    help="event runtime fault injection: "
+                         "nan_grad=P,nan_act=P,drop=P,dup=P,ckpt_trunc=P,"
+                         "crash=N@T[,crash=N@T...][,crash_dur=S] "
+                         "(keyed-deterministic; see docs/cli.md)")
+    ap.add_argument("--watchdog", default="auto",
+                    help="divergence watchdog: 'auto' (on iff --faults and "
+                         "--ckpt-dir), 'on', 'off', or "
+                         "beta=B,factor=F,margin=M,warmup=W,skips=S; trips "
+                         "roll back to the last valid checkpoint")
+    ap.add_argument("--max-rollbacks", type=int, default=8,
+                    help="abort after this many watchdog rollbacks")
     args = ap.parse_args()
 
     if args.record_trace and args.runtime != "event":
@@ -167,6 +235,17 @@ def main():
                  "boundary to time)")
     if args.churn_slack is not None and not args.churn:
         ap.error("--churn-slack requires --churn")
+    if args.faults and args.runtime != "event":
+        ap.error("--faults requires --runtime event (injection happens at the "
+                 "event runtime's message/dispatch boundaries)")
+    watchdog = args.watchdog
+    if watchdog == "auto":
+        watchdog = "on" if (args.faults and args.ckpt_dir) else None
+    elif watchdog in ("off", "none", ""):
+        watchdog = None
+    if watchdog is not None and not (args.ckpt_dir and args.ckpt_every):
+        ap.error("--watchdog needs --ckpt-dir and --ckpt-every > 0 "
+                 "(rollback restores the last valid checkpoint)")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     seq = args.seq or (64 if args.reduced else 512)
@@ -184,7 +263,9 @@ def main():
             trainer, batch_fn, args.steps, delay_model=args.delay_model,
             in_flight=args.in_flight, churn=churn, seed=args.seed,
             ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-            log_every=args.log_every, record_trace=args.record_trace)
+            log_every=args.log_every, record_trace=args.record_trace,
+            faults=args.faults, watchdog=watchdog,
+            max_rollbacks=args.max_rollbacks)
     else:
         state, res = ftloop.train_loop(
             trainer, batch_fn, args.steps, ckpt_dir=args.ckpt_dir,
@@ -193,6 +274,9 @@ def main():
     last = f"{res.losses[-1]:.4f}" if res.losses else "n/a (resumed at/after --steps)"
     print(f"final loss: {last}  (entropy floor ~{src.entropy_floor():.3f}, "
           f"{res.wall_s:.1f}s, resumed_from={res.resumed_from})")
+    if res.nonfinite_skipped or res.rollbacks or res.retransmits:
+        print(f"recovery: nonfinite_skipped={res.nonfinite_skipped} "
+              f"rollbacks={res.rollbacks} retransmits={res.retransmits}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"losses": res.losses, "metrics": res.metrics}, f)

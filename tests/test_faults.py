@@ -1,0 +1,377 @@
+"""Fault-injection + self-healing suite (DESIGN.md §11).
+
+Covers the four recovery layers against the faults core/faults.py injects:
+keyed-deterministic fault sampling and the spec grammar; the empty-model
+bitwise no-op contract; non-finite quarantine in the engine update; message
+drop/dup recovery (retransmit-with-backoff, Mailbox dedupe, escalation to the
+churn outage path); checkpoint integrity (checksums, torn-write fallback,
+tolerant retention) and crash-consistent resume; and the divergence watchdog's
+rollback loop end to end.
+"""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import get_config
+from repro.core import faults
+from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.core.events import ChurnModel, Mailbox
+from repro.core.runtime import EventRuntime, RuntimeCfg, simulate_schedule
+from repro.launch.train import run_event_loop
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("nanogpt_134m", reduced=True)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 4, 33), 0, cfg.vocab_size)
+    batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    return cfg, params, batch
+
+
+def _ecfg(**kw):
+    kw.setdefault("n_stages", 4)
+    kw.setdefault("lr", 1e-3)
+    kw.setdefault("constant_lr", True)
+    kw.setdefault("collect_metrics", False)
+    return EngineCfg(**kw)
+
+
+# ---- spec grammar + keyed determinism ---------------------------------------
+
+
+def test_fault_spec_grammar():
+    fm = faults.make_fault_model("faults:nan_grad=0.01,drop=0.005,crash=2@40")
+    assert fm.nan_grad == 0.01 and fm.drop == 0.005
+    assert fm.crashes == ((2, 40.0),) and not fm.is_empty
+    # bare (untagged) form, repeated crash plans, crash_dur
+    fm2 = faults.make_fault_model("crash=1@5,crash=3@90,crash_dur=2.5,dup=0.1")
+    assert fm2.crashes == ((1, 5.0), (3, 90.0)) and fm2.crash_duration == 2.5
+    assert faults.make_fault_model(None) is None
+    assert faults.make_fault_model("") is None
+    assert faults.make_fault_model(fm) is fm  # passthrough
+    for bad in ("bogus=0.1", "nan_grad=2.0", "nan_grad", "drop=0.1,drop=0.2",
+                "crash=40", "other:nan_grad=0.1", "crash=0@5"):
+        with pytest.raises(ValueError):
+            faults.make_fault_model(bad)
+
+
+def test_fault_draws_are_keyed_not_stateful():
+    """Same (seed, epoch, kind, stage, mb, attempt) -> same draw, in any call
+    order; epoch re-salts every draw (the transient-fault rollback contract)."""
+    a = faults.FaultModel(nan_grad=0.5, drop=0.5, seed=7)
+    b = faults.FaultModel(nan_grad=0.5, drop=0.5, seed=7)
+    keys = [(s, m) for s in range(4) for m in range(32)]
+    hits_a = [a.hit("nan_grad", s, m) for s, m in keys]
+    hits_b = [b.hit("nan_grad", s, m) for s, m in reversed(keys)]
+    assert hits_a == list(reversed(hits_b))
+    assert any(hits_a) and not all(hits_a)
+    # fwd/bwd edges draw independently; attempts re-draw
+    assert any(a.drop_hit("fwd", s, m, 0) != a.drop_hit("bwd", s, m, 0)
+               for s, m in keys)
+    assert any(a.drop_hit("fwd", s, m, 0) != a.drop_hit("fwd", s, m, 1)
+               for s, m in keys)
+    b.epoch = 1
+    assert hits_a != [b.hit("nan_grad", s, m) for s, m in keys]
+    # poison values cover both non-finite classes
+    vals = {a.poison_value(s, m) for s, m in keys}
+    assert any(math.isnan(v) for v in vals) and math.inf in vals
+
+
+def test_crash_outages_map_onto_churn():
+    fm = faults.FaultModel(crashes=((3, 10.0),), crash_duration=4.0, seed=1)
+    outs = fm.crash_outages(P=4)
+    assert len(outs) == 3
+    assert all(0 <= o.stage < 4 for o in outs)
+    assert all(o.duration == 4.0 for o in outs)
+    # staggered: validates as a churn plan even if one stage is hit twice
+    ChurnModel(outs).validate(4)
+    assert fm.crash_outages(P=4) == outs  # deterministic
+
+
+# ---- divergence watchdog -----------------------------------------------------
+
+
+def test_watchdog_spec():
+    assert faults.make_watchdog(None) is None
+    assert faults.make_watchdog("off") is None
+    wd = faults.make_watchdog("on")
+    assert isinstance(wd, faults.DivergenceWatchdog)
+    wd2 = faults.make_watchdog("factor=5,skips=1,warmup=2")
+    assert wd2.spike_factor == 5.0 and wd2.skip_limit == 1 and wd2.warmup == 2
+    assert faults.make_watchdog(wd) is wd
+    for bad in ("bogus=1", "factor=0.5", "beta=1.5", "factor=3,factor=4"):
+        with pytest.raises(ValueError):
+            faults.make_watchdog(bad)
+
+
+def test_watchdog_trips():
+    wd = faults.DivergenceWatchdog(beta=0.5, spike_factor=2.0, margin=0.1,
+                                   warmup=3, skip_limit=2)
+    # steady losses: no trip, EMA warms up
+    assert wd.observe_chunk([1.0, 1.0, 1.0, 1.0]) is None
+    # spike after warmup
+    assert "spike" in wd.observe_chunk([1.0, 5.0])
+    wd.reset()
+    # within warmup the same spike is tolerated (EMA still seeding)
+    assert wd.observe_chunk([1.0, 5.0]) is None
+    wd.reset()
+    # non-finite loss trips immediately
+    assert "non-finite" in wd.observe_chunk([1.0, float("nan")])
+    wd.reset()
+    # quarantine budget: accumulates across dirty chunks, resets on clean ones
+    assert wd.observe_chunk([1.0], nonfinite_delta=1) is None
+    assert "quarantined" in wd.observe_chunk([1.0], nonfinite_delta=1)
+    assert wd.observe_chunk([1.0], nonfinite_delta=1) is None  # reset by trip
+    assert wd.observe_chunk([1.0], nonfinite_delta=0) is None  # clean: budget clears
+    assert wd.observe_chunk([1.0], nonfinite_delta=1) is None
+
+
+# ---- message faults: Mailbox dedupe + sim-level recovery --------------------
+
+
+def test_mailbox_strict_vs_dedupe():
+    box = Mailbox()
+    box.put(0, "x")
+    with pytest.raises(RuntimeError):
+        box.put(0, "y")  # strict mode: duplicate delivery is a protocol bug
+    dbox = Mailbox(dedupe=True)
+    dbox.put(0, "x")
+    dbox.put(0, "y")           # duplicate of a buffered message
+    assert dbox.take(0) == "x"
+    dbox.put(0, "z")           # duplicate of an already-consumed message
+    assert dbox.duplicates == 2
+    dbox.put(1, "w")
+    assert dbox.take(1) == "w"
+
+
+def test_sim_drop_recovers_by_retransmit():
+    base = simulate_schedule(P=4, n_ticks=30)
+    lossy = simulate_schedule(P=4, n_ticks=30, faults="drop=0.1,dup=0.1")
+    assert lossy["retransmits"] > 0
+    # every tick still completes; drops cost time, never progress
+    assert len(lossy["taus"]) == 30
+    assert lossy["makespan"] > base["makespan"]
+    # keyed: the same spec replays identically
+    again = simulate_schedule(P=4, n_ticks=30, faults="drop=0.1,dup=0.1")
+    assert again["retransmits"] == lossy["retransmits"]
+    assert again["makespan"] == lossy["makespan"]
+
+
+def test_sim_persistent_drop_escalates_to_outage():
+    """A stage the transport repeatedly cannot reach is escalated into a
+    synthesized leave/join (the PR 4 outage path) instead of deadlocking."""
+    r = simulate_schedule(P=4, n_ticks=20, faults="drop=0.45",
+                          retry_timeout=2.0, escalate_after=2)
+    assert r["escalations"] >= 1
+    assert max(r["outage_time"]) > 0.0  # the synthesized window was paid
+    assert len(r["taus"]) == 20         # and the run still completed
+
+
+def test_sim_empty_fault_model_is_noop():
+    base = simulate_schedule(P=4, n_ticks=25)
+    empty = simulate_schedule(P=4, n_ticks=25, faults=faults.FaultModel())
+    assert empty["makespan"] == base["makespan"]
+    assert empty["taus"] == base["taus"]
+    assert empty["retransmits"] == 0 and empty["escalations"] == 0
+
+
+# ---- checkpoint integrity ----------------------------------------------------
+
+
+def _tiny_state(scale=1.0):
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4) * scale,
+            "b": np.ones(5, np.float32) * scale}
+
+
+def test_save_writes_checksums_and_roundtrips(tmp_path):
+    p = str(tmp_path / "ckpt-1.npz")
+    ckpt.save(p, _tiny_state(), 1)
+    state, meta = ckpt.restore(p, _tiny_state(0.0))
+    assert meta["step"] == 1
+    assert set(meta["crc32"]) == {"['w']", "['b']"}
+    np.testing.assert_array_equal(np.asarray(state["w"]), _tiny_state()["w"])
+
+
+def test_truncated_newest_falls_back_to_previous(tmp_path):
+    d = str(tmp_path)
+    for step in (5, 10):
+        ckpt.save_step(d, _tiny_state(float(step)), step)
+    newest = os.path.join(d, "ckpt-10.npz")
+    size = os.path.getsize(newest)
+    with open(newest, "r+b") as f:
+        f.truncate(size // 2)  # torn write
+    path, step = ckpt.latest(d)
+    assert step == 5  # cheap probe already skips the torn file
+    state, meta, path, step = ckpt.restore_latest(d, _tiny_state(0.0))
+    assert step == 5 and meta["step"] == 5
+    np.testing.assert_array_equal(np.asarray(state["w"]), _tiny_state(5.0)["w"])
+
+
+def test_bitflip_detected_and_skipped(tmp_path):
+    d = str(tmp_path)
+    for step in (1, 2):
+        ckpt.save_step(d, _tiny_state(float(step)), step)
+    newest = os.path.join(d, "ckpt-2.npz")
+    blob = bytearray(open(newest, "rb").read())
+    # flip a byte inside the array payload region (past the zip local header)
+    blob[len(blob) // 2] ^= 0xFF
+    open(newest, "wb").write(bytes(blob))
+    with pytest.raises(Exception):  # CorruptCheckpointError or zip-layer CRC
+        ckpt.restore(newest, _tiny_state(0.0))
+    state, meta, _, step = ckpt.restore_latest(d, _tiny_state(0.0))
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(state["w"]), _tiny_state(1.0)["w"])
+
+
+def test_nothing_restorable_returns_none(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_step(d, _tiny_state(), 3)
+    with open(os.path.join(d, "ckpt-3.npz"), "r+b") as f:
+        f.truncate(1)
+    assert ckpt.latest(d) == (None, -1)
+    assert ckpt.restore_latest(d, _tiny_state(0.0)) == (None, None, None, -1)
+
+
+def test_retention_survives_remove_failure(tmp_path, monkeypatch):
+    """A concurrently-deleted / permission-locked stale checkpoint must not
+    kill the training loop: retention logs and continues."""
+    d = str(tmp_path)
+    for step in range(1, 5):
+        ckpt.save_step(d, _tiny_state(), step, keep=2)
+
+    def deny(path):
+        raise OSError(13, "Permission denied", path)
+
+    monkeypatch.setattr(os, "remove", deny)
+    ckpt.save_step(d, _tiny_state(), 5, keep=2)  # must not raise
+    assert os.path.exists(os.path.join(d, "ckpt-5.npz"))
+
+
+def test_maybe_truncate_checkpoint_keyed(tmp_path):
+    p = str(tmp_path / "ckpt-7.npz")
+    ckpt.save(p, _tiny_state(), 7)
+    size = os.path.getsize(p)
+    assert not faults.FaultModel(ckpt_trunc=0.0).maybe_truncate_checkpoint(p, 7)
+    assert os.path.getsize(p) == size
+    assert faults.FaultModel(ckpt_trunc=1.0).maybe_truncate_checkpoint(p, 7)
+    assert os.path.getsize(p) == size // 2
+    assert not ckpt._readable(p)
+
+
+# ---- runtime e2e: quarantine, transport recovery, no-op contract ------------
+
+
+def test_zero_rate_fault_model_is_bitwise_noop_at_k4(setup):
+    """FaultModel() must leave the K=4 event-runtime trajectory bit-identical
+    to faults=None: the runtime never consults an empty model."""
+    cfg, params, _ = setup
+    toks = jax.random.randint(jax.random.PRNGKey(2), (4, 2, 33), 0,
+                              cfg.vocab_size)
+    kbatch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    ecfg = _ecfg(update_interval=4)
+    runs = {}
+    for tag, fm in (("none", None), ("empty", faults.FaultModel())):
+        rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"),
+                          RuntimeCfg(faults=fm))
+        rt.init_from_params(params)
+        res = rt.run(lambda t: kbatch, 6)
+        runs[tag] = (res, rt.export_state(include_runtime=False))
+    assert runs["none"][0].losses == runs["empty"][0].losses  # exact, not allclose
+    assert runs["none"][0].taus == runs["empty"][0].taus
+    assert runs["empty"][0].retransmits == 0
+    assert runs["empty"][0].duplicates == 0
+    for a, b in zip(jax.tree.leaves(runs["none"][1].params),
+                    jax.tree.leaves(runs["empty"][1].params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nan_grad_quarantine_keeps_run_finite(setup):
+    cfg, params, batch = setup
+    rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                      RuntimeCfg(faults="nan_grad=0.3"))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 8)
+    assert sum(res.nonfinite_skipped) > 0
+    assert all(math.isfinite(l) for l in res.losses)
+    state = rt.export_state()
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    # the per-stage counters ride along in the checkpointable state
+    assert tuple(int(e["rt"]["nonfinite_skipped"]) for e in state.extra) == \
+        res.nonfinite_skipped
+
+
+def test_runtime_drop_dup_recovery_matches_sim_twin(setup):
+    """Message faults on the real runtime: retransmits keep every tick
+    completing, duplicates are absorbed, and the compute-free twin predicts
+    the transport behaviour event for event."""
+    cfg, params, batch = setup
+    spec = "drop=0.15,dup=0.2"
+    rt = EventRuntime(AsyncTrainer(cfg, _ecfg(), "ours"),
+                      RuntimeCfg(faults=spec))
+    rt.init_from_params(params)
+    res = rt.run(lambda t: batch, 8)
+    assert len(res.losses) == 8
+    assert all(math.isfinite(l) for l in res.losses)
+    assert res.retransmits > 0 and res.duplicates > 0
+    sim = simulate_schedule(P=4, n_ticks=8, faults=spec)
+    assert sim["retransmits"] == res.retransmits
+    assert [tuple(t) for t in sim["taus"]] == [tuple(t) for t in res.taus]
+
+
+# ---- crash consistency + watchdog rollback e2e ------------------------------
+
+
+def test_resume_after_torn_checkpoint_matches_baseline(setup, tmp_path):
+    """Crash-consistency: run 10 ticks checkpointing every 5, tear the newest
+    checkpoint, resume. The resumed run must restart from step 5 and replay
+    ticks 6-10 to the same trajectory as the never-crashed run."""
+    cfg, params, batch = setup
+    d = str(tmp_path / "ck")
+
+    def fresh():
+        tr = AsyncTrainer(cfg, _ecfg(), "ours")
+        # deterministic init shared across runs via the module fixture params
+        return tr
+
+    _, res1 = run_event_loop(fresh(), lambda t: batch, 10, seed=0,
+                             ckpt_dir=d, ckpt_every=5, log_fn=lambda *_: None)
+    assert res1.resumed_from == -1 and len(res1.losses) == 10
+    newest = os.path.join(d, "ckpt-10.npz")
+    with open(newest, "r+b") as f:
+        f.truncate(os.path.getsize(newest) // 2)
+    _, res2 = run_event_loop(fresh(), lambda t: batch, 10, seed=0,
+                             ckpt_dir=d, ckpt_every=5, log_fn=lambda *_: None)
+    assert res2.resumed_from == 5
+    assert len(res2.losses) == 5  # replays exactly ticks 6..10
+    dl = np.abs(np.asarray(res2.losses) - np.asarray(res1.losses[5:]))
+    # PR 4 rejoin tolerance: the replay is fp-close, not bit-identical, since
+    # jit_step init/restage ordering differs from the uninterrupted trajectory
+    assert dl.max() < 0.4 and dl.mean() < 0.2, res2.losses
+
+
+def test_watchdog_rollback_reaches_final_step(setup, tmp_path):
+    """The acceptance chaos run in miniature: nan_grad + a crash, one
+    invocation, must reach the final tick with quarantined updates and at
+    least one watchdog rollback, ending at a finite loss."""
+    cfg, params, batch = setup
+    # nan_grad=0.02 @ seed 0 is a pinned schedule: epoch 0 poisons exactly
+    # (tick 0, stage 0); the rollback's epoch bump re-samples to a clean run
+    rt, res = run_event_loop(
+        AsyncTrainer(cfg, _ecfg(), "ours"), lambda t: batch, 8, seed=0,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=4,
+        faults="nan_grad=0.02,crash=1@6",
+        watchdog="warmup=3,skips=1", max_rollbacks=5,
+        log_fn=lambda *_: None)
+    assert rt._u_done >= 8
+    assert len(res.losses) == 8
+    assert res.nonfinite_skipped > 0
+    assert res.rollbacks >= 1
+    assert all(math.isfinite(l) for l in res.losses)

@@ -205,6 +205,85 @@ def test_page_reuse_bounds_high_water(setup):
 
 
 # ---------------------------------------------------------------------------
+# Deadlines, load shedding, and leak freedom (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_eviction_returns_pages(setup):
+    """A request that cannot finish within deadline_s is evicted mid-decode:
+    its partial tokens are reported, its lane and pages are reusable, and the
+    pool drains to empty at the end."""
+    cfg, params, _ = setup
+    scfg = serve.ServeCfg(n_slots=2, page_size=4, n_pages=16,
+                          max_pages_per_seq=8, deadline_s=1e-5)
+    eng = serve.ServeEngine(params, cfg, scfg)
+    reqs = [events.Request(rid=i, arrival=0.0, prompt_len=4, gen_len=12)
+            for i in range(4)]
+    out = eng.run(reqs)
+    assert out["evicted"] >= 1
+    for r in out["results"].values():
+        if r.get("evicted"):
+            # partial generation, with real latency metrics
+            assert 1 <= len(r["tokens"]) < 12
+            assert np.isfinite(r["ttft_s"])
+    assert eng.pool.free_pages == scfg.n_pages
+    assert not eng._active.any()
+
+
+def test_ttft_shed_and_queue_rejection(setup):
+    """Waiters past the ttft deadline are shed (no prefill burned); arrivals
+    beyond max_queue are rejected. Both are counted, carry no latency metrics,
+    and leak nothing."""
+    cfg, params, _ = setup
+    scfg = serve.ServeCfg(n_slots=1, page_size=4, n_pages=8,
+                          max_pages_per_seq=4, ttft_deadline_s=1e-6)
+    eng = serve.ServeEngine(params, cfg, scfg)
+    reqs = [events.Request(rid=i, arrival=0.0, prompt_len=4, gen_len=4)
+            for i in range(4)]
+    out = eng.run(reqs)
+    assert out["shed"] >= 1
+    for r in out["results"].values():
+        if r.get("shed") or r.get("rejected"):
+            assert "ttft_s" not in r and "tokens" not in r
+    assert eng.pool.free_pages == scfg.n_pages
+
+    scfg2 = serve.ServeCfg(n_slots=1, page_size=4, n_pages=8,
+                           max_pages_per_seq=4, max_queue=1)
+    eng2 = serve.ServeEngine(params, cfg, scfg2)
+    out2 = eng2.run([events.Request(rid=i, arrival=0.0, prompt_len=4, gen_len=2)
+                     for i in range(5)])
+    assert out2["rejected"] >= 1
+    assert out2["completed"] + out2["rejected"] == 5
+    assert eng2.pool.free_pages == scfg2.n_pages
+
+
+def test_decode_exception_cannot_leak_pages(setup):
+    """An exception unwinding out of mid-decode (injected fault, interrupt)
+    must return every active lane's pages on the way out: the try/finally in
+    ServeEngine.run is the leak firewall."""
+    cfg, params, _ = setup
+    scfg = serve.ServeCfg(n_slots=2, page_size=4, n_pages=16,
+                          max_pages_per_seq=4)
+    eng = serve.ServeEngine(params, cfg, scfg)
+    orig, calls = eng._decode, {"n": 0}
+
+    def boom(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected decode fault")
+        return orig(*a, **kw)
+
+    eng._decode = boom
+    reqs = [events.Request(rid=i, arrival=0.0, prompt_len=4, gen_len=6)
+            for i in range(3)]
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.run(reqs)
+    assert eng.pool.free_pages == scfg.n_pages
+    assert not eng._active.any()
+    assert all(s is None for s in eng._slot_req)
+
+
+# ---------------------------------------------------------------------------
 # Load generator: keyed Poisson traces
 # ---------------------------------------------------------------------------
 
