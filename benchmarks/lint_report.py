@@ -1,0 +1,32 @@
+"""Bench section: run repro-lint and persist artifacts/LINT_report.json.
+
+Keeps the lint status (rule counts, suppressions in use) in the bench
+trajectory so suppression-count growth is visible run over run, the same
+way perf numbers are.  Prints the standard ``name,value,derived`` CSV row.
+"""
+import os
+
+import common
+
+from repro.analysis import engine as lint_engine
+from repro.analysis.lint import build_report
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> dict:
+    result = lint_engine.lint_tree(ROOT)
+    payload = build_report(result, ROOT)
+    common.save_json("LINT_report.json", payload)
+    counts = ",".join(f"{k}:{v}" for k, v in sorted(result.counts().items()))
+    print(f"lint_findings,{len(result.findings)},[{counts}]")
+    print(f"lint_suppressions,{len(result.suppressions)},"
+          f"{[s.rule for s in result.suppressions]}")
+    if result.findings:
+        for f in result.findings:
+            print(f"# LINT {f.render()}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,10 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     steps = 60 if args.quick else args.steps
 
+    from repro.analysis import sanitize
+    sanitize.apply(verbose=True)
+
+    import lint_report
     import kernel_bench
     import runtime_bench
     import table1_methods
@@ -31,6 +35,8 @@ def main() -> None:
     import roofline_report
     import serve_bench
 
+    print("# === repro-lint: static invariants (artifacts/LINT_report.json) ===")
+    lint_report.main()
     print("# === kernels (interpret mode) ===")
     kernel_bench.main()
     print("# === runtime: event-driven vs jit engine ===")

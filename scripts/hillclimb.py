@@ -15,8 +15,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.analysis import sanitize
 from repro.launch import roofline as R
 from repro.parallel import sharding as shd
+
+sanitize.apply(verbose=True)  # REPRO_SANITIZE=1 fail-fast mode
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 OUT = os.path.join(ART, "hillclimb.json")

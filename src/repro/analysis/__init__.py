@@ -1,0 +1,24 @@
+"""repro-lint: static analysis for this repo's determinism invariants.
+
+Every equivalence contract in the reproduction (event==engine tick-for-tick,
+bitwise fault-model no-op, trace-replay determinism) rests on conventions
+that have each been violated and hand-fixed at least once.  This package
+machine-checks them:
+
+  RNG001  PRNG key reuse (same key consumed by two jax.random draws)
+  RNG002  hardcoded ``jax.random.PRNGKey(literal)`` in library code
+  DET001  stateful nondeterminism (global np.random, wall-clock time.time)
+  SYNC001 host sync inside for/while bodies on the event-loop hot paths
+  DON001  use of a buffer after it was passed to a donate_argnums position
+  REG001  registry/docs consistency (dispatch ops, README method table,
+          BENCH artifact references)
+
+Entry points:
+
+  python -m repro.analysis.lint [--format=text|json]   # CLI, exit 1 on findings
+  repro.analysis.engine.lint_tree(root)                # library API
+  repro.analysis.sanitize.apply()                      # REPRO_SANITIZE=1 mode
+"""
+
+from . import engine  # noqa: F401
+from . import sanitize  # noqa: F401

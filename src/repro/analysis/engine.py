@@ -1,0 +1,317 @@
+"""Lint engine: findings, pragmas, baseline, file discovery, rule registry.
+
+Rules come in two shapes:
+
+* file rules — ``check_file(ctx)`` is called once per scanned source file
+  with a :class:`FileContext` (path, AST, raw lines, import aliases).  The
+  rule's ``scope(relpath)`` predicate decides which files it looks at.
+* repo rules — ``check_repo(root)`` is called once per lint run with the
+  repository root; used for cross-file registry/docs consistency (REG001).
+
+Suppression has exactly two mechanisms, both explicit and both budgeted:
+
+* a pragma comment ``# lint: allow-<slug>(reason)`` on the offending line or
+  the line directly above it (reason string mandatory), and
+* a checked-in baseline file (``lint_baseline.json``) whose entries carry a
+  rule id, path, optional ``contains`` line-content match, and a reason.
+
+The engine reports every suppression it honors so the CLI/report can surface
+suppression-count growth.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str          # rule id, e.g. "SYNC001"
+    path: str          # path relative to the lint root (posix separators)
+    line: int          # 1-based line number (0 for repo-level findings)
+    message: str
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.rule} {self.message}"
+
+
+@dataclass
+class Suppression:
+    rule: str
+    path: str
+    line: int
+    reason: str
+    via: str  # "pragma" | "baseline"
+
+
+@dataclass
+class FileContext:
+    relpath: str               # posix-style path relative to the lint root
+    tree: ast.Module
+    lines: list                # raw source lines (no trailing newline)
+    aliases: dict              # import alias -> full module path
+
+
+@dataclass
+class LintResult:
+    findings: list = field(default_factory=list)
+    suppressions: list = field(default_factory=list)
+    errors: list = field(default_factory=list)  # unparseable files etc.
+
+    def counts(self) -> dict:
+        out = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "findings": [asdict(f) for f in self.findings],
+            "counts": self.counts(),
+            "suppressions": [asdict(s) for s in self.suppressions],
+            "errors": list(self.errors),
+            "total": len(self.findings),
+        }
+
+
+# --------------------------------------------------------------------------
+# rule registry
+
+RULES = {}  # id -> rule instance
+
+
+def register_rule(rule):
+    if rule.id in RULES:
+        raise ValueError(f"duplicate lint rule id {rule.id}")
+    RULES[rule.id] = rule
+    return rule
+
+
+class Rule:
+    """Base class; subclasses set id/slug/doc and override one check hook."""
+
+    id = ""
+    slug = ""   # pragma slug: "# lint: allow-<slug>(reason)"
+    doc = ""    # one-line rationale (rendered into docs/lint.md's table)
+
+    def scope(self, relpath: str) -> bool:
+        """Which files (relative to the lint root) this rule scans."""
+        return relpath.startswith("src/repro/")
+
+    def check_file(self, ctx: FileContext):
+        return []
+
+    def check_repo(self, root: str):
+        return []
+
+
+# --------------------------------------------------------------------------
+# shared AST helpers (used by the rule modules)
+
+def collect_aliases(tree: ast.Module) -> dict:
+    """Map local names to full module paths for dotted-call resolution.
+
+    ``import numpy as np``        -> {"np": "numpy"}
+    ``import jax.numpy as jnp``   -> {"jnp": "jax.numpy"}
+    ``from jax import random``    -> {"random": "jax.random"}
+    ``from time import time``     -> {"time": "time.time"}
+    """
+    aliases = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+                if a.asname is None and "." in a.name:
+                    # `import jax.numpy` binds `jax`; record the full path
+                    # under the dotted spelling so qualname() can resolve it.
+                    aliases[a.name.split(".")[0]] = a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def qualname(node, aliases: dict):
+    """Resolve a Name/Attribute chain to a dotted module path, or None.
+
+    ``np.random.seed`` with {"np": "numpy"} -> "numpy.random.seed".
+    """
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = aliases.get(node.id, node.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def expr_symbol(node):
+    """Dotted symbol for a Name/Attribute lvalue-ish expr ("self._key"), or None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def functions_of(tree: ast.Module):
+    """Yield every function/async-function node (module order)."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# --------------------------------------------------------------------------
+# pragma + baseline suppression
+
+_PRAGMA = re.compile(r"#\s*lint:\s*allow-([a-z0-9-]+)\(([^)]*)\)")
+
+
+def pragmas_in(lines) -> dict:
+    """Map line number -> list of (slug, reason) pragmas covering that line.
+
+    A pragma covers its own line and the line directly below it (so it can
+    sit above a long expression).
+    """
+    cover = {}
+    for i, text in enumerate(lines, start=1):
+        for m in _PRAGMA.finditer(text):
+            slug, reason = m.group(1), m.group(2).strip()
+            cover.setdefault(i, []).append((slug, reason))
+            cover.setdefault(i + 1, []).append((slug, reason))
+    return cover
+
+
+def load_baseline(path):
+    """Parse lint_baseline.json; returns a list of suppress entries."""
+    if not path or not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    entries = data.get("suppress", [])
+    for e in entries:
+        if not e.get("reason", "").strip():
+            raise ValueError(f"baseline entry missing reason: {e}")
+        if "rule" not in e or "path" not in e:
+            raise ValueError(f"baseline entry needs rule+path: {e}")
+    return entries
+
+
+def _baseline_matches(entry, finding: Finding, lines) -> bool:
+    if entry["rule"] != finding.rule or entry["path"] != finding.path:
+        return False
+    if "contains" in entry:
+        if not (1 <= finding.line <= len(lines)):
+            return False
+        return entry["contains"] in lines[finding.line - 1]
+    if "line" in entry:
+        return int(entry["line"]) == finding.line
+    return True
+
+
+# --------------------------------------------------------------------------
+# discovery + driver
+
+_SKIP_DIRS = {"__pycache__", ".git"}
+
+
+def iter_source_files(root: str):
+    """Yield posix relpaths of all .py files under src/repro/."""
+    base = os.path.join(root, "src", "repro")
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = [d for d in sorted(dirnames) if d not in _SKIP_DIRS]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                yield rel.replace(os.sep, "/")
+
+
+def _load_ctx(root: str, relpath: str):
+    path = os.path.join(root, *relpath.split("/"))
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    tree = ast.parse(src, filename=relpath)
+    lines = src.splitlines()
+    return FileContext(relpath, tree, lines, collect_aliases(tree))
+
+
+def lint_tree(root: str, rules=None, baseline_path="__default__") -> LintResult:
+    """Lint the repo at ``root`` with all (or the given) rules."""
+    # Importing .rules populates RULES as a side effect.
+    from . import rules as _rules  # noqa: F401
+
+    if rules is None:
+        rules = [RULES[rid] for rid in sorted(RULES)]
+    if baseline_path == "__default__":
+        baseline_path = os.path.join(root, "lint_baseline.json")
+    baseline = load_baseline(baseline_path)
+
+    result = LintResult()
+    file_rules = [r for r in rules if type(r).check_file is not Rule.check_file]
+    repo_rules = [r for r in rules if type(r).check_repo is not Rule.check_repo]
+
+    ctx_cache = {}
+    for relpath in iter_source_files(root):
+        active = [r for r in file_rules if r.scope(relpath)]
+        if not active:
+            continue
+        try:
+            ctx = _load_ctx(root, relpath)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            result.errors.append(f"{relpath}: {e}")
+            continue
+        ctx_cache[relpath] = ctx
+        cover = pragmas_in(ctx.lines)
+        for rule in active:
+            for f in rule.check_file(ctx):
+                _file_dispatch(result, rule, f, cover, ctx.lines, baseline)
+
+    for rule in repo_rules:
+        for f in rule.check_repo(root):
+            lines = ctx_cache[f.path].lines if f.path in ctx_cache else []
+            _file_dispatch(result, rule, f, {}, lines, baseline)
+
+    # stable ordering: path, line, rule
+    result.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return result
+
+
+def _file_dispatch(result, rule, finding, cover, lines, baseline):
+    # pragma suppression (slug must match the rule, reason must be non-empty)
+    for slug, reason in cover.get(finding.line, []):
+        if slug == rule.slug and reason:
+            result.suppressions.append(
+                Suppression(finding.rule, finding.path, finding.line, reason, "pragma")
+            )
+            return
+    for entry in baseline:
+        if _baseline_matches(entry, finding, lines):
+            result.suppressions.append(
+                Suppression(finding.rule, finding.path, finding.line,
+                            entry["reason"], "baseline")
+            )
+            return
+    result.findings.append(finding)
+
+
+def find_root(start=None) -> str:
+    """Walk up from ``start`` (default cwd) to the directory holding src/repro."""
+    d = os.path.abspath(start or os.getcwd())
+    while True:
+        if os.path.isdir(os.path.join(d, "src", "repro")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            raise SystemExit("lint: could not locate repo root (src/repro)")
+        d = parent

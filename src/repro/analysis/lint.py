@@ -1,0 +1,79 @@
+"""CLI: ``python -m repro.analysis.lint [--format=text|json] [--root DIR]``.
+
+Exit status: 0 when the tree is clean (suppressions allowed), 1 when any
+finding survives, 2 on usage/setup errors.  ``--write-report PATH`` emits
+the same JSON payload to a file (used by benchmarks/run.py to keep
+``artifacts/LINT_report.json`` in the bench trajectory).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import engine
+
+
+def build_report(result: engine.LintResult, root: str) -> dict:
+    payload = result.to_json()
+    payload["root"] = root
+    payload["rules"] = {rid: engine.RULES[rid].doc for rid in sorted(engine.RULES)}
+    payload["suppression_count"] = len(result.suppressions)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repro-lint: determinism/host-sync/donation static analysis")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: walk up from cwd to src/repro)")
+    ap.add_argument("--baseline", default="__default__",
+                    help="baseline JSON path ('' to disable; default "
+                         "<root>/lint_baseline.json)")
+    ap.add_argument("--write-report", default=None, metavar="PATH",
+                    help="also write the JSON payload to PATH")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    args = ap.parse_args(argv)
+
+    root = args.root or engine.find_root()
+    from . import rules as _rules  # noqa: F401  (populate the registry)
+    rules = None
+    if args.rules:
+        try:
+            rules = [engine.RULES[r.strip()] for r in args.rules.split(",")]
+        except KeyError as e:
+            ap.error(f"unknown rule id {e.args[0]!r}; "
+                     f"known: {', '.join(sorted(engine.RULES))}")
+    baseline = None if args.baseline == "" else args.baseline
+    result = engine.lint_tree(root, rules=rules, baseline_path=baseline)
+    payload = build_report(result, root)
+
+    if args.write_report:
+        with open(args.write_report, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+
+    if args.format == "json":
+        json.dump(payload, sys.stdout, indent=1, sort_keys=True)
+        sys.stdout.write("\n")
+    else:
+        for f in result.findings:
+            print(f.render())
+        for e in result.errors:
+            print(f"ERROR {e}")
+        counts = result.counts()
+        summary = ", ".join(f"{k}={v}" for k, v in sorted(counts.items())) or "clean"
+        print(f"repro-lint: {len(result.findings)} finding(s) [{summary}], "
+              f"{len(result.suppressions)} suppression(s) in use")
+        for s in result.suppressions:
+            print(f"  suppressed {s.rule} {s.path}:{s.line} via {s.via}: {s.reason}")
+
+    if result.errors:
+        return 2
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""Rule modules; importing this package registers every rule."""
+from . import rng001  # noqa: F401
+from . import rng002  # noqa: F401
+from . import det001  # noqa: F401
+from . import sync001  # noqa: F401
+from . import don001  # noqa: F401
+from . import reg001  # noqa: F401

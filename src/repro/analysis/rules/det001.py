@@ -1,0 +1,60 @@
+"""DET001: stateful nondeterminism in core paths.
+
+Two patterns break replayability:
+
+* global numpy RNG state — ``np.random.seed`` / module-level samplers like
+  ``np.random.uniform``.  The repo's convention is counter-based Philox
+  generators keyed by (seed, ids): ``np.random.Generator(np.random.Philox(
+  key=...))`` as in ``events.py``/``faults.py``.  Constructing ``Generator``
+  / ``Philox`` / ``default_rng`` is therefore allowed; touching the global
+  stream is not.
+* wall-clock ``time.time`` where ``time.perf_counter`` is the timing
+  convention (PR 3) — wall clock is subject to NTP steps and makes measured
+  traces irreproducible.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding, Rule, register_rule, qualname
+
+# numpy.random constructors for the keyed, instance-based API (allowed)
+_ALLOWED_NP_RANDOM = {
+    "Generator", "Philox", "default_rng", "PCG64", "SeedSequence",
+    "BitGenerator", "RandomState",  # RandomState(seed) is instance-based too
+}
+
+
+class DET001(Rule):
+    id = "DET001"
+    slug = "nondet"
+    doc = ("Global np.random state or wall-clock time.time in library code; "
+           "use keyed np.random.Generator(Philox) and time.perf_counter.")
+
+    def check_file(self, ctx):
+        findings = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qn = qualname(node.func, ctx.aliases)
+            if qn is None:
+                continue
+            if qn == "time.time":
+                findings.append(Finding(
+                    self.id, ctx.relpath, node.lineno,
+                    "wall-clock time.time(); use time.perf_counter() "
+                    "(PR 3 timing convention)",
+                ))
+            elif qn.startswith("numpy.random."):
+                attr = qn.split(".")[-1]
+                if attr not in _ALLOWED_NP_RANDOM:
+                    findings.append(Finding(
+                        self.id, ctx.relpath, node.lineno,
+                        f"global-state np.random.{attr}(); use a keyed "
+                        "np.random.Generator(np.random.Philox(key=...)) "
+                        "as in events.py/faults.py",
+                    ))
+        return findings
+
+
+register_rule(DET001())

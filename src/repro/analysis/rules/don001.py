@@ -1,0 +1,188 @@
+"""DON001: use of a buffer after it was passed to a donate_argnums position.
+
+``jax.jit(..., donate_argnums=(i,))`` lets XLA alias the input buffer into
+the output — after the call the Python reference is a deleted array, and
+touching it raises (GPU/TPU) or silently reads stale memory (some
+backends).  The serve decode cache and fused engine state rely on donation
+for in-place updates; the contract is "the call's result REPLACES the
+donated reference, immediately".
+
+Module-local analysis:
+
+* collect ``<target> = jax.jit(fn, ..., donate_argnums=...)`` bindings
+  (plain names and ``self._attr`` targets) with their donated positions;
+* at each call site of a collected binding, resolve the argument expression
+  at every donated position to a symbol (``name`` or dotted ``self.attr``);
+* flag a read of that symbol after the call (before it is re-stored), in
+  statement order within the enclosing function body — including the
+  loop-carried case where the call sits in a loop and the symbol is not
+  re-stored by the call statement itself.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding, Rule, register_rule, qualname, expr_symbol
+
+
+def _donated_positions(call: ast.Call):
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                        out.append(e.value)
+                return tuple(out)
+    return ()
+
+
+def _stored_symbols(node):
+    """Symbols stored by an assignment statement (incl. tuple targets)."""
+    out = set()
+    if isinstance(node, ast.Assign):
+        targets = node.targets
+    elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+        targets = [node.target]
+    else:
+        return out
+    def rec(t):
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                rec(e)
+        else:
+            s = expr_symbol(t)
+            if s:
+                out.add(s)
+    for t in targets:
+        rec(t)
+    return out
+
+
+def _reads_symbol(node, sym: str) -> bool:
+    """Does this AST subtree read `sym` (as a Load)?"""
+    for n in ast.walk(node):
+        if expr_symbol(n) == sym and isinstance(
+                getattr(n, "ctx", None), ast.Load):
+            # expr_symbol matches the full dotted chain only; also reject
+            # partial prefixes by construction (exact match required).
+            return True
+    return False
+
+
+class DON001(Rule):
+    id = "DON001"
+    slug = "donated-use"
+    doc = ("A buffer passed to a donate_argnums position is read again "
+           "after the call; the call's result must replace the donated "
+           "reference immediately.")
+
+    def check_file(self, ctx):
+        donators = {}  # symbol -> donated positions
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                call = node.value
+                if qualname(call.func, ctx.aliases) in ("jax.jit", "jax.pjit"):
+                    pos = _donated_positions(call)
+                    if pos:
+                        for t in node.targets:
+                            s = expr_symbol(t)
+                            if s:
+                                donators[s] = pos
+        if not donators:
+            return []
+        findings = []
+        for fn in ast.walk(ctx.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_body(fn.body, donators, ctx, findings, in_loop=False)
+        return findings
+
+    # -- body scanning ----------------------------------------------------
+
+    def _check_body(self, body, donators, ctx, findings, in_loop):
+        for i, stmt in enumerate(body):
+            for call in self._calls_in(stmt, donators, ctx):
+                donated = self._donated_args(call, donators)
+                if not donated:
+                    continue
+                stored = _stored_symbols(stmt)
+                for sym in donated:
+                    self._check_after(body, i, stmt, sym, stored, ctx,
+                                      findings, call, in_loop)
+            # recurse into nested blocks
+            for sub, loop in self._sub_blocks(stmt, in_loop):
+                self._check_body(sub, donators, ctx, findings, loop)
+
+    def _sub_blocks(self, stmt, in_loop):
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            yield stmt.body, True
+            yield stmt.orelse, in_loop
+        elif isinstance(stmt, ast.If):
+            yield stmt.body, in_loop
+            yield stmt.orelse, in_loop
+        elif isinstance(stmt, ast.With):
+            yield stmt.body, in_loop
+        elif isinstance(stmt, ast.Try):
+            yield stmt.body, in_loop
+            for h in stmt.handlers:
+                yield h.body, in_loop
+            yield stmt.orelse, in_loop
+            yield stmt.finalbody, in_loop
+
+    def _calls_in(self, stmt, donators, ctx):
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While, ast.If,
+                             ast.With, ast.Try, ast.FunctionDef,
+                             ast.AsyncFunctionDef, ast.ClassDef)):
+            return []  # nested blocks handled by recursion
+        out = []
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Call) and expr_symbol(n.func) in donators:
+                out.append(n)
+        return out
+
+    def _donated_args(self, call, donators):
+        pos = donators[expr_symbol(call.func)]
+        out = []
+        for p in pos:
+            if p < len(call.args):
+                s = expr_symbol(call.args[p])
+                if s:
+                    out.append(s)
+        return out
+
+    def _check_after(self, body, i, stmt, sym, stored, ctx, findings, call,
+                     in_loop):
+        if sym in stored:
+            return  # the call statement re-stores the donated reference
+        # reads later in the same (straight-line) body, before a re-store
+        for later in body[i + 1:]:
+            if _reads_symbol(later, sym):
+                findings.append(Finding(
+                    self.id, ctx.relpath, later.lineno,
+                    f"`{sym}` read after being donated to "
+                    f"`{expr_symbol(call.func)}` at line {call.lineno}",
+                ))
+                break
+            if sym in _stored_symbols(later):
+                break
+        else:
+            # loop carry: next iteration re-enters the top of the body
+            if in_loop and sym not in stored:
+                for earlier in body[: i + 1]:
+                    if sym in _stored_symbols(earlier):
+                        break
+                    if _reads_symbol(earlier, sym):
+                        findings.append(Finding(
+                            self.id, ctx.relpath, call.lineno,
+                            f"`{sym}` donated to "
+                            f"`{expr_symbol(call.func)}` inside a loop "
+                            "without being reassigned from the result — "
+                            "next iteration reads a donated buffer",
+                        ))
+                        break
+
+
+register_rule(DON001())

@@ -1,0 +1,177 @@
+"""REG001: registry/docs consistency (the promoted docs-rot checks).
+
+Three sub-checks, shared verbatim with ``tests/test_docs.py`` so the lint
+CLI and the test suite cannot drift apart (ISSUE 9 satellite):
+
+* ``dispatch``     — every op registered in ``kernels/dispatch.py`` has
+  parity cases, and either a registered ``bwd`` or a documented ref-VJP
+  fallback (a "ref-VJP" note at the registration site);
+* ``method-table`` — the README "## Method registry" table lists exactly
+  ``sorted(METHODS)`` with the registered optimizer/points/tau-source/
+  memory cells;
+* ``bench-artifacts`` — every ``artifacts/BENCH_*.json`` a doc names must
+  exist, unless the sentence flags it stale/planned (ISSUE 7's trigger).
+
+The helpers return plain problem strings; the Rule wraps them in Findings.
+"""
+from __future__ import annotations
+
+import ast
+import glob
+import os
+import re
+
+from ..engine import Finding, Rule, register_rule
+
+# markdown table row whose first cell is a backticked method name
+_ROW = re.compile(r"^\|\s*`([^`]+)`\s*\|(.+)\|\s*$")
+_BENCH = re.compile(r"\b(BENCH_\w+\.json)\b")
+_STALE = re.compile(r"\b(stale|planned|future|TODO)\b", re.I)
+
+
+def doc_files(root):
+    """The docs scanned for rot: top-level + everything under docs/."""
+    out = ["README.md", "DESIGN.md", "ROADMAP.md"]
+    for p in sorted(glob.glob(os.path.join(root, "docs", "*.md"))):
+        out.append(os.path.relpath(p, root).replace(os.sep, "/"))
+    return [d for d in out if os.path.exists(os.path.join(root, d))]
+
+
+# -- sub-check: README method table ----------------------------------------
+
+def readme_method_rows(root):
+    """Every data row of the README's '## Method registry' table — including
+    rows whose method no longer exists in the registry (stale-row detection
+    requires NOT filtering by METHODS membership here)."""
+    rows = {}
+    in_section = False
+    with open(os.path.join(root, "README.md")) as f:
+        for line in f:
+            if line.startswith("## "):
+                in_section = line.strip() == "## Method registry"
+                continue
+            m = _ROW.match(line.strip())
+            if in_section and m:
+                cells = [c.strip() for c in m.group(2).split("|")]
+                rows[m.group(1)] = cells
+    return rows
+
+
+def method_table_problems(root):
+    from repro.core.methods import METHODS
+
+    problems = []
+    rows = readme_method_rows(root)
+    missing = sorted(set(METHODS) - set(rows))
+    stale = sorted(set(rows) - set(METHODS))
+    if missing:
+        problems.append(f"README method table missing {missing}")
+    if stale:
+        problems.append(f"README method table has stale rows {stale}")
+    if list(rows) != sorted(rows):
+        problems.append("README method table rows not sorted by name")
+    for name, cells in rows.items():
+        if name not in METHODS:
+            continue
+        m = METHODS[name]
+        # | optimizer | fwd point | bwd point | corrections | tau source | memory |
+        if len(cells) != 6:
+            problems.append(f"README row for {name} has {len(cells)} cells, want 6")
+            continue
+        for i, (label, want) in enumerate([
+                ("optimizer", m.optimizer), ("fwd point", m.fwd_point),
+                ("bwd point", m.bwd_point), (None, None),
+                ("tau source", m.tau_source), ("memory", m.memory)]):
+            if label is not None and cells[i] != want:
+                problems.append(
+                    f"README row {name}: {label} {cells[i]!r} != registered {want!r}")
+    return problems
+
+
+# -- sub-check: BENCH artifact references -----------------------------------
+
+def bench_artifact_problems(root, docs=None):
+    problems = []
+    for doc in docs or doc_files(root):
+        with open(os.path.join(root, doc)) as f:
+            lines = f.read().splitlines()
+        missing = set()
+        for ln in lines:
+            for name in _BENCH.findall(ln):
+                if _STALE.search(ln):
+                    continue
+                if not os.path.exists(os.path.join(root, "artifacts", name)):
+                    missing.add(name)
+        if missing:
+            problems.append(
+                f"{doc} names benchmark artifacts that don't exist: "
+                f"{sorted(missing)} — run benchmarks/run.py to regenerate, "
+                "or mark the mention stale")
+    return problems
+
+
+# -- sub-check: kernel dispatch registry ------------------------------------
+
+_DISPATCH_SRC = "src/repro/kernels/dispatch.py"
+
+
+def _register_site_mentions_ref_vjp(root):
+    """Map op name -> whether its register() call site documents the
+    ref-VJP fallback (a 'ref-VJP' note inside or directly above the call)."""
+    path = os.path.join(root, *_DISPATCH_SRC.split("/"))
+    with open(path) as f:
+        src = f.read()
+    lines = src.splitlines()
+    tree = ast.parse(src)
+    out = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "register" and node.args
+                and isinstance(node.args[0], ast.Constant)):
+            lo = max(0, node.lineno - 4)  # up to 3 comment lines above
+            hi = node.end_lineno
+            segment = "\n".join(lines[lo:hi])
+            out[node.args[0].value] = "ref-vjp" in segment.lower()
+    return out
+
+
+def dispatch_registry_problems(root):
+    from repro.kernels import dispatch
+
+    problems = []
+    documented = _register_site_mentions_ref_vjp(root)
+    for name in dispatch.registered_ops():
+        op = dispatch.get_op(name)
+        if not op.cases:
+            problems.append(f"dispatch op {name} has no parity cases")
+        if op.bwd is None and not documented.get(name, False):
+            problems.append(
+                f"dispatch op {name} has no registered bwd and no documented "
+                "ref-VJP fallback at its register() site")
+    for name in documented:
+        if name not in dispatch.registered_ops():
+            problems.append(f"register() call for unknown op {name}")
+    return problems
+
+
+# -- the lint rule ----------------------------------------------------------
+
+class REG001(Rule):
+    id = "REG001"
+    slug = "registry-docs"
+    doc = ("Registry/docs drift: dispatch ops need parity cases and a bwd or "
+           "documented ref-VJP fallback; README method table and BENCH "
+           "artifact references must match reality.")
+
+    def check_repo(self, root):
+        findings = []
+        for msg in dispatch_registry_problems(root):
+            findings.append(Finding(self.id, _DISPATCH_SRC, 0, msg))
+        for msg in method_table_problems(root):
+            findings.append(Finding(self.id, "README.md", 0, msg))
+        for msg in bench_artifact_problems(root):
+            findings.append(Finding(self.id, msg.split(" ", 1)[0], 0, msg))
+        return findings
+
+
+register_rule(REG001())

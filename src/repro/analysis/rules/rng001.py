@@ -1,0 +1,224 @@
+"""RNG001: PRNG key reuse — the PR 7 bug class.
+
+A JAX PRNG key is a one-shot value: once consumed by a draw (or handed to a
+helper that draws from it), the only legitimate next uses are ``split`` /
+``fold_in``.  Consuming the same key twice silently correlates what should
+be independent randomness — PR 7's reused init/prompt key made every demo
+prompt a function of the parameter init.
+
+Per-function linear analysis:
+
+* key variables enter the tracked set from key-typed parameters (``key``,
+  ``*_key``, ``rng`` ...), from assignments whose RHS is a ``jax.random``
+  key constructor (``PRNGKey``/``key``/``split``/``fold_in``/``clone``), or
+  from tuple-unpacking a ``split``.
+* a tracked key is *consumed* when passed to any call except the
+  non-consuming derivation set (``split``/``fold_in``/key constructors).
+  Helpers like ``init_lm(key, cfg)`` count: by repo convention a function
+  that takes a key owns it.
+* reassignment makes a key fresh again; ``if`` branches are analyzed from a
+  copy of the state and merged by union-of-consumed; loop bodies run twice
+  so a key consumed on iteration N and not re-derived before iteration N+1
+  is caught.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding, Rule, register_rule, qualname, functions_of
+
+# jax.random attributes that *derive* or *construct* keys rather than
+# consuming them.
+_NONCONSUMING = {
+    "PRNGKey", "key", "split", "fold_in", "clone",
+    "wrap_key_data", "key_data", "key_impl",
+}
+
+_KEY_CONSTRUCTORS = {"PRNGKey", "key", "split", "fold_in", "clone", "wrap_key_data"}
+
+
+def _is_key_param(name: str) -> bool:
+    return (
+        name == "key"
+        or name.endswith("_key")
+        or name.startswith("key_")
+        or name in ("rng", "rng_key", "prng_key")
+    )
+
+
+def _jax_random_attr(call: ast.Call, aliases) -> str | None:
+    qn = qualname(call.func, aliases)
+    if qn and qn.startswith("jax.random."):
+        return qn.split(".")[-1]
+    return None
+
+
+class _KeyState:
+    """Tracked key vars: name -> None (fresh) | consumption line (consumed)."""
+
+    def __init__(self):
+        self.keys = {}
+
+    def copy(self):
+        s = _KeyState()
+        s.keys = dict(self.keys)
+        return s
+
+    def merge(self, *others):
+        # union of tracked vars; a var consumed on any path stays consumed
+        for o in others:
+            for k, v in o.keys.items():
+                if k not in self.keys or self.keys[k] is None:
+                    self.keys[k] = v
+
+
+class RNG001(Rule):
+    id = "RNG001"
+    slug = "key-reuse"
+    doc = ("A PRNG key is consumed by two or more draws without an "
+           "intervening split/fold_in (the PR 7 bug class).")
+
+    def check_file(self, ctx):
+        findings = []
+        for fn in functions_of(ctx.tree):
+            self._check_function(fn, ctx, findings)
+        # dedupe (loop double-pass can report the same site twice)
+        seen, out = set(), []
+        for f in findings:
+            if (f.path, f.line, f.message) not in seen:
+                seen.add((f.path, f.line, f.message))
+                out.append(f)
+        return out
+
+    # -- per-function walk ------------------------------------------------
+
+    def _check_function(self, fn, ctx, findings):
+        state = _KeyState()
+        args = fn.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)
+                  + ([args.vararg] if args.vararg else [])
+                  + ([args.kwarg] if args.kwarg else [])):
+            if _is_key_param(a.arg):
+                state.keys[a.arg] = None
+        self._walk_body(fn.body, state, ctx, findings)
+
+    def _walk_body(self, body, state, ctx, findings):
+        for stmt in body:
+            self._walk_stmt(stmt, state, ctx, findings)
+
+    def _walk_stmt(self, stmt, state, ctx, findings):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested defs get their own walk via functions_of
+        if isinstance(stmt, ast.If):
+            s_then, s_else = state.copy(), state.copy()
+            self._scan_expr(stmt.test, state, ctx, findings)
+            self._walk_body(stmt.body, s_then, ctx, findings)
+            self._walk_body(stmt.orelse, s_else, ctx, findings)
+            state.keys = {}
+            state.merge(s_then, s_else)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            if isinstance(stmt, ast.While):
+                self._scan_expr(stmt.test, state, ctx, findings)
+            else:
+                self._scan_expr(stmt.iter, state, ctx, findings)
+                self._bind_target(stmt.target, state, fresh=False)
+            # two passes: second pass simulates iteration N+1 with the
+            # key state left behind by iteration N
+            self._walk_body(stmt.body, state, ctx, findings)
+            self._walk_body(stmt.body, state, ctx, findings)
+            self._walk_body(stmt.orelse, state, ctx, findings)
+            return
+        if isinstance(stmt, (ast.Try,)):
+            s_try = state.copy()
+            self._walk_body(stmt.body, s_try, ctx, findings)
+            handlers = []
+            for h in stmt.handlers:
+                s_h = state.copy()
+                self._walk_body(h.body, s_h, ctx, findings)
+                handlers.append(s_h)
+            state.keys = {}
+            state.merge(s_try, *handlers)
+            self._walk_body(stmt.orelse, state, ctx, findings)
+            self._walk_body(stmt.finalbody, state, ctx, findings)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr, state, ctx, findings)
+            self._walk_body(stmt.body, state, ctx, findings)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._scan_expr(value, state, ctx, findings)
+            targets = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            fresh = value is not None and self._is_key_expr(value, state, ctx)
+            for t in targets:
+                self._bind_target(t, state, fresh=fresh)
+            return
+        # Expr / Return / Raise / Assert / Delete / etc: scan expressions
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._scan_expr(child, state, ctx, findings)
+
+    # -- expression scanning ----------------------------------------------
+
+    def _scan_expr(self, expr, state, ctx, findings):
+        """Find calls in evaluation order and apply consumption rules."""
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            attr = _jax_random_attr(node, ctx.aliases)
+            consuming = attr is None or attr not in _NONCONSUMING
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for name in self._key_names_in(arg, state):
+                    if consuming:
+                        prior = state.keys.get(name)
+                        if prior is not None:
+                            findings.append(Finding(
+                                self.id, ctx.relpath, node.lineno,
+                                f"key `{name}` already consumed at line "
+                                f"{prior} is consumed again without an "
+                                f"intervening split/fold_in",
+                            ))
+                        state.keys[name] = node.lineno
+
+    def _key_names_in(self, arg, state):
+        """Tracked key names referenced directly by this argument expr."""
+        out = []
+        if isinstance(arg, ast.Name) and arg.id in state.keys:
+            out.append(arg.id)
+        elif isinstance(arg, ast.IfExp):
+            for sub in (arg.body, arg.orelse):
+                if isinstance(sub, ast.Name) and sub.id in state.keys:
+                    out.append(sub.id)
+        elif isinstance(arg, ast.Starred):
+            out.extend(self._key_names_in(arg.value, state))
+        return out
+
+    def _is_key_expr(self, value, state, ctx) -> bool:
+        """Does this RHS produce a key (so the target becomes tracked)?"""
+        if isinstance(value, ast.Call):
+            attr = _jax_random_attr(value, ctx.aliases)
+            return attr in _KEY_CONSTRUCTORS
+        if isinstance(value, ast.Name):
+            return value.id in state.keys
+        if isinstance(value, ast.IfExp):
+            return (self._is_key_expr(value.body, state, ctx)
+                    or self._is_key_expr(value.orelse, state, ctx))
+        return False
+
+    def _bind_target(self, target, state, fresh: bool):
+        if isinstance(target, ast.Name):
+            if fresh or _is_key_param(target.id):
+                state.keys[target.id] = None
+            elif target.id in state.keys:
+                del state.keys[target.id]  # rebound to a non-key value
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind_target(elt, state, fresh=fresh)
+        # attribute/subscript targets are not tracked
+
+
+register_rule(RNG001())

@@ -1,0 +1,58 @@
+"""RNG002: hardcoded ``jax.random.PRNGKey(literal)`` in library code.
+
+Library code under ``src/repro/`` (core/kernels/models/optim/...) must
+derive its randomness from a caller-provided key or a config seed —
+a hardcoded ``PRNGKey(0)`` silently decouples results from ``--seed``
+(the swarm/ft fallback bug fixed in this PR).
+
+Exemptions:
+
+* launchers (``src/repro/launch/``) — they own the seed and mint the root
+  key from CLI args;
+* keys appearing directly inside a ``jax.eval_shape(...)`` call — shape
+  probes never execute, so the literal cannot bias results.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding, Rule, register_rule, qualname
+
+
+class RNG002(Rule):
+    id = "RNG002"
+    slug = "hardcoded-key"
+    doc = ("Hardcoded jax.random.PRNGKey(<literal>) in library code "
+           "decouples results from --seed; derive from a passed key or "
+           "cfg seed instead.")
+
+    def scope(self, relpath):
+        return (relpath.startswith("src/repro/")
+                and not relpath.startswith("src/repro/launch/")
+                and not relpath.startswith("src/repro/analysis/"))
+
+    def check_file(self, ctx):
+        findings = []
+        self._walk(ctx.tree, ctx, in_eval_shape=False, findings=findings)
+        return findings
+
+    def _walk(self, node, ctx, in_eval_shape, findings):
+        for child in ast.iter_child_nodes(node):
+            child_in_es = in_eval_shape
+            if isinstance(child, ast.Call):
+                qn = qualname(child.func, ctx.aliases)
+                if qn == "jax.eval_shape":
+                    child_in_es = True
+                elif qn in ("jax.random.PRNGKey", "jax.random.key"):
+                    args = child.args
+                    if (not in_eval_shape and args
+                            and isinstance(args[0], ast.Constant)):
+                        findings.append(Finding(
+                            self.id, ctx.relpath, child.lineno,
+                            f"hardcoded {qn.split('.')[-1]}"
+                            f"({args[0].value!r}) in library code",
+                        ))
+            self._walk(child, ctx, child_in_es, findings)
+
+
+register_rule(RNG002())

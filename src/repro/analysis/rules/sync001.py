@@ -1,0 +1,168 @@
+"""SYNC001: host sync inside for/while bodies on the event-loop hot paths.
+
+``float()`` / ``.item()`` / ``np.asarray()`` / ``jax.device_get()`` on a
+device value blocks the host until the device catches up.  Inside a loop
+body that serializes dispatch — the PR 4 stall class, where a per-forward
+``float(loss)`` throttled the whole event runtime.  The repo's convention
+is ONE gather at a documented drain boundary (``core/runtime.py``), with
+everything else staying on device.
+
+Scope: ``src/repro/core/`` and ``src/repro/launch/serve.py`` (the two
+event-loop hot paths).  Findings are suppressible ONLY via an explicit
+``# lint: allow-host-sync(reason)`` pragma — there is deliberately no
+baseline escape hatch for this rule in-tree, so every sanctioned sync
+boundary is visible at the call site.
+
+To avoid flagging host-side parsing/bookkeeping (``float(parts[1])`` on a
+spec string is not a sync), ``float``/``np.asarray`` are only flagged when
+their argument is *device-tainted*: it contains a call into ``jax.*`` /
+``jax.numpy.*``, a call through a module-level ``jax.jit`` binding (e.g.
+``self._decode = jax.jit(...)``), or a name assigned from such a call
+anywhere in the enclosing function (flow-insensitive union).  Explicit
+host conversions (``jax.device_get``, ``np.asarray``, ``float``) do not
+taint their results, and names containing ``host`` are exempt by the
+repo's naming convention for already-gathered values (``loss_host``).
+``.item()`` / ``jax.device_get`` / ``*.block_until_ready`` are flagged
+unconditionally — they only exist to force a sync.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding, Rule, register_rule, qualname, expr_symbol
+
+# calls whose *result* lives on the host even if their args were on device
+_HOST_CONVERSIONS = ("jax.device_get", "numpy.asarray", "numpy.array",
+                     "float", "int", "bool", "tuple", "list")
+
+
+def _jit_bindings(tree, aliases):
+    """Symbols bound to jax.jit/pjit at module scope (incl. self._attrs)."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if qualname(node.value.func, aliases) in ("jax.jit", "jax.pjit"):
+                for t in node.targets:
+                    s = expr_symbol(t)
+                    if s:
+                        out.add(s)
+    return out
+
+
+class SYNC001(Rule):
+    id = "SYNC001"
+    slug = "host-sync"
+    doc = ("float()/.item()/np.asarray()/jax.device_get() on device values "
+           "inside for/while bodies serializes dispatch (the PR 4 stall "
+           "class); gather once at a drain boundary instead.")
+
+    def scope(self, relpath):
+        return (relpath.startswith("src/repro/core/")
+                or relpath == "src/repro/launch/serve.py")
+
+    def check_file(self, ctx):
+        jits = _jit_bindings(ctx.tree, ctx.aliases)
+        findings = []
+        for fn in ast.walk(ctx.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                tainted = self._taint(fn, ctx, jits)
+                for loop in ast.walk(fn):
+                    if isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+                        for stmt in loop.body:
+                            self._scan(stmt, ctx, jits, tainted, findings)
+        # dedupe: nested loops visit inner statements twice
+        seen, out = set(), []
+        for f in findings:
+            k = (f.line, f.message)
+            if k not in seen:
+                seen.add(k)
+                out.append(f)
+        return out
+
+    # -- device-taint collection ------------------------------------------
+
+    def _taint(self, fn, ctx, jits):
+        """Flow-insensitive: symbols ever assigned a device-flavored value."""
+        tainted = set()
+        for _ in range(2):  # two passes to catch forward-defined chains
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                    value = getattr(node, "value", None)
+                    if value is None or not self._is_device_expr(
+                            value, ctx, jits, tainted):
+                        continue
+                    targets = (node.targets if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        self._taint_target(t, tainted)
+        return tainted
+
+    def _taint_target(self, t, tainted):
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                self._taint_target(e, tainted)
+        else:
+            s = expr_symbol(t)
+            if s and "host" not in s.lower():
+                tainted.add(s)
+
+    def _is_device_expr(self, expr, ctx, jits, tainted) -> bool:
+        if isinstance(expr, ast.Call):
+            qn = qualname(expr.func, ctx.aliases)
+            if qn in _HOST_CONVERSIONS:
+                return False  # explicit gather: result is host-side
+        return self._mentions_device(expr, ctx, jits, tainted)
+
+    def _mentions_device(self, expr, ctx, jits, tainted) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Call):
+                qn = qualname(n.func, ctx.aliases)
+                if qn and qn.startswith("jax.") and qn not in _HOST_CONVERSIONS:
+                    return True
+                if expr_symbol(n.func) in jits:
+                    return True
+            sym = expr_symbol(n)
+            if sym in tainted:
+                return True
+        return False
+
+    # -- loop-body scanning ------------------------------------------------
+
+    def _scan(self, node, ctx, jits, tainted, findings):
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            qn = qualname(call.func, ctx.aliases)
+            if qn == "jax.device_get" or (
+                    qn is not None and qn.endswith(".block_until_ready")):
+                findings.append(Finding(
+                    self.id, ctx.relpath, call.lineno,
+                    f"{qn} inside a loop body — gather once at a drain "
+                    "boundary instead",
+                ))
+            elif (isinstance(call.func, ast.Attribute)
+                    and call.func.attr == "item" and not call.args):
+                findings.append(Finding(
+                    self.id, ctx.relpath, call.lineno,
+                    ".item() inside a loop body forces a device sync per "
+                    "iteration",
+                ))
+            elif qn in ("float", "numpy.asarray", "numpy.array"):
+                if not call.args:
+                    continue
+                arg = call.args[0]
+                root = arg
+                while isinstance(root, (ast.Attribute, ast.Subscript)):
+                    root = root.value
+                if isinstance(root, ast.Name) and "host" in root.id.lower():
+                    continue  # gathered-value naming convention
+                if self._mentions_device(arg, ctx, jits, tainted):
+                    label = "float" if qn == "float" else qn
+                    findings.append(Finding(
+                        self.id, ctx.relpath, call.lineno,
+                        f"{label}(...) on a device value inside a loop body "
+                        "forces a per-iteration device sync",
+                    ))
+
+
+register_rule(SYNC001())

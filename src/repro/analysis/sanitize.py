@@ -1,0 +1,50 @@
+"""REPRO_SANITIZE=1 runtime sanitizer mode.
+
+One env var flips the whole stack into fail-fast mode:
+
+* ``jax_debug_nans`` — any NaN materialized by a jitted computation raises
+  ``FloatingPointError`` at the op that produced it.  Under sanitize an
+  injected ``nan_grad`` fault is therefore *caught at the poison site*
+  instead of being silently quarantined by the engine's non-finite guard.
+* ``jax_enable_checks`` — JAX's internal invariant checks (transpose
+  correctness, weak-type promotion, ...).
+* runtime strictness — the event runtime's drain/quarantine bookkeeping is
+  upgraded from counters to hard errors: a quarantined non-finite update
+  raises instead of incrementing ``nonfinite_skipped`` (see
+  ``core/runtime.py``), so sanitized CI runs cannot paper over a poisoned
+  gradient.
+
+Wire-up points: ``tests/conftest.py`` (whole test suite), the
+``launch/train.py`` / ``launch/serve.py`` / ``launch/dryrun.py`` mains, and
+``benchmarks/run.py`` — all call :func:`apply` once at startup.
+"""
+from __future__ import annotations
+
+import os
+
+ENV_VAR = "REPRO_SANITIZE"
+
+_FALSEY = ("", "0", "off", "false", "no")
+
+
+def enabled() -> bool:
+    """Is sanitizer mode requested via the environment?"""
+    return os.environ.get(ENV_VAR, "").strip().lower() not in _FALSEY
+
+
+def apply(verbose: bool = False) -> bool:
+    """Apply sanitizer config to the current JAX process if enabled.
+
+    Returns True when sanitize mode is active.  Idempotent; safe to call
+    from every entry point.
+    """
+    if not enabled():
+        return False
+    import jax
+
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_enable_checks", True)
+    if verbose:
+        print(f"[sanitize] {ENV_VAR}=1: jax_debug_nans + jax_enable_checks "
+              "+ strict drain/quarantine asserts")
+    return True

@@ -45,6 +45,7 @@ the switch, like `checkpoint.restage`).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Optional, Sequence
 
@@ -52,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.core import events, staged
 from repro.core import faults as faults_mod
 from repro.core import stash as stash_mod
@@ -463,6 +465,9 @@ class EventRuntime:
         pipelines. The pipeline drains before returning."""
         if self._stages is None:
             raise RuntimeError("call init/init_from_params/init_from_state first")
+        # REPRO_SANITIZE=1: debug_nans/enable_checks plus fail-fast on
+        # quarantined updates at the end of this run (docs/lint.md)
+        sanitize.apply()
         P, K = self.P, self.K
         self._batch_fn = batch_fn
         self._tick_batches = {}
@@ -601,6 +606,23 @@ class EventRuntime:
         span = self._clock - t_start
         util = tuple((st.busy_time - b0) / span if span > 0 else 0.0
                      for st, b0 in zip(self._stages, busy0))
+        nonfinite_delta = tuple(
+            a - b for a, b in zip(self._nonfinite_host(), nf0))
+        if sanitize.enabled():
+            # sanitizer contract (DESIGN.md §12): the engine's non-finite
+            # quarantine may keep a chaos run alive, but it may NOT be silent
+            # under sanitize — a poisoned gradient is an error, not a counter.
+            if any(nonfinite_delta):
+                raise FloatingPointError(
+                    f"sanitize: {sum(nonfinite_delta)} non-finite update(s) "
+                    f"quarantined (per-stage {nonfinite_delta}) — injected or "
+                    "real NaN/Inf gradients are hard errors under "
+                    f"{sanitize.ENV_VAR}=1")
+            bad = [(u, v) for u, v in zip(range(u0, u0 + n_ticks), losses)
+                   if not math.isfinite(v)]
+            if bad:
+                raise FloatingPointError(
+                    f"sanitize: non-finite loss(es) at update(s) {bad}")
         return RuntimeResult(
             losses=losses, metrics=metrics, taus=taus, tau_groups=tau_groups,
             makespan=span,
@@ -612,8 +634,7 @@ class EventRuntime:
             mailbox_high_water=tuple(
                 (st.fwd_box.high_water, st.bwd_box.high_water)
                 for st in self._stages),
-            nonfinite_skipped=tuple(
-                a - b for a, b in zip(self._nonfinite_host(), nf0)),
+            nonfinite_skipped=nonfinite_delta,
             retransmits=self._retransmits - ret0,
             duplicates=sum(st.fwd_box.duplicates + st.bwd_box.duplicates
                            for st in self._stages) - dup0,

@@ -174,7 +174,11 @@ class SwarmTrainer:
         if len(batch_fns) != R:
             raise ValueError(f"need {R} batch fns, got {len(batch_fns)}")
         cm = events_mod.make_churn_model(churn).validate(R) if churn is not None else None
-        base = self.inner.init(key if key is not None else jax.random.PRNGKey(0))
+        if key is None:
+            raise ValueError(
+                "run_event: pass key= — a hardcoded PRNGKey(0) fallback "
+                "would decouple the swarm init from --seed")
+        base = self.inner.init(key)
         rts = []
         for r in range(R):
             if rcfg is not None:

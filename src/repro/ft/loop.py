@@ -56,7 +56,11 @@ def train_loop(trainer, batch_fn: Callable[[int], dict], steps: int, *,
     """
     res = LoopResult()
     if state is None:
-        state = trainer.init(key if key is not None else jax.random.PRNGKey(0))
+        if key is None:
+            raise ValueError(
+                "train_loop: pass key= (or a pre-built state=) — a hardcoded "
+                "PRNGKey(0) fallback would decouple the run from --seed")
+        state = trainer.init(key)
     start = 0
     if ckpt_dir:
         # integrity-verified resume: a truncated/corrupt newest checkpoint
@@ -67,7 +71,7 @@ def train_loop(trainer, batch_fn: Callable[[int], dict], steps: int, *,
             start = meta["step"]
             res.resumed_from = start
     step_fn = trainer.jit_step()
-    t0 = time.time()
+    t0 = time.perf_counter()
     i = start
     try:
         while i < steps:
@@ -85,7 +89,7 @@ def train_loop(trainer, batch_fn: Callable[[int], dict], steps: int, *,
     except SimulatedPreemption:
         if ckpt_dir:
             ckpt.save_step(ckpt_dir, state, i, keep=keep)
-        res.wall_s = time.time() - t0
+        res.wall_s = time.perf_counter() - t0
         raise
-    res.wall_s = time.time() - t0
+    res.wall_s = time.perf_counter() - t0
     return state, res

@@ -407,6 +407,9 @@ register(
     ))
 
 register(
+    # optimizer step: applied under lax.stop_gradient semantics in the engine,
+    # so no dedicated backward; the ref-VJP fallback covers dispatch_grad for
+    # the parity suite's grad cases.
     "nag_update", pallas=_nag_update, ref=_nag_ref,
     cases=(
         ParityCase("aligned", _nag_case(4096, 1024), tol_f32=2e-6, grad_tol_f32=2e-5),

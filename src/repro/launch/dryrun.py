@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.analysis import sanitize
 from repro.configs import ARCH_IDS, ASSIGNED, SHAPES, cell_runnable, get_config, norm_name
 from repro.core.engine import AsyncTrainer, EngineCfg
 from repro.launch import specs as S
@@ -172,9 +173,9 @@ def collective_bytes(hlo_text: str) -> dict:
 
 
 def analyse(lowered, label: str, n_chips: int):
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
     if isinstance(ca, (list, tuple)):  # jax < 0.5 returns [dict] per module
@@ -265,6 +266,7 @@ def sim_schedule_report(n_stages: int, accum: int, ticks: int, models: list,
 
 
 def main():
+    sanitize.apply(verbose=True)  # REPRO_SANITIZE=1 fail-fast mode
     ap = argparse.ArgumentParser(
         epilog="Delay-model spec grammar (fixed:/jitter:/straggler:/outage:/"
                "trace:) and churn windows (STAGE,START,DURATION[/...]): "

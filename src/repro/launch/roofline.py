@@ -227,12 +227,12 @@ def main():
              else [(args.arch, args.shape)])
     recs = []
     for a, s in cells:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             rec = run(a, s)
         except Exception as e:
             rec = {"cell": f"{a}/{s}", "error": f"{type(e).__name__}: {e}"}
-        rec["wall_s"] = round(time.time() - t0, 1)
+        rec["wall_s"] = round(time.perf_counter() - t0, 1)
         recs.append(rec)
         print(json.dumps(rec), flush=True)
     if args.out:

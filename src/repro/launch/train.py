@@ -27,6 +27,7 @@ import time
 
 import jax
 
+from repro.analysis import sanitize
 from repro.configs import get_config
 from repro.core.engine import AsyncTrainer, EngineCfg
 from repro.data.synthetic import make_batch_fn
@@ -91,7 +92,7 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
             rt.init_from_state(restored)
             resumed_from = meta["step"]
     res = ftloop.LoopResult(resumed_from=resumed_from)
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = rt._u_done
     if wd is not None and done < steps:
         # guarantee a rollback target exists before the first faulty chunk
@@ -159,7 +160,7 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
                      else f"tau_obs={r.taus[-1]}")
             log_fn(f"step {done}: loss={res.losses[-1]:.4f} "
                    f"{tau_s} util={tuple(round(u, 2) for u in r.utilization)}")
-    res.wall_s = time.time() - t0
+    res.wall_s = time.perf_counter() - t0
     if record_trace:
         if len(rt.recorder):
             rt.recorder.save(record_trace)
@@ -174,6 +175,7 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
 
 
 def main():
+    sanitize.apply(verbose=True)  # REPRO_SANITIZE=1 fail-fast mode
     ap = argparse.ArgumentParser(
         epilog="Spec grammars for --delay-model (fixed:/jitter:/straggler:/"
                "outage:/trace:), --churn (STAGE,START,DURATION[/...]), and the "

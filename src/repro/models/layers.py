@@ -137,11 +137,12 @@ class ModelCfg:
         """Analytic parameter count (used for MODEL_FLOPS roofline term)."""
         import numpy as np
 
-        key = jax.random.PRNGKey(0)
-        # cheap: init with eval_shape to avoid allocation
+        # cheap: init with eval_shape to avoid allocation; the key literal is
+        # shape-only (eval_shape never executes) so it cannot bias results
         from . import lm  # local import to avoid cycle
 
-        shapes = jax.eval_shape(lambda k: lm.init_lm(k, self), key)
+        shapes = jax.eval_shape(lambda k: lm.init_lm(k, self),
+                                jax.random.PRNGKey(0))
         return int(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes)))
 
 

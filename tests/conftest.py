@@ -9,6 +9,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Multi-device tests spawn subprocesses (see test_distributed.py) or request the
 # device count via their own env before importing jax in a subprocess.
 
+# REPRO_SANITIZE=1 flips the whole suite into fail-fast mode: jax_debug_nans +
+# jax_enable_checks + strict (raising) non-finite quarantine. See docs/lint.md.
+from repro.analysis import sanitize  # noqa: E402
+
+sanitize.apply(verbose=True)
+
 
 @pytest.fixture
 def rng_key(request):

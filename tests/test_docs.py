@@ -1,9 +1,12 @@
-"""Docs that can rot, pinned by tests (ISSUE 5).
+"""Docs that can rot, pinned by tests (ISSUE 5; REG001 promotion in ISSUE 9).
 
-- The README method-registry table must list exactly sorted(METHODS) with the
-  registered optimizer / tau_source / memory class per method.
+- The README method-registry table and the BENCH-artifact references are
+  checked through the SAME implementation the lint CLI uses
+  (repro.analysis.rules.reg001) — one source of truth, no drifting copies.
 - Intra-repo markdown links in README/DESIGN/docs must resolve (the CI docs
   leg runs this file plus the README quickstart smoke commands).
+- The docs/lint.md rule table is generated-checked against the registered
+  lint rules (same idiom as the method table).
 - The bundled example trace (examples/trace_p4.json) must stay a valid
   TraceDelay file the quickstart's --sim-schedule command can replay.
 """
@@ -13,57 +16,28 @@ import re
 
 import pytest
 
+from repro.analysis import engine as lint_engine
+from repro.analysis.rules import reg001
 from repro.core.events import TraceDelay, make_delay_model
 from repro.core.methods import METHODS
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-DOC_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "docs/cli.md"]
+DOC_FILES = reg001.doc_files(ROOT)
 
-# markdown table row whose first cell is a backticked method name
-_ROW = re.compile(r"^\|\s*`([^`]+)`\s*\|(.+)\|\s*$")
 # [text](target) — excluding images; target split from an optional #anchor
 _LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
 
 
-def _readme_method_rows():
-    """Every data row of the README's '## Method registry' table — including
-    rows whose method no longer exists in the registry (stale-row detection
-    requires NOT filtering by METHODS membership here)."""
-    rows = {}
-    in_section = False
-    with open(os.path.join(ROOT, "README.md")) as f:
-        for line in f:
-            if line.startswith("## "):
-                in_section = line.strip() == "## Method registry"
-                continue
-            m = _ROW.match(line.strip())
-            if in_section and m:
-                cells = [c.strip() for c in m.group(2).split("|")]
-                rows[m.group(1)] = cells
-    return rows
-
-
 def test_readme_method_table_matches_registry():
-    rows = _readme_method_rows()
-    assert sorted(rows) == sorted(METHODS), (
-        "README method table out of sync with core/methods.py METHODS: "
-        f"missing {sorted(set(METHODS) - set(rows))}, "
-        f"stale {sorted(set(rows) - set(METHODS))}")
-    for name, cells in rows.items():
-        m = METHODS[name]
-        # | optimizer | fwd point | bwd point | corrections | tau source | memory |
-        assert len(cells) == 6, f"README row for {name} has {len(cells)} cells"
-        assert cells[0] == m.optimizer, f"{name}: optimizer {cells[0]!r}"
-        assert cells[1] == m.fwd_point and cells[2] == m.bwd_point, name
-        assert cells[4] == m.tau_source, f"{name}: tau source {cells[4]!r}"
-        assert cells[5] == m.memory, (
-            f"{name}: README memory class {cells[5]!r} != registered {m.memory!r}")
+    # shared REG001 sub-rule: missing/stale/mismatched/unsorted rows
+    assert reg001.method_table_problems(ROOT) == []
 
 
-def test_readme_rows_in_registry_order():
-    names = list(_readme_method_rows())
-    assert names == sorted(METHODS), "README table rows must be sorted by name"
+def test_readme_rows_are_complete():
+    # belt and braces: the shared parser sees every registered method
+    rows = reg001.readme_method_rows(ROOT)
+    assert sorted(rows) == sorted(METHODS)
 
 
 @pytest.mark.parametrize("doc", DOC_FILES)
@@ -106,25 +80,44 @@ def test_example_trace_is_valid_and_replayable():
     assert sim["taus"][-1] == (3.0, 2.0, 1.0, 0.0)  # near-uniform trace: Eq. 5
 
 
-_BENCH = re.compile(r"\b(BENCH_\w+\.json)\b")
+def test_bench_artifacts_named_in_docs_exist():
+    """Docs-rot guard, now the REG001 bench sub-rule: every
+    artifacts/BENCH_*.json a doc points at must actually exist
+    (benchmarks/run.py regenerates them), unless the sentence explicitly
+    flags it as stale/planned."""
+    assert reg001.bench_artifact_problems(ROOT) == []
 
 
-@pytest.mark.parametrize("doc", DOC_FILES)
-def test_bench_artifacts_named_in_docs_exist(doc):
-    """Docs-rot guard: every artifacts/BENCH_*.json a doc points at must
-    actually exist (benchmarks/run.py regenerates them), unless the sentence
-    explicitly flags it as stale/planned. ISSUE 7's trigger: ROADMAP.md cited
-    BENCH_kernels.json while only BENCH_runtime.json was checked in."""
-    with open(os.path.join(ROOT, doc)) as f:
-        lines = f.read().splitlines()
-    missing = []
-    for ln in lines:
-        for name in _BENCH.findall(ln):
-            if re.search(r"\b(stale|planned|future|TODO)\b", ln, re.I):
-                continue
-            if not os.path.exists(os.path.join(ROOT, "artifacts", name)):
-                missing.append(name)
-    assert not missing, (
-        f"{doc} names benchmark artifacts that don't exist: {sorted(set(missing))}"
-        " — run benchmarks/run.py (or the per-section bench) to regenerate,"
-        " or mark the mention stale")
+def test_dispatch_registry_is_consistent():
+    """REG001 dispatch sub-rule: parity cases + bwd or documented ref-VJP."""
+    assert reg001.dispatch_registry_problems(ROOT) == []
+
+
+# ---- docs/lint.md rule table vs the registered rules -----------------------
+
+# table row: | `RULE_ID` | `pragma-slug` | rationale... |
+_LINT_ROW = re.compile(r"^\|\s*`([A-Z]{3,4}\d{3})`\s*\|\s*`([a-z-]+)`\s*\|(.+)\|$")
+
+
+def _lint_md_rows():
+    rows = {}
+    with open(os.path.join(ROOT, "docs", "lint.md")) as f:
+        for line in f:
+            m = _LINT_ROW.match(line.strip())
+            if m:
+                rows[m.group(1)] = (m.group(2), m.group(3).strip())
+    return rows
+
+
+def test_lint_md_rule_table_matches_registry():
+    from repro.analysis import rules as _rules  # noqa: F401  (register)
+
+    rows = _lint_md_rows()
+    assert sorted(rows) == sorted(lint_engine.RULES), (
+        "docs/lint.md rule table out of sync with repro.analysis rules: "
+        f"missing {sorted(set(lint_engine.RULES) - set(rows))}, "
+        f"stale {sorted(set(rows) - set(lint_engine.RULES))}")
+    for rid, (slug, rationale) in rows.items():
+        rule = lint_engine.RULES[rid]
+        assert slug == rule.slug, f"{rid}: doc slug {slug!r} != {rule.slug!r}"
+        assert rationale, f"{rid}: empty rationale cell"

@@ -56,10 +56,12 @@ def test_checkpoint_exact_resume(cfg):
     batch_fn, _ = make_batch_fn(cfg, 1, 4, 32, seed=0)
     with tempfile.TemporaryDirectory() as d:
         tr = AsyncTrainer(cfg, ecfg, "ours")
-        state, _ = ftloop.train_loop(tr, batch_fn, 8, ckpt_dir=d, ckpt_every=4)
+        state, _ = ftloop.train_loop(tr, batch_fn, 8, ckpt_dir=d, ckpt_every=4,
+                                     key=jax.random.PRNGKey(0))
         os.remove(os.path.join(d, "ckpt-8.npz"))
         tr2 = AsyncTrainer(cfg, ecfg, "ours")
-        state2, res2 = ftloop.train_loop(tr2, batch_fn, 8, ckpt_dir=d)
+        state2, res2 = ftloop.train_loop(tr2, batch_fn, 8, ckpt_dir=d,
+                                         key=jax.random.PRNGKey(0))
         assert res2.resumed_from == 4
         for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -75,10 +77,11 @@ def test_preemption_recovery(cfg):
 
         with pytest.raises(ftloop.SimulatedPreemption):
             ftloop.train_loop(AsyncTrainer(cfg, ecfg, "ours"), batch_fn, 20,
-                              ckpt_dir=d, ckpt_every=100, fault_hook=fault)
+                              ckpt_dir=d, ckpt_every=100, fault_hook=fault,
+                              key=jax.random.PRNGKey(0))
         assert ckpt.latest(d)[1] == 5
         _, res = ftloop.train_loop(AsyncTrainer(cfg, ecfg, "ours"), batch_fn, 8,
-                                   ckpt_dir=d)
+                                   ckpt_dir=d, key=jax.random.PRNGKey(0))
         assert res.resumed_from == 5 and len(res.losses) == 3
 
 
@@ -277,3 +280,31 @@ def test_second_order_correction_direction():
     stale = {"w": jnp.asarray([0.0, 0.0])}
     out = forecast.second_order_correct(g, now, stale, lam=1.0)
     np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 0.0])
+
+
+def test_train_loop_requires_key(cfg):
+    """RNG002 regression: the PRNGKey(0) fallback silently decoupled runs from
+    --seed; a fresh loop must be given its key (or a pre-built state)."""
+    ecfg = EngineCfg(n_stages=2, lr=1e-3, constant_lr=True)
+    batch_fn, _ = make_batch_fn(cfg, 1, 2, 16, seed=0)
+    with pytest.raises(ValueError, match="key"):
+        ftloop.train_loop(AsyncTrainer(cfg, ecfg, "ours"), batch_fn, 1)
+
+
+def test_train_loop_seeds_actually_diverge(cfg):
+    """Two different seeds must produce different inits and different loss
+    trajectories (the old fallback made every keyless run seed-0)."""
+    ecfg = EngineCfg(n_stages=2, lr=1e-3, constant_lr=True)
+    batch_fn, _ = make_batch_fn(cfg, 1, 2, 16, seed=0)
+    out = {}
+    for seed in (0, 1):
+        tr = AsyncTrainer(cfg, ecfg, "ours")
+        state, res = ftloop.train_loop(tr, batch_fn, 2,
+                                       key=jax.random.PRNGKey(seed))
+        out[seed] = (state, res.losses)
+    s0, l0 = out[0]
+    s1, l1 = out[1]
+    assert l0 != l1, "seed 0 and seed 1 produced identical loss trajectories"
+    diffs = [float(jnp.max(jnp.abs(a - b)))
+             for a, b in zip(jax.tree.leaves(s0), jax.tree.leaves(s1))]
+    assert max(diffs) > 0.0, "seed 0 and seed 1 produced identical states"

@@ -225,3 +225,25 @@ def test_event_mode_churn_rejects_all_replicas_out(setup):
     sw = SwarmTrainer(cfg, _ecfg(), "ours_nows", SwarmCfg(replicas=2, sync_every=2))
     with pytest.raises(RuntimeError, match="outage"):
         sw.run_event([f1, f2], 4, key=jax.random.PRNGKey(8), churn="0,0,4/1,0,4")
+
+
+def test_run_event_requires_key(setup):
+    """RNG002 regression: the PRNGKey(0) fallback silently decoupled the
+    swarm init from --seed; run_event must be given its key."""
+    cfg, _, (f1, f2) = setup
+    sw = SwarmTrainer(cfg, _ecfg(), "ours_nows", SwarmCfg(replicas=2))
+    with pytest.raises(ValueError, match="key"):
+        sw.run_event([f1, f2], 2)
+
+
+def test_run_event_seeds_actually_diverge(setup):
+    """Two different keys must yield different inits and loss streams."""
+    cfg, _, (f1, f2) = setup
+    losses = {}
+    for seed in (0, 1):
+        sw = SwarmTrainer(cfg, _ecfg(), "ours_nows",
+                          SwarmCfg(replicas=2, sync_every=2))
+        out = sw.run_event([f1, f2], 2, key=jax.random.PRNGKey(seed))
+        losses[seed] = out["losses"]
+    assert losses[0] != losses[1], (
+        "seed 0 and seed 1 produced identical swarm loss streams")
