@@ -27,9 +27,15 @@ artifacts/BENCH_runtime.json:
   checkpoints): the measured loss gap and wall overhead of surviving
   `nan_grad`/`drop`/`dup` fault loads.
 
+- `mesh_*`: cross-replica sync A/B (DESIGN.md §13) — the barrier SwarmTrainer
+  vs the fully-async gossip MeshTrainer (sync as runtime events, no barrier)
+  vs gossip with the ZeRO-1 sharded optimizer, same seeds/data. Each row
+  carries the per-replica optimizer-state bytes next to the replicated
+  baseline — the measured memory payoff of sharding.
+
 Sections run individually via --sections (comma list of
-throughput,trace,adapt,sim,k_equiv,chaos); a partial run merges its rows into
-an existing BENCH_runtime.json instead of clobbering the other sections.
+throughput,trace,adapt,sim,k_equiv,chaos,mesh); a partial run merges its rows
+into an existing BENCH_runtime.json instead of clobbering the other sections.
 """
 from __future__ import annotations
 
@@ -51,7 +57,7 @@ from repro.core.methods import get_method
 from repro.core.runtime import EventRuntime, RuntimeCfg, simulate_schedule
 from repro.data.synthetic import make_batch_fn
 
-SECTIONS = ("throughput", "trace", "adapt", "sim", "k_equiv", "chaos")
+SECTIONS = ("throughput", "trace", "adapt", "sim", "k_equiv", "chaos", "mesh")
 
 
 def main(steps=40, stages=4, sections=None):
@@ -328,6 +334,68 @@ def main(steps=40, stages=4, sections=None):
                          "rollbacks": rec.rollbacks,
                          "final_dloss": dl_rec,
                          "overhead_x": rec_dt / base_dt},
+        }
+
+    if "mesh" in sections:
+        # cross-replica sync A/B (DESIGN.md §13): barrier SwarmTrainer vs the
+        # fully-async gossip MeshTrainer vs gossip + ZeRO-1 sharded optimizer,
+        # same key and per-replica data streams. The derived column pairs the
+        # per-replica optimizer-state bytes with the replicated baseline —
+        # sharding's memory payoff measured, not computed on paper.
+        from repro.core.swarm import MeshCfg, MeshTrainer, SwarmCfg, SwarmTrainer
+
+        R, period = 2, 2
+        mesh_ticks = max(steps // 5, 6)
+        bfs = [make_batch_fn(cfg, 1, 2, 64, seed=r)[0] for r in range(R)]
+        mecfg = dataclasses.replace(ecfg, n_stages=2)
+        key = jax.random.PRNGKey(0)
+
+        t0 = time.time()
+        sw = SwarmTrainer(cfg, mecfg, "ours",
+                          SwarmCfg(replicas=R, sync_every=period))
+        bres = sw.run_event(bfs, mesh_ticks, key=key)
+        b_dt = (time.time() - t0) / mesh_ticks
+
+        cells = [("gossip", MeshCfg(replicas=R, period=period)),
+                 ("gossip_zero1", MeshCfg(replicas=R, period=period,
+                                          opt_shard=True))]
+        mesh_res = {}
+        for tag, mcfg in cells:
+            t0 = time.time()
+            mt = MeshTrainer(cfg, mecfg, "ours", mcfg)
+            mesh_res[tag] = mt.run_gossip(bfs, mesh_ticks, key=key)
+            mesh_res[tag]["tick_s"] = (time.time() - t0) / mesh_ticks
+
+        b_final = [ls[-1] for ls in bres["losses"]]
+        b_bytes = mesh_res["gossip"]["opt_bytes_replicated"]
+        rows.append(("runtime/mesh_barrier", round(1e6 * b_dt, 1),
+                     f"final={np.mean(b_final):.4f};syncs={bres['n_syncs']};"
+                     f"opt_bytes_replica={b_bytes};"
+                     f"opt_bytes_replicated={b_bytes}"))
+        for tag in mesh_res:
+            mres = mesh_res[tag]
+            m_final = [ls[-1] for ls in mres["losses"]]
+            rows.append((f"runtime/mesh_{tag}",
+                         round(1e6 * mres["tick_s"], 1),
+                         f"final={np.mean(m_final):.4f};"
+                         f"absorbed={mres['absorbed']};"
+                         f"stale_dropped={mres['stale_dropped']};"
+                         f"opt_bytes_replica={mres['opt_bytes_per_replica']};"
+                         f"opt_bytes_replicated={mres['opt_bytes_replicated']}"))
+        full["mesh"] = {
+            "replicas": R, "period": period, "ticks": mesh_ticks,
+            "barrier": {"losses": bres["losses"], "tick_s": b_dt,
+                        "n_syncs": bres["n_syncs"],
+                        "opt_bytes_per_replica": b_bytes,
+                        "opt_bytes_replicated": b_bytes},
+            **{tag: {"losses": mres["losses"], "tick_s": mres["tick_s"],
+                     "absorbed": mres["absorbed"],
+                     "stale_dropped": mres["stale_dropped"],
+                     "unabsorbed": mres["unabsorbed"],
+                     "makespan": mres["makespan"],
+                     "opt_bytes_per_replica": mres["opt_bytes_per_replica"],
+                     "opt_bytes_replicated": mres["opt_bytes_replicated"]}
+               for tag, mres in mesh_res.items()},
         }
 
     if sections != set(SECTIONS):

@@ -113,14 +113,34 @@ def _f32_sds(tree):
     return jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), tree)
 
 
+def _ckpt_opt_layout(path: str):
+    """Peek the optimizer layout of an AsyncState checkpoint from key names
+    alone (no array reads): 'shard' | 'shards' | 'flat' | 'tree' | None."""
+    with np.load(path, allow_pickle=False) as z:
+        keys = [k for k in z.files if ".opt[" in k]
+    for tag, tok in (("shard", "['shard']"), ("shards", "['shards']"),
+                     ("flat", "['flat']"), ("tree", "['m']")):
+        if any(tok in k for k in keys):
+            return tag
+    return None
+
+
 def restore(path: str, like):
     """Restore into the structure of `like` (shapes/dtypes validated).
 
-    AsyncState checkpoints additionally restore across *optimizer layouts*: a
-    tree-map ('m'/'v') checkpoint loads into a fused flat-buffer state and vice
-    versa (the layouts are interconvertible via flatten_tree/unflatten_like), so
-    a run saved under one kernel backend resumes under another — e.g. CPU-ref
-    debugging a TPU-pallas run's checkpoint, or flipping REPRO_KERNEL_BACKEND.
+    AsyncState checkpoints additionally restore across *optimizer layouts*:
+
+      - tree-map ('m'/'v') <-> fused flat-buffer ('flat'): interconvertible
+        via flatten_tree/unflatten_like, so a run saved under one kernel
+        backend resumes under another — e.g. CPU-ref debugging a TPU-pallas
+        run's checkpoint, or flipping REPRO_KERNEL_BACKEND.
+      - replicated (tree or flat) -> ZeRO-1 owner-shard ('shard'): the
+        target rank's segment is sliced out at the like's (rank, world) —
+        shard boundaries are re-derived from the like, so a replicated
+        checkpoint restores onto any replica count.
+      - a single-rank 'shard' checkpoint canNOT restore a replicated like:
+        it holds only 1/world of the moments. Gather all replica states with
+        `zero1_merge_states` and save that instead (raised as ValueError).
     """
     from repro.optim import optimizers as _opt
 
@@ -135,16 +155,28 @@ def restore(path: str, like):
         # rather than masking it behind an alternate-layout KeyError
         msg = str(e)
         if ".opt[" not in msg or not any(
-                t in msg for t in ("['m']", "['v']", "['flat']")):
+                t in msg for t in ("['m']", "['v']", "['flat']", "['shard']",
+                                   "['rank']", "['world']")):
             raise
+        ck_layout = _ckpt_opt_layout(path)
+        if ck_layout in ("shard", "shards"):
+            raise ValueError(
+                f"{path}: checkpoint holds a ZeRO-1 sharded optimizer layout "
+                f"({ck_layout!r}) which cannot be expanded from one file — "
+                "gather the replica states with checkpoint.zero1_merge_states "
+                "and save the merged (replicated) state instead") from e
+        if ck_layout is None:
+            raise
+        want_shard = any("shard" in o for o in like.opt)
         # build the alternate-layout template (ShapeDtypeStructs only — no
         # model-sized allocations) and convert after loading
+        drop = ("m", "v", "flat", "shard", "rank", "world")
         alt_opt = []
         for o, sp in zip(like.opt, like.params):
-            oo = {k: v for k, v in o.items() if k not in ("m", "v", "flat")}
-            if "flat" in o:  # want fused; ckpt is tree-map
+            oo = {k: v for k, v in o.items() if k not in drop}
+            if ck_layout == "tree":
                 oo["m"], oo["v"] = _f32_sds(sp), _f32_sds(sp)
-            else:  # want tree-map; ckpt is fused flat
+            else:  # ckpt is fused flat
                 n = int(sum(np.prod(x.shape) for x in jax.tree.leaves(sp)))
                 flat = jax.ShapeDtypeStruct((n,), jnp.float32)
                 oo["flat"] = {"p": flat, "m": flat, "v": flat}
@@ -152,14 +184,27 @@ def restore(path: str, like):
         loaded, meta = _restore_exact(path, like._replace(opt=tuple(alt_opt)))
         opt = []
         for o_like, o_got, sp in zip(like.opt, loaded.opt, loaded.params):
-            oo = {k: v for k, v in o_got.items() if k not in ("m", "v", "flat")}
-            if "flat" in o_like:
-                oo["flat"] = {"p": _opt.flatten_tree(sp),
-                              "m": _opt.flatten_tree(o_got["m"]),
-                              "v": _opt.flatten_tree(o_got["v"])}
+            oo = {k: v for k, v in o_got.items() if k not in drop}
+            if ck_layout == "tree":
+                pf = _opt.flatten_tree(sp)
+                mf = _opt.flatten_tree(o_got["m"])
+                vf = _opt.flatten_tree(o_got["v"])
             else:
-                oo["m"] = _opt.unflatten_like(o_got["flat"]["m"], _f32_sds(sp))
-                oo["v"] = _opt.unflatten_like(o_got["flat"]["v"], _f32_sds(sp))
+                pf, mf, vf = (o_got["flat"]["p"], o_got["flat"]["m"],
+                              o_got["flat"]["v"])
+            if want_shard:
+                rank = int(np.asarray(o_like["rank"]))
+                world = int(np.asarray(o_like["world"]))
+                oo["shard"] = {"p": _opt.zero1_shard(pf, rank, world),
+                               "m": _opt.zero1_shard(mf, rank, world),
+                               "v": _opt.zero1_shard(vf, rank, world)}
+                oo["rank"] = jnp.asarray(rank, jnp.int32)
+                oo["world"] = jnp.asarray(world, jnp.int32)
+            elif "flat" in o_like:
+                oo["flat"] = {"p": pf, "m": mf, "v": vf}
+            else:
+                oo["m"] = _opt.unflatten_like(mf, _f32_sds(sp))
+                oo["v"] = _opt.unflatten_like(vf, _f32_sds(sp))
             opt.append(oo)
         return loaded._replace(opt=tuple(opt)), meta
 
@@ -231,18 +276,120 @@ def save_step(ckpt_dir: str, state, step: int, keep: int = 3, metadata=None):
                            stale, e)
 
 
-def _stage_moments(state):
-    """Per-stage (m, v) as param-shaped fp32 trees, from either optimizer layout:
-    tree-map ('m'/'v' trees) or fused flat-buffer ('flat' contiguous vectors,
-    unflattened against the stage's param tree). None if neither matches."""
+def zero1_merge_states(states) -> "object":
+    """Gather a list of per-rank ZeRO-1 'shard'-layout AsyncStates into ONE
+    replicated fused-flat-layout AsyncState — the all-gather that makes a
+    sharded run checkpointable/restageable as a whole.
+
+    Owner-authoritative: each rank contributes its own (p, m, v) segment;
+    concatenate-and-trim recovers the exact unsharded vectors, so
+    `zero1_shard_states(zero1_merge_states(ss), R')` at any R' is bit-exact
+    on params and moments (tests/test_mesh.py restage roundtrip). Stashes
+    re-warm from the merged params; step/count/mu_prod come from rank 0
+    (identical across ranks after any full absorption round).
+    """
     from repro.optim import optimizers as _opt
 
+    if not states:
+        raise ValueError("zero1_merge_states: need at least one rank state")
+    for st in states:
+        if not all("shard" in o for o in st.opt):
+            raise ValueError("zero1_merge_states: every state must hold the "
+                             "ZeRO-1 'shard' optimizer layout")
+    by_rank = sorted(states, key=lambda st: int(np.asarray(st.opt[0]["rank"])))
+    world = int(np.asarray(by_rank[0].opt[0]["world"]))
+    ranks = [int(np.asarray(st.opt[0]["rank"])) for st in by_rank]
+    if ranks != list(range(world)) or len(states) != world:
+        raise ValueError(f"zero1_merge_states: need ranks 0..{world - 1} "
+                         f"exactly once, got {ranks}")
+    base = by_rank[0]
+    params, opt, stashes = [], [], []
+    for i, sp in enumerate(base.params):
+        n = int(sum(np.prod(x.shape) for x in jax.tree.leaves(sp)))
+        pf = _opt.zero1_unshard([st.opt[i]["shard"]["p"] for st in by_rank], n)
+        mf = _opt.zero1_unshard([st.opt[i]["shard"]["m"] for st in by_rank], n)
+        vf = _opt.zero1_unshard([st.opt[i]["shard"]["v"] for st in by_rank], n)
+        mp = _opt.unflatten_like(pf, sp)
+        params.append(mp)
+        opt.append({"flat": {"p": pf, "m": mf, "v": vf},
+                    "count": base.opt[i]["count"],
+                    "mu_prod": base.opt[i]["mu_prod"]})
+        stashes.append(jax.tree.map(
+            lambda s, p: jnp.broadcast_to(
+                p[None].astype(s.dtype), s.shape).copy(), base.stashes[i], mp))
+    return base._replace(params=tuple(params), stashes=tuple(stashes),
+                         opt=tuple(opt))
+
+
+def zero1_shard_states(state, world: int) -> list:
+    """Scatter a replicated AsyncState (fused-flat or tree-map optimizer
+    layout) into `world` per-rank ZeRO-1 'shard'-layout AsyncStates, re-deriving
+    the shard boundaries S = ceil(n / world) at the target replica count.
+    Inverse of `zero1_merge_states` up to stash re-warming; params are
+    replicated to every rank (the mesh keeps them loosely synced via gossip).
+    """
+    from repro.optim import optimizers as _opt
+
+    if world < 1:
+        raise ValueError(f"world must be >= 1, got {world}")
+    flats = []
+    for sp, o in zip(state.params, state.opt):
+        if "flat" in o:
+            pf, mf, vf = o["flat"]["p"], o["flat"]["m"], o["flat"]["v"]
+        elif "m" in o and "v" in o:
+            pf = _opt.flatten_tree(sp)
+            mf, vf = _opt.flatten_tree(o["m"]), _opt.flatten_tree(o["v"])
+        else:
+            raise ValueError("zero1_shard_states: state must hold a replicated "
+                             "('flat' or 'm'/'v') optimizer layout")
+        if "mu_prod" not in o:
+            raise ValueError("zero1_shard_states: the 'shard' layout is "
+                             "nadam-family only (state has no mu_prod)")
+        flats.append((pf, mf, vf, o))
+    out = []
+    for r in range(world):
+        opt = []
+        for pf, mf, vf, o in flats:
+            opt.append({"shard": {"p": _opt.zero1_shard(pf, r, world),
+                                  "m": _opt.zero1_shard(mf, r, world),
+                                  "v": _opt.zero1_shard(vf, r, world)},
+                        "count": o["count"], "mu_prod": o["mu_prod"],
+                        "rank": jnp.asarray(r, jnp.int32),
+                        "world": jnp.asarray(world, jnp.int32)})
+        out.append(state._replace(opt=tuple(opt)))
+    return out
+
+
+def _stage_moments(state):
+    """Per-stage (m, v) as param-shaped fp32 trees, from any full-information
+    optimizer layout: tree-map ('m'/'v' trees), fused flat-buffer ('flat'
+    contiguous vectors), or the ZeRO-1 collective ('shards', unsharded here).
+    None if none matches; a single-rank 'shard' layout raises — it holds only
+    1/world of the moments, so treating it like 'no moments' would silently
+    drop the other ranks' state (the pre-ISSUE-10 restage bug)."""
+    from repro.optim import optimizers as _opt
+
+    if any("shard" in o for o in state.opt):
+        raise ValueError(
+            "state holds a single-rank ZeRO-1 'shard' optimizer layout; "
+            "gather the replica states with checkpoint.zero1_merge_states "
+            "before restaging/merging — one rank alone cannot supply the "
+            "full moment buffers")
     if all(("m" in o and "v" in o) for o in state.opt):
         return [o["m"] for o in state.opt], [o["v"] for o in state.opt]
+    likes = [_f32_sds(sp) for sp in state.params]  # shape templates, no alloc
     if all("flat" in o for o in state.opt):
-        likes = [_f32_sds(sp) for sp in state.params]  # shape templates, no alloc
         m = [_opt.unflatten_like(o["flat"]["m"], lk) for o, lk in zip(state.opt, likes)]
         v = [_opt.unflatten_like(o["flat"]["v"], lk) for o, lk in zip(state.opt, likes)]
+        return m, v
+    if all("shards" in o for o in state.opt):
+        m, v = [], []
+        for o, sp, lk in zip(state.opt, state.params, likes):
+            n = int(sum(np.prod(x.shape) for x in jax.tree.leaves(sp)))
+            m.append(_opt.unflatten_like(
+                _opt.zero1_unshard([s["m"] for s in o["shards"]], n), lk))
+            v.append(_opt.unflatten_like(
+                _opt.zero1_unshard([s["v"] for s in o["shards"]], n), lk))
         return m, v
     return None
 
@@ -253,10 +400,18 @@ def restage(state, trainer_old, trainer_new):
     Params and optimizer moment buffers merge to monolithic and re-split under the
     new stage partition (fused flat-buffer optimizer states are unflattened to
     param-shaped trees first, and re-flattened for the new trainer when it is
-    also fused). Stash ring buffers re-warm from the current weights.
+    also fused). Stash ring buffers re-warm from the restored params. A
+    single-rank ZeRO-1 'shard' state raises up front: it holds only 1/world of
+    the moments, and the old silent fallback would restage the params while
+    dropping every rank's moments on the floor — gather the replica states
+    with `zero1_merge_states` first, restage the merged state, then re-shard
+    at the target replica count with `zero1_shard_states` (the R=2<->R=4
+    roundtrip is bit-exact, tests/test_mesh.py).
     """
     from repro.optim import optimizers as _opt
 
+    if any("shard" in o for o in state.opt):
+        _stage_moments(state)  # raises with the zero1_merge_states guidance
     merged_params = trainer_old.merge_params(state)
     new_state = trainer_new.init_from_params(merged_params)
 

@@ -142,6 +142,12 @@ class Mailbox:
     def take(self, mb: int):
         return self._items.pop(mb)
 
+    def pending(self) -> list:
+        """Buffered keys in sorted order — a deterministic snapshot for
+        consumers that drain by scanning (the mesh gossip inbox) rather than
+        by asking for one expected index (1F1B's strict in-order take)."""
+        return sorted(self._items)
+
     def __len__(self):
         return len(self._items)
 
@@ -560,3 +566,316 @@ def poisson_trace(n_requests: int, *, rate: float = 1.0, seed: int = 0,
         gl = int(_serve_rng(seed, rid, 2).integers(gen_lens[0], gen_lens[1] + 1))
         reqs.append(Request(rid=rid, arrival=t, prompt_len=pl, gen_len=gl))
     return tuple(reqs)
+
+
+# ---------------------------------------------------------------------------
+# Cross-replica sync: gossip mesh events (core/swarm.py MeshTrainer)
+# ---------------------------------------------------------------------------
+#
+# The barrier SwarmTrainer round-trips every replica through a global drain
+# before averaging — reintroducing the sync stall the async pipeline removes.
+# The mesh promotes cross-replica sync to a first-class event kind: a
+# `SyncEvent` carries (replica, stage, round) through the same deterministic
+# EventQueue/Mailbox discipline as fwd/bwd, with its own keyed delay model
+# (`SyncDelayModel`) and keyed partner selection (`gossip_partners`). The
+# driver (`drive_mesh`) is compute-free: callbacks supply the per-round local
+# compute span and the absorption math, so the full training runtime
+# (swarm.MeshTrainer) and the schedule twin (runtime.simulate_mesh_schedule)
+# replay the IDENTICAL event stream — that equality is a pinned contract
+# (tests/test_mesh.py).
+
+# Keyed-draw namespaces, disjoint from the training words ((stage<<40)|...,
+# _OP_IDS << 36) and the serving words ((1<<48)|...): sync latencies draw at
+# bit 61, partner selection at bits 61|60.
+_SYNC_NS = 2 << 60
+_PARTNER_NS = 3 << 60
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncEvent:
+    """One cross-replica partner exchange in flight: replica `src`'s stage
+    `stage` weights, published at the end of gossip round `round`, addressed
+    to replica `dst`."""
+
+    src: int
+    dst: int
+    stage: int
+    round: int
+
+
+class SyncDelayModel:
+    """latency(src, dst, stage, rnd) -> float >= 0 for one SyncEvent hop.
+
+    The sync analogue of DelayModel: draws are keyed by the full event
+    coordinate, never by sampler state, so a mesh run replays exactly under
+    the same seed regardless of event interleaving. Zero latency is legal —
+    a same-instant delivery is the degenerate case that reduces gossip to
+    the barrier sync (DESIGN.md §13)."""
+
+    def latency(self, src: int, dst: int, stage: int, rnd: int) -> float:
+        return max(float(self._latency(src, dst, stage, rnd)), 0.0)
+
+    def _latency(self, src, dst, stage, rnd):
+        raise NotImplementedError
+
+    def _rng(self, seed: int, src: int, dst: int, stage: int, rnd: int):
+        word = (_SYNC_NS | ((src & 0xFF) << 52) | ((dst & 0xFF) << 44)
+                | ((stage & 0xFF) << 36) | (rnd & 0xFFFFFFFFF))
+        return np.random.Generator(np.random.Philox(
+            key=np.array([seed & 0xFFFFFFFFFFFFFFFF, word], dtype=np.uint64)))
+
+
+@dataclasses.dataclass
+class FixedSyncDelay(SyncDelayModel):
+    """Uniform deterministic sync-hop latency (0.0 = the barrier-equivalent
+    degenerate case)."""
+
+    lat: float = 0.0
+
+    def _latency(self, src, dst, stage, rnd):
+        return self.lat
+
+
+@dataclasses.dataclass
+class JitterSyncDelay(SyncDelayModel):
+    """Log-normal multiplicative jitter per hop: base * exp(N(0, sigma))."""
+
+    base: float = 1.0
+    sigma: float = 0.25
+    seed: int = 0
+
+    def _latency(self, src, dst, stage, rnd):
+        z = self._rng(self.seed, src, dst, stage, rnd).normal(0.0, self.sigma)
+        return self.base * float(np.exp(z))
+
+
+def make_sync_delay_model(spec, seed: int = 0) -> SyncDelayModel:
+    """Parse a CLI-friendly sync-delay spec:
+
+      "fixed" | "fixed:LAT" | "jitter:BASE,SIGMA"
+
+    None means zero-latency FixedSyncDelay (the degenerate/barrier case).
+    Same arity discipline as make_delay_model: malformed fields raise.
+    """
+    if spec is None:
+        return FixedSyncDelay(0.0)
+    if isinstance(spec, SyncDelayModel):
+        return spec
+    name, _, args = spec.partition(":")
+    if name == "fixed":
+        vals = [float(x) for x in _spec_fields(name, args, 0, 1)]
+        return FixedSyncDelay(*vals)
+    if name == "jitter":
+        parts = _spec_fields(name, args, 2, 2)
+        return JitterSyncDelay(base=float(parts[0]), sigma=float(parts[1]),
+                               seed=seed)
+    raise ValueError(f"unknown sync delay spec {spec!r}")
+
+
+def gossip_partners(seed: int, rnd: int, r: int, R: int,
+                    fanout: Optional[int] = None) -> tuple:
+    """Partner set replica `r` pushes its weights to at gossip round `rnd`.
+
+    A pure keyed function of (seed, round, replica) — no sequential RNG state,
+    so any participant (or a replayer) recomputes the identical mesh topology
+    for any round without observing the others (tests/test_mesh.py contract d).
+    fanout None (or >= R-1) selects every other replica — full fanout, the
+    all-to-all degenerate case; otherwise a keyed-uniform subset of that size.
+    Returned sorted ascending.
+    """
+    if R < 1:
+        raise ValueError(f"need R >= 1 replicas, got {R}")
+    if not 0 <= r < R:
+        raise ValueError(f"replica {r} out of range for R={R}")
+    others = [x for x in range(R) if x != r]
+    if fanout is None or fanout >= len(others):
+        return tuple(others)
+    if fanout < 1:
+        raise ValueError(f"fanout must be >= 1, got {fanout}")
+    word = _PARTNER_NS | ((rnd & 0xFFFFFFFF) << 20) | (r & 0xFFFFF)
+    rng = np.random.Generator(np.random.Philox(
+        key=np.array([seed & 0xFFFFFFFFFFFFFFFF, word], dtype=np.uint64)))
+    pick = rng.permutation(len(others))[:fanout]
+    return tuple(sorted(others[int(i)] for i in pick))
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Parsed --mesh spec: cross-replica sync topology and cadence."""
+
+    mode: str  # "gossip" | "barrier"
+    period: int = 8  # local update ticks per gossip round / barrier sync
+    fanout: Optional[int] = None  # gossip partners per round (None = all)
+
+    def __post_init__(self):
+        if self.mode not in ("gossip", "barrier"):
+            raise ValueError(f"mesh mode must be gossip|barrier, got {self.mode!r}")
+        if self.period < 1:
+            raise ValueError(f"mesh period must be >= 1, got {self.period}")
+        if self.fanout is not None and self.fanout < 1:
+            raise ValueError(f"mesh fanout must be >= 1, got {self.fanout}")
+        if self.mode == "barrier" and self.fanout is not None:
+            raise ValueError("barrier mesh takes no fanout (it is all-to-all)")
+
+
+def make_mesh_spec(spec) -> MeshSpec:
+    """Parse a CLI-friendly mesh spec (docs/cli.md):
+
+      "gossip:PERIOD[,FANOUT]" — fully-async gossip averaging every PERIOD
+          ticks, pushing to FANOUT keyed partners (default: all others)
+      "barrier:PERIOD"         — the legacy round-barrier SwarmTrainer sync
+
+    Same arity discipline as make_delay_model: excess/empty fields raise.
+    """
+    if isinstance(spec, MeshSpec):
+        return spec
+    name, _, args = spec.partition(":")
+    if name == "gossip":
+        parts = _spec_fields(name, args, 1, 2)
+        kw = {"period": int(parts[0])}
+        if len(parts) > 1:
+            kw["fanout"] = int(parts[1])
+        return MeshSpec("gossip", **kw)
+    if name == "barrier":
+        parts = _spec_fields(name, args, 1, 1)
+        return MeshSpec("barrier", period=int(parts[0]))
+    raise ValueError(f"unknown mesh spec {spec!r}")
+
+
+def drive_mesh(R: int, n_rounds: int, *, n_stages: int = 1,
+               fanout: Optional[int] = None, seed: int = 0, sync_delay=None,
+               max_stale_rounds: int = 1, run_round=None, snapshot=None,
+               absorb=None) -> dict:
+    """The fully-async gossip event loop, shared by the training runtime
+    (swarm.MeshTrainer.run_gossip) and its compute-free twin
+    (runtime.simulate_mesh_schedule).
+
+    Per replica lifecycle, all through one deterministic EventQueue:
+
+      mesh_boundary(r, n) — replica r finished local round n: snapshot its
+          stage weights, push one SyncEvent per (partner, stage) with a keyed
+          latency from `sync_delay`, then schedule mesh_start(r, n) at now.
+      mesh_sync(dst, ...) — a SyncEvent arrives: ingest into dst's inbox
+          Mailbox under the strict exactly-once discipline.
+      mesh_start(r, n)    — absorb: scan the inbox, drop contributions staler
+          than `max_stale_rounds` rounds (bounded like stash depth), keep the
+          newest per (stage, src), hand them to `absorb`, then start round
+          n+1 (span from `run_round`). There is NO barrier: a replica never
+          waits for partners; late weights land in a later absorption or age
+          out.
+
+    Same-instant ordering: a batch of equal-time events processes arrivals
+    first, then boundaries, then starts — and when a batch holds both
+    boundaries and starts, the starts are re-queued at the same timestamp so
+    any zero-latency contributions published by those boundaries are ingested
+    before anyone absorbs. This is what makes the zero-delay/full-fanout
+    degenerate case reduce to the barrier sync bitwise (tests/test_mesh.py).
+
+    Callbacks (all optional except run_round):
+      run_round(r, rnd) -> float      simulated span of replica r's round rnd
+      snapshot(r, rnd) -> list        per-stage payloads published at a
+                                      boundary (None -> payload-free twin)
+      absorb(r, rnd, by_stage, now)   by_stage: {stage: [(src, src_rnd,
+                                      payload), ...] sorted by src}
+
+    Returns {"events", "absorbed", "stale_dropped", "superseded",
+             "unabsorbed", "makespan", "inbox_high_water"}; `events` is a
+    payload-free list of tuples — directly comparable across runtime/twin:
+      ("round_start", t, r, rnd)
+      ("round_end",   t, r, rnd)
+      ("sync_send",   t, src, dst, stage, rnd)
+      ("sync_arrive", t, src, dst, stage, rnd)
+      ("absorb",      t, r, rnd, n_absorbed, n_stale)
+    """
+    if R < 1:
+        raise ValueError(f"need R >= 1 replicas, got {R}")
+    if n_rounds < 1:
+        raise ValueError(f"need n_rounds >= 1, got {n_rounds}")
+    if max_stale_rounds < 0:
+        raise ValueError(f"max_stale_rounds must be >= 0, got {max_stale_rounds}")
+    if run_round is None:
+        raise ValueError("drive_mesh requires a run_round callback")
+    sdm = (sync_delay if isinstance(sync_delay, SyncDelayModel)
+           else make_sync_delay_model(sync_delay, seed=seed))
+    q = EventQueue()
+    inbox = [Mailbox() for _ in range(R)]
+    log: list = []
+    absorbed = stale_dropped = superseded = 0
+
+    def key_of(src, rnd, stage):
+        return (rnd * R + src) * n_stages + stage
+
+    def decode(k):
+        stage = k % n_stages
+        sr = k // n_stages
+        return sr % R, sr // R, stage  # (src, rnd, stage)
+
+    for r in range(R):
+        log.append(("round_start", 0.0, r, 0))
+        q.push(run_round(r, 0), "mesh_boundary", r, 0)
+
+    while q:
+        batch = q.pop_batch()
+        now = batch[0].time
+        arrivals = [e for e in batch if e.kind == "mesh_sync"]
+        bounds = [e for e in batch if e.kind == "mesh_boundary"]
+        starts = [e for e in batch if e.kind == "mesh_start"]
+        for e in arrivals:
+            se, data = e.payload
+            log.append(("sync_arrive", now, se.src, se.dst, se.stage, se.round))
+            inbox[se.dst].put(key_of(se.src, se.round, se.stage), (se, data))
+        for e in bounds:
+            r, rnd = e.stage, e.mb
+            log.append(("round_end", now, r, rnd))
+            payload = snapshot(r, rnd) if snapshot is not None else None
+            for dst in gossip_partners(seed, rnd, r, R, fanout):
+                for i in range(n_stages):
+                    log.append(("sync_send", now, r, dst, i, rnd))
+                    se = SyncEvent(src=r, dst=dst, stage=i, round=rnd)
+                    q.push(now + sdm.latency(r, dst, i, rnd), "mesh_sync", dst,
+                           i, payload=(se, None if payload is None else payload[i]))
+            q.push(now, "mesh_start", r, rnd)
+        if bounds and starts:
+            # defer: those boundaries may have published zero-latency
+            # contributions at `now` that must be ingested before absorbing
+            for e in starts:
+                q.push(now, "mesh_start", e.stage, e.mb)
+            continue
+        for e in starts:
+            r, rnd = e.stage, e.mb
+            newest: dict = {}  # (stage, src) -> (src_rnd, key)
+            n_stale_here = 0
+            for k in inbox[r].pending():
+                src, src_rnd, stage = decode(k)
+                if src_rnd < rnd - max_stale_rounds:
+                    inbox[r].take(k)
+                    stale_dropped += 1
+                    n_stale_here += 1
+                    continue
+                prev = newest.get((stage, src))
+                if prev is None or src_rnd > prev[0]:
+                    if prev is not None:
+                        inbox[r].take(prev[1])
+                        superseded += 1
+                    newest[(stage, src)] = (src_rnd, k)
+                else:
+                    inbox[r].take(k)
+                    superseded += 1
+            by_stage: dict = {}
+            for (stage, src), (src_rnd, k) in sorted(newest.items()):
+                _, data = inbox[r].take(k)
+                by_stage.setdefault(stage, []).append((src, src_rnd, data))
+                absorbed += 1
+            log.append(("absorb", now, r, rnd,
+                        sum(len(v) for v in by_stage.values()), n_stale_here))
+            if absorb is not None and by_stage:
+                absorb(r, rnd, by_stage, now)
+            if rnd + 1 < n_rounds:
+                log.append(("round_start", now, r, rnd + 1))
+                q.push(now + run_round(r, rnd + 1), "mesh_boundary", r, rnd + 1)
+
+    return {"events": log, "absorbed": absorbed, "stale_dropped": stale_dropped,
+            "superseded": superseded,
+            "unabsorbed": sum(len(mb) for mb in inbox),
+            "makespan": max((e[1] for e in log), default=0.0),
+            "inbox_high_water": [mb.high_water for mb in inbox]}

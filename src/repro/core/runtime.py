@@ -961,6 +961,52 @@ def simulate_schedule(P: int, K: int = 1, n_ticks: int = 50, delay_model=None,
     }
 
 
+def simulate_mesh_schedule(R: int, P: int, K: int = 1, n_ticks: int = 50, *,
+                           period: int = 8, fanout=None, sync_delay=None,
+                           delay_models=None, seed: int = 0, in_flight=None,
+                           max_stale_rounds: int = 1) -> dict:
+    """Compute-free twin of swarm.MeshTrainer.run_gossip: R per-replica
+    simulate_schedule chunks stitched by the SAME events.drive_mesh loop, so
+    the payload-free mesh event log ("events") matches the full training
+    runtime's event for event under identical (delay_models, sync_delay, seed)
+    — a pinned contract (tests/test_mesh.py contract c).
+
+    Caveat: each gossip round simulates as a fresh drained chunk, so per-chunk
+    microbatch indices restart at 0 here while the full runtime's keep
+    counting. The twin is therefore exact for microbatch-independent compute
+    delay models (fixed, permanent straggler); mb-windowed models (outage,
+    period stragglers, traces) diverge across round boundaries.
+
+    Per-replica delay models follow run_gossip's convention: `delay_models`
+    is None (FixedDelay everywhere) or a length-R list of specs/models, each
+    seeded with its replica index. Returns the drive_mesh telemetry dict plus
+    {"spans": [R][n_rounds] per-round makespans, "utilization": [R] mean
+    per-stage utilization of the last round}.
+    """
+    dms = [events.make_delay_model(
+        delay_models[r] if delay_models else None, seed=r) for r in range(R)]
+    n_rounds = -(-n_ticks // period)
+    spans = [[] for _ in range(R)]
+    util = [0.0] * R
+
+    def run_round(r, rnd):
+        chunk = min(period, n_ticks - rnd * period)
+        sim = simulate_schedule(P, K, chunk, delay_model=dms[r],
+                                in_flight=in_flight, seed=r)
+        spans[r].append(sim["makespan"])
+        util[r] = float(np.mean(sim["utilization"]))
+        return sim["makespan"]
+
+    out = events.drive_mesh(R, n_rounds, n_stages=P, fanout=fanout, seed=seed,
+                            sync_delay=sync_delay,
+                            max_stale_rounds=max_stale_rounds,
+                            run_round=run_round)
+    out["spans"] = spans
+    out["utilization"] = util
+    out["n_rounds"] = n_rounds
+    return out
+
+
 def simulate_serve_schedule(requests, *, n_slots: int = 4, page_size: int = 8,
                             n_pages: int = 64, prefill_tok_s: float = 4096.0,
                             decode_step_s: float = 0.02) -> dict:

@@ -278,3 +278,237 @@ class SwarmTrainer:
         loss, _ = staged.staged_forward(self.inner.stage_fns, params0,
                                         jax.tree.map(lambda x: x[0][0], batch))
         return loss
+
+
+# ---------------------------------------------------------------------------
+# Fully-async 2D mesh: gossip stage-averaging as runtime events (no barrier)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MeshCfg:
+    """Config for the fully-async gossip mesh (DESIGN.md §13).
+
+    replicas x period play the role of SwarmCfg.replicas x sync_every, but the
+    sync itself is event-driven: no replica ever waits for another. fanout
+    bounds how many keyed partners each replica pushes to per round (None =
+    all others); max_stale_rounds bounds absorption staleness exactly like
+    stash depth bounds weight staleness. opt_shard enables the ZeRO-1
+    owner-shard optimizer (each replica persists 1/R of the flat p/m/v);
+    compress keeps the barrier path's int8+EF per-replica discipline and is
+    mutually exclusive with opt_shard (a quantized average would corrupt the
+    owner-authoritative shard segments).
+    """
+
+    replicas: int = 2
+    period: int = 8
+    fanout: object = None  # Optional[int]
+    compress: bool = False
+    opt_shard: bool = False
+    max_stale_rounds: int = 1
+    sync_delay: object = None  # spec str | events.SyncDelayModel | None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError(f"need >= 1 replicas, got {self.replicas}")
+        if self.period < 1:
+            raise ValueError(f"mesh period must be >= 1, got {self.period}")
+        if self.max_stale_rounds < 0:
+            raise ValueError(
+                f"max_stale_rounds must be >= 0, got {self.max_stale_rounds}")
+        if self.compress and self.opt_shard:
+            raise ValueError("compress and opt_shard are mutually exclusive: "
+                             "quantized averaging would corrupt the "
+                             "owner-authoritative ZeRO-1 param segments")
+
+
+class MeshTrainer:
+    """Per-replica EventRuntimes stitched by gossip SyncEvents (events.drive_mesh).
+
+    Degenerate-case contract (tests/test_mesh.py): with identical per-replica
+    delay models, zero sync delay, full fanout and no compression, every
+    replica's absorption sees exactly the other replicas' same-round weights,
+    and the absorbed mean is computed with the SAME expression and summation
+    order as SwarmTrainer.run_event's barrier `sync_stage` — so the two paths
+    are bitwise identical. With opt_shard, absorption instead adopts each
+    partner's owner-authoritative ZeRO-1 param segment (the event-driven
+    all-gather half of the sharded optimizer step).
+    """
+
+    def __init__(self, model_cfg, ecfg: EngineCfg, method: str, mcfg: MeshCfg):
+        from repro.optim import optimizers as opt_mod
+
+        self.mcfg = mcfg
+        self.inner = AsyncTrainer(model_cfg, ecfg, method)
+        R = mcfg.replicas
+        if mcfg.opt_shard:
+            if self.inner.method.optimizer not in ("nadam", "nadam_nodiscount"):
+                raise ValueError(
+                    "opt_shard requires a nadam-family optimizer (the ZeRO-1 "
+                    f"shard update is fused nag_update), got "
+                    f"{self.inner.method.optimizer!r}")
+            # one trainer per replica, its optimizer swapped for the rank's
+            # owner-shard variant. Mirrors engine.py's construction: lr=1.0
+            # (folded via the lr_scale schedule), method opt_kw on top of the
+            # EngineCfg weight-decay default.
+            self.replica_trainers = []
+            for r in range(R):
+                tr = AsyncTrainer(model_cfg, ecfg, method)
+                kw = dict(tr.method.opt_kwargs())
+                kw.setdefault("wd", ecfg.weight_decay)
+                tr.opt = opt_mod.nadam_flat_shard(
+                    rank=r, world=R, lr=1.0,
+                    discount=(tr.method.optimizer != "nadam_nodiscount"),
+                    backend=tr.kernel_backend, **kw)
+                self.replica_trainers.append(tr)
+        else:
+            self.replica_trainers = [self.inner] * R
+
+    @property
+    def P(self):
+        return self.inner.P
+
+    def run_gossip(self, batch_fns, n_ticks: int, *, key=None,
+                   delay_models=None, rcfg=None, in_flight=None):
+        """Run R replica pipelines for n_ticks local updates each, gossiping
+        stage weights every `period` ticks through events.drive_mesh — the
+        event-driven counterpart of SwarmTrainer.run_event with the barrier
+        removed. No churn support here: membership churn composes with the
+        per-replica runtimes (RuntimeCfg.churn), not with the mesh layer.
+
+        Returns the run_event-shaped dict plus the mesh telemetry: "events"
+        (the payload-free drive_mesh log, == the simulate_mesh_schedule twin),
+        "absorbed"/"stale_dropped"/"superseded"/"unabsorbed", "makespan",
+        "inbox_high_water", and the ZeRO-1 memory claim numbers
+        "opt_bytes_per_replica" / "opt_bytes_replicated".
+        """
+        from repro.core import events as events_mod
+        from repro.core import runtime as rt_mod
+        from repro.optim import optimizers as opt_mod
+
+        m = self.mcfg
+        R = m.replicas
+        P = self.inner.P
+        if len(batch_fns) != R:
+            raise ValueError(f"need {R} batch fns, got {len(batch_fns)}")
+        if key is None:
+            raise ValueError(
+                "run_gossip: pass key= — a hardcoded PRNGKey(0) fallback "
+                "would decouple the mesh init from --seed")
+        # key consumed once: every replica starts from the same model init
+        # (the run_event discipline); under opt_shard each replica re-derives
+        # its own rank's opt layout from the shared full param tree
+        # (init_from_params is deterministic — no further key draws).
+        if m.opt_shard:
+            full = lm.init_lm(key, self.inner.model_cfg)
+            states = [tr.init_from_params(full) for tr in self.replica_trainers]
+        else:
+            states = [self.inner.init(key)] * R
+        rts = []
+        for r in range(R):
+            # identical per-replica runtime construction to run_event — part
+            # of the degenerate-case bitwise contract
+            if rcfg is not None:
+                cfg_r = dataclasses.replace(rcfg, seed=r)
+                if delay_models is not None:
+                    cfg_r = dataclasses.replace(
+                        cfg_r, delay_model=events_mod.make_delay_model(
+                            delay_models[r], seed=r))
+            else:
+                cfg_r = rt_mod.RuntimeCfg(
+                    delay_model=events_mod.make_delay_model(
+                        delay_models[r] if delay_models else None, seed=r),
+                    in_flight=in_flight, seed=r)
+            tr = self.replica_trainers[r]
+            rts.append(rt_mod.EventRuntime(tr, cfg_r).init_from_state(states[r]))
+
+        def zero_err(r):
+            base_p = [rts[r]._stages[i].params for i in range(P)]
+            return (tuple(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), p) for p in base_p)
+                if m.compress else tuple({} for _ in base_p))
+
+        err = [zero_err(r) for r in range(R)]
+        losses = [[] for _ in range(R)]
+        taus = [[] for _ in range(R)]
+        n_rounds = -(-n_ticks // m.period)
+
+        def chunk(rnd):
+            return min(m.period, n_ticks - rnd * m.period)
+
+        def run_round(r, rnd):
+            res = rts[r].run(batch_fns[r], chunk(rnd))
+            losses[r].extend(res.losses)
+            taus[r].extend(res.taus)
+            return res.makespan
+
+        def snapshot(r, rnd):
+            return [rts[r]._stages[i].params for i in range(P)]
+
+        def absorb(r, rnd, by_stage, now):
+            for i, contribs in sorted(by_stage.items()):
+                own = rts[r]._stages[i].params
+                if m.opt_shard:
+                    # event-driven all-gather: adopt each partner's
+                    # owner-authoritative ZeRO-1 segment, keep our own
+                    pf = opt_mod.flatten_tree(own)
+                    n = pf.shape[0]
+                    S = opt_mod.zero1_shard_size(n, R)
+                    for src, _src_rnd, data in contribs:
+                        lo, hi = src * S, min(src * S + S, n)
+                        if lo >= hi:
+                            continue
+                        seg = opt_mod.zero1_shard(
+                            opt_mod.flatten_tree(data), src, R)
+                        pf = jnp.concatenate([pf[:lo], seg[:hi - lo], pf[hi:]])
+                    newp = opt_mod.unflatten_like(pf, own)
+                else:
+                    # barrier sync_stage math, verbatim: contributions plus our
+                    # own weights, summed in replica-index order
+                    entries = {src: data for src, _src_rnd, data in contribs}
+                    entries[r] = own
+                    xs_list = [entries[k] for k in sorted(entries)]
+                    mean = jax.tree.map(
+                        lambda *xs: sum(x.astype(jnp.float32) for x in xs) / len(xs_list),
+                        *xs_list)
+                    if m.compress:
+                        d_r = jax.tree.map(
+                            lambda mn, x: mn - x.astype(jnp.float32), mean, own)
+                        dq, err_r = _quantize_int8_ef(d_r, err[r][i])
+                        newp = jax.tree.map(
+                            lambda x, d: (x.astype(jnp.float32) + d).astype(x.dtype),
+                            own, dq)
+                        err[r] = err[r][:i] + (err_r,) + err[r][i + 1:]
+                    else:
+                        newp = jax.tree.map(
+                            lambda x, mn: mn.astype(x.dtype), own, mean)
+                rts[r]._stages[i].params = newp
+                # the drained stash re-warms from the absorbed weights
+                rts[r]._stages[i].fwd_point = newp
+
+        mesh = events_mod.drive_mesh(
+            R, n_rounds, n_stages=P, fanout=m.fanout, seed=m.seed,
+            sync_delay=m.sync_delay, max_stale_rounds=m.max_stale_rounds,
+            run_round=run_round, snapshot=snapshot, absorb=absorb)
+
+        opt_bytes = sum(opt_mod.optimizer_memory_bytes(rts[0]._stages[i].opt)
+                        for i in range(P))
+        if m.opt_shard:
+            n_total = sum(
+                sum(int(jnp.size(l)) for l in
+                    jax.tree.leaves(rts[0]._stages[i].params))
+                for i in range(P))
+            repl_bytes = 3 * 4 * n_total  # replicated flat fp32 p/m/v
+        else:
+            repl_bytes = opt_bytes
+        return {"losses": losses, "taus": taus, "runtimes": rts, "err": err,
+                "n_rounds": n_rounds, "events": mesh["events"],
+                "absorbed": mesh["absorbed"],
+                "stale_dropped": mesh["stale_dropped"],
+                "superseded": mesh["superseded"],
+                "unabsorbed": mesh["unabsorbed"],
+                "makespan": mesh["makespan"],
+                "inbox_high_water": mesh["inbox_high_water"],
+                "opt_bytes_per_replica": opt_bytes,
+                "opt_bytes_replicated": repl_bytes}

@@ -174,11 +174,61 @@ def run_event_loop(trainer, batch_fn, steps, *, delay_model=None, in_flight=None
     return rt, res
 
 
+def run_mesh(args, cfg, ecfg, seq, log_fn=print):
+    """--mesh execution path: R replica pipelines on the event runtime,
+    cross-replica sync per the mesh spec — fully-async gossip SyncEvents
+    (swarm.MeshTrainer) or the legacy round-barrier (SwarmTrainer.run_event).
+    Returns (out_dict, wall_s); out_dict carries per-replica losses plus the
+    per-replica vs replicated optimizer-memory report (the ZeRO-1 claim)."""
+    from repro.core.events import make_mesh_spec
+    from repro.core.swarm import MeshCfg, MeshTrainer, SwarmCfg, SwarmTrainer
+    from repro.optim import optimizers as opt_mod
+
+    spec = make_mesh_spec(args.mesh)
+    R = args.replicas
+    batch_fns = [make_batch_fn(cfg, args.accum, args.batch, seq,
+                               seed=args.seed + r)[0] for r in range(R)]
+    key = jax.random.PRNGKey(args.seed)
+    dms = [args.delay_model] * R
+    t0 = time.perf_counter()
+    if spec.mode == "gossip":
+        opt_shard = (args.opt_shard == "on" or
+                     (args.opt_shard == "auto" and not args.mesh_compress))
+        mcfg = MeshCfg(replicas=R, period=spec.period, fanout=spec.fanout,
+                       compress=args.mesh_compress, opt_shard=opt_shard,
+                       max_stale_rounds=args.max_stale_rounds,
+                       sync_delay=args.sync_delay, seed=args.seed)
+        mt = MeshTrainer(cfg, ecfg, args.method, mcfg)
+        out = mt.run_gossip(batch_fns, args.steps, key=key, delay_models=dms,
+                            in_flight=args.in_flight)
+        log_fn(f"mesh gossip: {out['n_rounds']} rounds, "
+               f"absorbed={out['absorbed']} stale_dropped={out['stale_dropped']} "
+               f"unabsorbed={out['unabsorbed']} makespan={out['makespan']:.2f}")
+    else:
+        sw = SwarmTrainer(cfg, ecfg, args.method,
+                          SwarmCfg(replicas=R, sync_every=spec.period,
+                                   compress=args.mesh_compress))
+        out = sw.run_event(batch_fns, args.steps, key=key, delay_models=dms,
+                           in_flight=args.in_flight, churn=args.churn)
+        rts = out["runtimes"]
+        P = sw.inner.P
+        opt_bytes = sum(opt_mod.optimizer_memory_bytes(rts[0]._stages[i].opt)
+                        for i in range(P))
+        out["opt_bytes_per_replica"] = opt_bytes
+        out["opt_bytes_replicated"] = opt_bytes
+        log_fn(f"mesh barrier: {out['n_syncs']} syncs")
+    wall = time.perf_counter() - t0
+    log_fn(f"optimizer memory: {out['opt_bytes_per_replica']} bytes/replica "
+           f"(replicated baseline: {out['opt_bytes_replicated']})")
+    return out, wall
+
+
 def main():
     sanitize.apply(verbose=True)  # REPRO_SANITIZE=1 fail-fast mode
     ap = argparse.ArgumentParser(
         epilog="Spec grammars for --delay-model (fixed:/jitter:/straggler:/"
-               "outage:/trace:), --churn (STAGE,START,DURATION[/...]), and the "
+               "outage:/trace:), --churn (STAGE,START,DURATION[/...]), "
+               "--mesh (gossip:PERIOD[,FANOUT] | barrier:PERIOD), and the "
                "--record-trace TraceDelay JSON schema: docs/cli.md")
     ap.add_argument("--arch", default="nanogpt-134m")
     ap.add_argument("--reduced", action="store_true")
@@ -229,7 +279,54 @@ def main():
                          "roll back to the last valid checkpoint")
     ap.add_argument("--max-rollbacks", type=int, default=8,
                     help="abort after this many watchdog rollbacks")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="2D mesh data parallelism across --replicas replica "
+                         "pipelines: gossip:PERIOD[,FANOUT] (fully-async "
+                         "SyncEvent averaging, core/swarm.MeshTrainer) or "
+                         "barrier:PERIOD (legacy round-barrier sync); "
+                         "see docs/cli.md")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="replica count R for --mesh")
+    ap.add_argument("--sync-delay", default=None,
+                    help="gossip sync-hop latency model: fixed[:LAT] | "
+                         "jitter:BASE,SIGMA (default: zero latency)")
+    ap.add_argument("--opt-shard", default="auto", choices=["auto", "on", "off"],
+                    help="ZeRO-1 shard the optimizer state across replicas "
+                         "(gossip mesh only; auto = on unless --mesh-compress)")
+    ap.add_argument("--mesh-compress", action="store_true",
+                    help="int8 + error-feedback compression on mesh sync deltas")
+    ap.add_argument("--max-stale-rounds", type=int, default=1,
+                    help="gossip absorption staleness bound (rounds), the "
+                         "cross-replica analogue of stash depth")
     args = ap.parse_args()
+
+    if args.mesh:
+        from repro.core.events import make_mesh_spec
+
+        try:
+            mesh_spec = make_mesh_spec(args.mesh)
+        except ValueError as e:
+            ap.error(str(e))
+        if args.ckpt_dir or args.faults or args.record_trace:
+            ap.error("--mesh does not compose with --ckpt-dir/--faults/"
+                     "--record-trace (mesh runs drive raw EventRuntimes; "
+                     "checkpoint replica states via checkpoint."
+                     "zero1_merge_states from library code)")
+        if args.runtime != "event":
+            args.runtime = "event"  # mesh is event-driven by construction
+        if mesh_spec.mode == "gossip" and args.churn:
+            ap.error("--churn on a gossip mesh is unsupported: membership "
+                     "churn composes with barrier mode (--mesh barrier:N) "
+                     "or with per-replica RuntimeCfg.churn in library code")
+        if args.opt_shard == "on" and args.mesh_compress:
+            ap.error("--opt-shard on + --mesh-compress are mutually exclusive "
+                     "(quantized averaging would corrupt the owner-"
+                     "authoritative ZeRO-1 segments)")
+        if args.opt_shard == "on" and mesh_spec.mode == "barrier":
+            ap.error("--opt-shard requires a gossip mesh (the barrier path "
+                     "keeps the replicated layout)")
+    elif args.sync_delay or args.mesh_compress:
+        ap.error("--sync-delay/--mesh-compress/--opt-shard require --mesh")
 
     if args.record_trace and args.runtime != "event":
         ap.error("--record-trace requires --runtime event (latencies are "
@@ -254,6 +351,25 @@ def main():
     ecfg = EngineCfg(n_stages=args.stages, update_interval=args.accum, lr=args.lr,
                      warmup_steps=args.warmup, total_steps=args.steps,
                      max_dynamic_delay=args.max_dynamic_delay)
+    if args.mesh:
+        out, wall = run_mesh(args, cfg, ecfg, seq)
+        finals = [l[-1] if l else float("nan") for l in out["losses"]]
+        steps_done = [len(l) for l in out["losses"]]
+        print(f"final loss per replica: "
+              f"{[f'{l:.4f}' for l in finals]}  "
+              f"(steps={steps_done}, {wall:.1f}s)")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"losses": out["losses"],
+                           "steps_done": steps_done,
+                           "opt_bytes_per_replica": out["opt_bytes_per_replica"],
+                           "opt_bytes_replicated": out["opt_bytes_replicated"],
+                           "absorbed": out.get("absorbed"),
+                           "stale_dropped": out.get("stale_dropped"),
+                           "unabsorbed": out.get("unabsorbed"),
+                           "makespan": out.get("makespan")}, f)
+        return
+
     trainer = AsyncTrainer(cfg, ecfg, args.method)
     batch_fn, src = make_batch_fn(cfg, args.accum, args.batch, seq, seed=args.seed)
     if args.runtime == "event":

@@ -272,3 +272,202 @@ def make_optimizer(kind: str, *, fused: bool = False, kernel_backend: str = "pal
     if kind == "sgd_nag_nodiscount":
         return sgd_nag(discount=False, **kw)
     raise ValueError(f"unknown optimizer {kind}")
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharded NAdam: the flat fp32 p/m/v buffers are partitioned across R
+# replicas — reduce-scatter the mean grad onto each rank's 1/R shard, run the
+# SAME fused nag_update kernel on the shard, all-gather the params. The update
+# math is identical to nadam_flat (the kernel is elementwise with shared
+# scalars), only placement changes — so sharded and replicated trajectories
+# are BITWISE equal, a pinned contract (tests/test_mesh.py contract a).
+# ---------------------------------------------------------------------------
+
+
+def zero1_shard_size(n: int, world: int) -> int:
+    """Padded shard length S = ceil(n / world); every rank holds exactly S
+    elements (the last rank zero-padded), so shard shapes are uniform and the
+    all-gather is a plain concatenate + trim."""
+    if world < 1:
+        raise ValueError(f"world must be >= 1, got {world}")
+    return -(-n // world) if n else 0
+
+
+def zero1_shard(flat, rank: int, world: int):
+    """Rank's shard of a flat vector, zero-padded to the uniform length S.
+
+    The zero padding is inert through nag_update (m=v=g=0 keeps p=0), so the
+    trim in `zero1_unshard` always recovers the exact unsharded vector.
+    """
+    n = flat.shape[0]
+    S = zero1_shard_size(n, world)
+    if not 0 <= rank < world:
+        raise ValueError(f"rank {rank} out of range for world={world}")
+    if S == 0:
+        return flat[:0]
+    seg = flat[min(rank * S, n):min(rank * S + S, n)]
+    if seg.shape[0] == S:
+        return seg
+    return jnp.concatenate([seg, jnp.zeros((S - seg.shape[0],), flat.dtype)])
+
+
+def zero1_unshard(shards, n: int):
+    """All-gather inverse of zero1_shard: concatenate rank shards, trim padding."""
+    if not shards:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate(list(shards))[:n]
+
+
+def nadam_flat_sharded(lr, b1=0.99, b2=0.95, eps=1e-8, wd=0.01, psi=0.004,
+                       discount=True, backend="pallas", block=1024, world=2):
+    """ZeRO-1 collective form of nadam_flat: one state holds all `world` rank
+    shards ({'shards': (rank0 {'p','m','v'}, ...), 'count', 'mu_prod'}), and
+    `update` performs the full reduce-scatter -> shard-update -> all-gather
+    round. `grads` may be a list/tuple of `world` per-replica grad trees
+    (mean-reduced here, in replica-index order) or a single already-reduced
+    tree. Single-process stand-in for the real collective: per-replica memory
+    is one shard (3*S fp32), reported by `optimizer_memory_bytes`.
+    """
+
+    def _mu(c, base):
+        return base * (1.0 - 0.5 * 0.96 ** (c.astype(jnp.float32) * psi))
+
+    def init(params):
+        flat = flatten_tree(params)
+        shards = tuple(
+            {"p": zero1_shard(flat, r, world),
+             "m": jnp.zeros_like(zero1_shard(flat, r, world)),
+             "v": jnp.zeros_like(zero1_shard(flat, r, world))}
+            for r in range(world))
+        return {"shards": shards, "count": jnp.zeros((), jnp.int32),
+                "mu_prod": jnp.ones((), jnp.float32)}
+
+    def update(params, grads, state, *, lr_scale=1.0, mom=None, t=None):
+        c = state["count"] + 1
+        base = b1 if mom is None else mom
+        mu_t = _mu(c, base)
+        mu_next = _mu(c + 1, base)
+        mu_prod = state["mu_prod"] * mu_t
+        mu_prod_next = mu_prod * mu_next
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        eta = lr * lr_scale
+        n = sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+        if n == 0:
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            aux = {"lookahead": None, "step_dir": zeros, "last_step": zeros}
+            return params, {"shards": state["shards"], "count": c,
+                            "mu_prod": mu_prod}, aux
+        if isinstance(grads, (list, tuple)):
+            # reduce-scatter's reduce: per-element mean in replica-index order
+            gf = sum(flatten_tree(g) for g in grads) / len(grads)
+        else:
+            gf = flatten_tree(grads)
+        old_pf = zero1_unshard([s["p"] for s in state["shards"]], n)
+        new_shards = []
+        for r in range(world):
+            s = state["shards"][r]
+            g_r = zero1_shard(gf, r, world)
+            p2, m2, v2 = kdispatch.dispatch(
+                "nag_update", s["p"], s["m"], s["v"], g_r, backend=backend,
+                lr=eta, b1=base, b2=b2, eps=eps, wd=wd, mu_t=mu_t,
+                mu_next=mu_next, mu_prod=mu_prod, mu_prod_next=mu_prod_next,
+                bc2=bc2, discount=discount, block=block)
+            new_shards.append({"p": p2, "m": m2, "v": v2})
+        pf = zero1_unshard([s["p"] for s in new_shards], n)
+        new_params = unflatten_like(pf, params)
+        step_dir = unflatten_like(pf - old_pf, jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params))
+        aux = {"lookahead": None, "step_dir": step_dir, "last_step": step_dir}
+        return new_params, {"shards": tuple(new_shards), "count": c,
+                            "mu_prod": mu_prod}, aux
+
+    return Optimizer(init, update, "nadam_flat_sharded")
+
+
+def nadam_flat_shard(rank: int, world: int, lr=1.0, b1=0.99, b2=0.95, eps=1e-8,
+                     wd=0.01, psi=0.004, discount=True, backend="pallas",
+                     block=1024):
+    """Owner-shard nadam_flat for one mesh replica: this rank persists ONLY its
+    1/R shard of m/v plus the fp32 master copy of its own param segment
+    ({'shard': {'p','m','v'}, 'count', 'mu_prod', 'rank', 'world'} — true 1/R
+    optimizer memory, `optimizer_memory_bytes`). `update` steps the owned
+    segment with the fused nag_update kernel and leaves non-owned coordinates
+    untouched — between gossip absorptions they move only when partners'
+    owned segments arrive (swarm.MeshTrainer opt_shard absorption). At
+    zero-delay/full-fanout/every-round gossip this composes to exactly the
+    collective `nadam_flat_sharded` step.
+    """
+
+    def _mu(c, base):
+        return base * (1.0 - 0.5 * 0.96 ** (c.astype(jnp.float32) * psi))
+
+    def init(params):
+        flat = flatten_tree(params)
+        shard = zero1_shard(flat, rank, world)
+        return {"shard": {"p": shard, "m": jnp.zeros_like(shard),
+                          "v": jnp.zeros_like(shard)},
+                "count": jnp.zeros((), jnp.int32),
+                "mu_prod": jnp.ones((), jnp.float32),
+                "rank": jnp.asarray(rank, jnp.int32),
+                "world": jnp.asarray(world, jnp.int32)}
+
+    def update(params, grads, state, *, lr_scale=1.0, mom=None, t=None):
+        c = state["count"] + 1
+        base = b1 if mom is None else mom
+        mu_t = _mu(c, base)
+        mu_next = _mu(c + 1, base)
+        mu_prod = state["mu_prod"] * mu_t
+        mu_prod_next = mu_prod * mu_next
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        eta = lr * lr_scale
+        new_state = {"shard": dict(state["shard"]), "count": c,
+                     "mu_prod": mu_prod, "rank": state["rank"],
+                     "world": state["world"]}
+        pf = flatten_tree(params)
+        n = pf.shape[0]
+        S = zero1_shard_size(n, world)
+        lo, hi = rank * S, min(rank * S + S, n)
+        if S == 0 or lo >= n:
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            aux = {"lookahead": None, "step_dir": zeros, "last_step": zeros}
+            return params, new_state, aux
+        s = state["shard"]
+        g_r = zero1_shard(flatten_tree(grads), rank, world)
+        p2, m2, v2 = kdispatch.dispatch(
+            "nag_update", s["p"], s["m"], s["v"], g_r, backend=backend,
+            lr=eta, b1=base, b2=b2, eps=eps, wd=wd, mu_t=mu_t, mu_next=mu_next,
+            mu_prod=mu_prod, mu_prod_next=mu_prod_next, bc2=bc2,
+            discount=discount, block=block)
+        new_state["shard"] = {"p": p2, "m": m2, "v": v2}
+        new_flat = jnp.concatenate([pf[:lo], p2[:hi - lo], pf[hi:]])
+        new_params = unflatten_like(new_flat, params)
+        seg_dir = p2[:hi - lo] - pf[lo:hi]
+        dir_flat = jnp.concatenate([jnp.zeros((lo,), jnp.float32), seg_dir,
+                                    jnp.zeros((n - hi,), jnp.float32)])
+        step_dir = unflatten_like(dir_flat, jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params))
+        aux = {"lookahead": None, "step_dir": step_dir, "last_step": step_dir}
+        return new_params, new_state, aux
+
+    return Optimizer(init, update, "nadam_flat_shard")
+
+
+def optimizer_memory_bytes(state) -> int:
+    """Persistent PER-REPLICA fp32 bytes of one stage's optimizer state
+    (moment/master buffers only — scalar counters excluded). The number the
+    ZeRO-1 memory claim is about: 'shard' and 'shards' layouts cost one rank's
+    3*S floats; replicated flat costs 3*n (DESIGN.md §13 memory math).
+    """
+    if "shard" in state:
+        return 4 * sum(int(x.size) for x in state["shard"].values())
+    if "shards" in state:
+        return 4 * max((sum(int(x.size) for x in s.values())
+                        for s in state["shards"]), default=0)
+    if "flat" in state:
+        return 4 * sum(int(x.size) for x in state["flat"].values())
+    if "m" in state:
+        return 4 * sum(int(x.size) for x in
+                       jax.tree.leaves(state["m"]) + jax.tree.leaves(state["v"]))
+    if "prev" in state:
+        return 4 * sum(int(x.size) for x in jax.tree.leaves(state["prev"]))
+    return 0

@@ -18,7 +18,8 @@ import pytest
 
 from repro.analysis import engine as lint_engine
 from repro.analysis.rules import reg001
-from repro.core.events import TraceDelay, make_delay_model
+from repro.core.events import (TraceDelay, make_delay_model, make_mesh_spec,
+                               make_sync_delay_model)
 from repro.core.methods import METHODS
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
@@ -91,6 +92,29 @@ def test_bench_artifacts_named_in_docs_exist():
 def test_dispatch_registry_is_consistent():
     """REG001 dispatch sub-rule: parity cases + bwd or documented ref-VJP."""
     assert reg001.dispatch_registry_problems(ROOT) == []
+
+
+def test_cli_md_mesh_grammar_examples_parse():
+    """Docs-rot guard for the --mesh / --sync-delay grammar: every spec shape
+    docs/cli.md documents must parse through the real parsers, and the shapes
+    it documents as errors must raise."""
+    with open(os.path.join(ROOT, "docs", "cli.md")) as f:
+        text = f.read()
+    assert "gossip:PERIOD[,FANOUT]" in text and "barrier:PERIOD" in text
+    assert "--sync-delay" in text and "jitter:BASE,SIGMA" in text
+
+    sp = make_mesh_spec("gossip:8")
+    assert (sp.mode, sp.period, sp.fanout) == ("gossip", 8, None)
+    sp = make_mesh_spec("gossip:4,2")
+    assert (sp.mode, sp.period, sp.fanout) == ("gossip", 4, 2)
+    sp = make_mesh_spec("barrier:2")
+    assert (sp.mode, sp.period, sp.fanout) == ("barrier", 2, None)
+    with pytest.raises(ValueError):
+        make_mesh_spec("barrier:2,1")  # documented as gossip-only
+    # sync-delay shapes named in the table
+    assert make_sync_delay_model("fixed").latency(0, 1, 0, 0) == 0.0
+    assert make_sync_delay_model("fixed:1.5").latency(0, 1, 0, 0) == 1.5
+    assert make_sync_delay_model("jitter:1.0,0.3", seed=0).latency(0, 1, 0, 0) > 0
 
 
 # ---- docs/lint.md rule table vs the registered rules -----------------------

@@ -1,0 +1,378 @@
+"""Fully-async 2D mesh coverage (DESIGN.md §13): sync-as-events gossip vs the
+barrier SwarmTrainer, the ZeRO-1 sharded optimizer, and the equivalence
+contracts that pin them:
+
+(a) sharded-vs-replicated optimizer bitwise equivalence — `nadam_flat_sharded`
+    (reduce-scatter mean + per-rank shard update + all-gather) must reproduce
+    `nadam_flat` on the mean gradient exactly, including on a flat buffer whose
+    length does not divide the world size (zero-padding path);
+(b) gossip at zero delay / full fanout with period == sync_every must reduce to
+    the barrier `SwarmTrainer.run_event` baseline bitwise;
+(c) the sync-event runtime and its compute-free `simulate_mesh_schedule` twin
+    must agree event-for-event under a jittered sync delay model;
+(d) keyed partner selection is a pure function of (seed, round) — replay exact.
+
+Plus the golden-trajectory regression (pinned seed-0 losses) and the
+`checkpoint.restage`-across-replica-counts bugfix (R=2 <-> R=4 roundtrip with
+sharded optimizer state).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ck
+from repro.configs import get_config
+from repro.core import events
+from repro.core.engine import AsyncTrainer, EngineCfg
+from repro.core.events import (drive_mesh, gossip_partners, make_mesh_spec,
+                               make_sync_delay_model)
+from repro.core.runtime import EventRuntime, simulate_mesh_schedule
+from repro.core.swarm import MeshCfg, MeshTrainer, SwarmCfg, SwarmTrainer
+from repro.data.synthetic import make_batch_fn
+from repro.optim import optimizers as opt
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("nanogpt_134m", reduced=True)
+    f1, _ = make_batch_fn(cfg, 1, 2, 32, seed=0)
+    f2, _ = make_batch_fn(cfg, 1, 2, 32, seed=17)
+    return cfg, (f1, f2)
+
+
+def _ecfg(**kw):
+    kw.setdefault("n_stages", 2)
+    kw.setdefault("lr", 2e-3)
+    kw.setdefault("constant_lr", True)
+    kw.setdefault("collect_metrics", False)
+    return EngineCfg(**kw)
+
+
+# ---------------------------------------------------------------------------
+# (d) keyed partner selection: pure function of (seed, round, r, R, fanout)
+# ---------------------------------------------------------------------------
+
+def test_gossip_partners_replay_exact():
+    for seed in (0, 7):
+        for rnd in range(6):
+            for r in range(4):
+                a = gossip_partners(seed, rnd, r, 4, fanout=1)
+                b = gossip_partners(seed, rnd, r, 4, fanout=1)
+                assert a == b  # pure replay — no hidden state
+                assert len(a) == 1 and a[0] != r and 0 <= a[0] < 4
+
+
+def test_gossip_partners_full_fanout_and_bounds():
+    assert gossip_partners(0, 3, 1, 4) == (0, 2, 3)  # None -> everyone else
+    assert gossip_partners(0, 3, 1, 4, fanout=99) == (0, 2, 3)
+    assert gossip_partners(0, 0, 0, 1) == ()  # singleton mesh: nobody to call
+    got = gossip_partners(0, 5, 2, 5, fanout=2)
+    assert list(got) == sorted(got) and len(got) == 2 and 2 not in got
+    with pytest.raises(ValueError):
+        gossip_partners(0, 0, 4, 4)
+    with pytest.raises(ValueError):
+        gossip_partners(0, 0, 0, 2, fanout=0)
+
+
+def test_gossip_partners_vary_by_round():
+    """The round is part of the Philox word: a fanout-1 selection on R=8 must
+    not pick the same partner every round (that would be a keying bug)."""
+    picks = {gossip_partners(0, rnd, 0, 8, fanout=1)[0] for rnd in range(16)}
+    assert len(picks) > 1
+
+
+# ---------------------------------------------------------------------------
+# sync delay models + spec parsing
+# ---------------------------------------------------------------------------
+
+def test_sync_delay_models_and_specs():
+    assert make_sync_delay_model(None).latency(0, 1, 0, 0) == 0.0
+    assert make_sync_delay_model("fixed:2.5").latency(0, 1, 0, 0) == 2.5
+    jd = make_sync_delay_model("jitter:1.0,0.3", seed=4)
+    a = jd.latency(0, 1, 0, 7)
+    assert a == jd.latency(0, 1, 0, 7) > 0.0  # keyed replay, clamped positive
+    assert a != jd.latency(1, 0, 0, 7)  # direction is part of the key
+    with pytest.raises(ValueError):
+        make_sync_delay_model("bogus:1")
+
+
+def test_mesh_spec_grammar():
+    sp = make_mesh_spec("gossip:4,2")
+    assert (sp.mode, sp.period, sp.fanout) == ("gossip", 4, 2)
+    sp = make_mesh_spec("gossip:8")
+    assert (sp.mode, sp.period, sp.fanout) == ("gossip", 8, None)
+    sp = make_mesh_spec("barrier:3")
+    assert (sp.mode, sp.period, sp.fanout) == ("barrier", 3, None)
+    for bad in ("gossip:0", "barrier:2,1", "ring:4", "gossip"):
+        with pytest.raises(ValueError):
+            make_mesh_spec(bad)
+
+
+def test_mesh_cfg_validation():
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        MeshCfg(replicas=2, compress=True, opt_shard=True)
+    with pytest.raises(ValueError):
+        MeshCfg(replicas=0)
+
+
+# ---------------------------------------------------------------------------
+# (a) ZeRO-1 sharded optimizer == replicated, bitwise
+# ---------------------------------------------------------------------------
+
+def _toy_params():
+    # deliberately non-divisible total length for world in {2, 4}: n = 11
+    # splits as 6+5 and 3+3+3+2 (+zero padding), exercising the pad path
+    return {"w": jnp.arange(1, 9, dtype=jnp.float32) * 0.1,
+            "b": jnp.asarray([0.5, -0.25, 0.125], jnp.float32)}
+
+
+def _toy_grads(step, r):
+    k = jax.random.PRNGKey(1000 * step + r)
+    ka, kb = jax.random.split(k)
+    return {"w": jax.random.normal(ka, (8,)) * 0.1,
+            "b": jax.random.normal(kb, (3,)) * 0.1}
+
+
+@pytest.mark.parametrize("world", [2, 4])
+def test_sharded_optimizer_matches_replicated_bitwise(world):
+    """nadam_flat_sharded over 10 steps == nadam_flat on the mean gradient:
+    params AND moments bitwise equal (the shard update is the same elementwise
+    kernel on a slice of the same flat buffer, so there is no fp wiggle room)."""
+    params = _toy_params()
+    n = sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+    assert n % world != 0  # the non-divisible case is the point
+
+    ref = opt.nadam_flat(lr=0.05, backend="ref")
+    sh = opt.nadam_flat_sharded(lr=0.05, backend="ref", world=world)
+    p_ref, s_ref = params, ref.init(params)
+    p_sh, s_sh = params, sh.init(params)
+    for t in range(10):
+        grads = [_toy_grads(t, r) for r in range(world)]
+        mean = jax.tree.map(
+            lambda *gs: sum(g.astype(jnp.float32) for g in gs) / world, *grads)
+        p_ref, s_ref, _ = ref.update(p_ref, mean, s_ref)
+        p_sh, s_sh, _ = sh.update(p_sh, grads, s_sh)
+        for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_sh)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # gather the sharded moments and compare against the replicated flat
+        m_sh = opt.zero1_unshard([s["m"] for s in s_sh["shards"]], n)
+        v_sh = opt.zero1_unshard([s["v"] for s in s_sh["shards"]], n)
+        np.testing.assert_array_equal(np.asarray(s_ref["flat"]["m"]),
+                                      np.asarray(m_sh))
+        np.testing.assert_array_equal(np.asarray(s_ref["flat"]["v"]),
+                                      np.asarray(v_sh))
+
+
+def test_owner_shard_update_freezes_foreign_segments():
+    """nadam_flat_shard (the per-replica mesh optimizer) only moves its own
+    1/R segment of the flat buffer; everything else is bitwise frozen until a
+    gossip absorption splices in the owners' segments."""
+    params = _toy_params()
+    n = sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+    o = opt.nadam_flat_shard(rank=1, world=4, lr=0.05, backend="ref")
+    st = o.init(params)
+    p2, _, _ = o.update(params, _toy_grads(0, 0), st)
+    f0 = np.asarray(opt.flatten_tree(params))
+    f2 = np.asarray(opt.flatten_tree(p2))
+    S = opt.zero1_shard_size(n, 4)
+    lo, hi = 1 * S, min(2 * S, n)
+    assert not np.array_equal(f0[lo:hi], f2[lo:hi])  # own segment moved
+    np.testing.assert_array_equal(f0[:lo], f2[:lo])  # foreign segments frozen
+    np.testing.assert_array_equal(f0[hi:], f2[hi:])
+
+
+def test_zero1_shard_roundtrip_padding():
+    flat = jnp.arange(10, dtype=jnp.float32)
+    shards = [opt.zero1_shard(flat, r, 4) for r in range(4)]
+    assert all(int(s.shape[0]) == 3 for s in shards)
+    assert float(jnp.sum(jnp.abs(shards[3][1:]))) == 0.0  # zero padding
+    np.testing.assert_array_equal(
+        np.asarray(opt.zero1_unshard(shards, 10)), np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# (b) gossip degenerate case == barrier baseline, bitwise
+# ---------------------------------------------------------------------------
+
+def test_gossip_degenerate_equals_barrier_bitwise(setup):
+    """Zero sync delay + full fanout + period == sync_every: the fully-async
+    gossip mesh must reproduce the barrier SwarmTrainer.run_event baseline
+    bitwise — same losses, same stage params. This is the contract that makes
+    gossip a strict generalization rather than a different algorithm."""
+    cfg, (f1, f2) = setup
+    key = jax.random.PRNGKey(4)
+    sw = SwarmTrainer(cfg, _ecfg(), "ours", SwarmCfg(replicas=2, sync_every=2))
+    base = sw.run_event([f1, f2], 4, key=key)
+    mt = MeshTrainer(cfg, _ecfg(), "ours", MeshCfg(replicas=2, period=2))
+    mesh = mt.run_gossip([f1, f2], 4, key=key)
+    assert mesh["losses"] == base["losses"]
+    for rb, rm in zip(base["runtimes"], mesh["runtimes"]):
+        for i in range(sw.inner.P):
+            for a, b in zip(jax.tree.leaves(rb._stages[i].params),
+                            jax.tree.leaves(rm._stages[i].params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gossip_opt_shard_trains_and_halves_optimizer_memory(setup):
+    cfg, (f1, f2) = setup
+    mt = MeshTrainer(cfg, _ecfg(), "ours",
+                     MeshCfg(replicas=2, period=2, opt_shard=True))
+    out = mt.run_gossip([f1, f2], 4, key=jax.random.PRNGKey(5))
+    assert all(np.isfinite(np.asarray(ls)).all() for ls in out["losses"])
+    assert out["opt_bytes_per_replica"] * 2 == out["opt_bytes_replicated"]
+
+
+def test_run_gossip_requires_key(setup):
+    cfg, (f1, f2) = setup
+    mt = MeshTrainer(cfg, _ecfg(), "ours", MeshCfg(replicas=2))
+    with pytest.raises(ValueError, match="key"):
+        mt.run_gossip([f1, f2], 2)
+
+
+# ---------------------------------------------------------------------------
+# (c) sync-event runtime == compute-free twin, event-for-event
+# ---------------------------------------------------------------------------
+
+def test_mesh_runtime_matches_simulated_twin_event_for_event(setup):
+    """Under a jittered sync delay model and heterogeneous per-replica compute
+    delays, the real mesh run and simulate_mesh_schedule must produce the SAME
+    event log — times, kinds, and (replica, stage, round) coordinates. The
+    twin is how schedules are studied without paying compute; this contract is
+    what makes those studies trustworthy."""
+    cfg, (f1, f2) = setup
+    kw = dict(period=2, sync_delay="jitter:0.3,0.5", seed=3,
+              delay_models=["fixed:1,2", "fixed:1.5,2.5"])
+    mt = MeshTrainer(cfg, _ecfg(), "ours",
+                     MeshCfg(replicas=2, period=2, seed=3,
+                             sync_delay=kw["sync_delay"]))
+    real = mt.run_gossip([f1, f2], 4, key=jax.random.PRNGKey(6),
+                         delay_models=kw["delay_models"])
+    sim = simulate_mesh_schedule(R=2, P=2, K=1, n_ticks=4, **kw)
+    assert real["events"] == sim["events"]
+    assert real["makespan"] == sim["makespan"]
+    assert real["absorbed"] == sim["absorbed"]
+
+
+def test_drive_mesh_stale_rounds_are_dropped():
+    """A contribution older than max_stale_rounds behind the absorber's round
+    is discarded, bounding absorption staleness the way stash depth bounds
+    activation staleness."""
+
+    class OneSlow(events.SyncDelayModel):
+        def latency(self, src, dst, stage, rnd):
+            # replica 1's round-0 snapshot limps in at t=2.5: the next scan is
+            # replica 0's round-3 start (t=3), where src_rnd=0 < 3 - 1 -> stale
+            return 1.5 if (src == 1 and rnd == 0) else 0.0
+
+    res = drive_mesh(2, 4, sync_delay=OneSlow(),
+                     run_round=lambda r, rnd: 1.0, max_stale_rounds=1)
+    assert res["stale_dropped"] >= 1
+    # the per-absorb stale counts in the event log reconcile with the total
+    assert sum(ev[5] for ev in res["events"] if ev[0] == "absorb") \
+        == res["stale_dropped"]
+
+
+def test_drive_mesh_newest_contribution_supersedes():
+    """Two rounds of sends from the same (src, stage) landing before one
+    absorption: only the newest is absorbed, the older counts as superseded."""
+    seen = []
+
+    class Burst(events.SyncDelayModel):
+        def latency(self, src, dst, stage, rnd):
+            # replica 1's round-0 and round-1 sends both arrive while replica 0
+            # is still in its long round 1
+            return 0.0
+
+    res = drive_mesh(
+        2, 3, sync_delay=Burst(),
+        run_round=lambda r, rnd: 10.0 if (r == 0 and rnd == 1) else 1.0,
+        absorb=lambda r, rnd, by_stage, now: seen.append(
+            (r, rnd, {s: [(src, srnd) for src, srnd, _ in v]
+                      for s, v in by_stage.items()})))
+    assert res["superseded"] >= 1
+    # replica 0's delayed absorption saw only replica 1's newest round
+    multi = [e for e in seen if e[0] == 0 and e[1] >= 1]
+    for _, _, by_stage in multi:
+        for contribs in by_stage.values():
+            srcs = [src for src, _ in contribs]
+            assert len(srcs) == len(set(srcs))
+
+
+# ---------------------------------------------------------------------------
+# golden-trajectory regression: pinned seed-0 losses
+# ---------------------------------------------------------------------------
+
+# `ours` @ P=4, K=2, FixedDelay, seed 0, lr 2e-3, kernel_backend="ref".
+# Regenerate (only if an INTENTIONAL numerics change lands) with:
+#   REPRO_KERNEL_BACKEND=ref python - <<'EOF'
+#   ... EventRuntime(AsyncTrainer(cfg, ecfg, "ours")).run(bf, 8) ...  # see test
+GOLDEN_SEED0_LOSSES = [6.4472653866, 6.0256867409, 5.5859067440, 5.2982575893,
+                       5.0709686279, 5.1914999485, 4.7844913006, 4.7289602757]
+
+
+def test_golden_trajectory_seed0(monkeypatch):
+    """First 8 ticks of the flagship config are pinned to 1e-6: any silent
+    numerics drift anywhere in the stack (kernels, stash replay, optimizer,
+    event ordering) trips this before it can contaminate benchmarks."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")  # env wins; pin it
+    cfg = get_config("nanogpt_134m", reduced=True)
+    ecfg = EngineCfg(n_stages=4, lr=2e-3, constant_lr=True,
+                     collect_metrics=False, update_interval=2,
+                     kernel_backend="ref")
+    bf, _ = make_batch_fn(cfg, 2, 2, 32, seed=0)
+    rt = EventRuntime(AsyncTrainer(cfg, ecfg, "ours"))
+    rt.init(jax.random.PRNGKey(0))
+    res = rt.run(bf, 8)
+    np.testing.assert_allclose(res.losses, GOLDEN_SEED0_LOSSES,
+                               rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint.restage across replica counts (the R=2 <-> R=4 roundtrip bugfix)
+# ---------------------------------------------------------------------------
+
+def test_zero1_restage_roundtrip_r2_to_r4(setup):
+    """Sharded opt state cannot be restaged directly (each replica holds 1/R of
+    the moments); the documented recipe is merge -> reshard at the target R.
+    R=2 -> merge -> shard at R=4 -> merge again must be bit-exact on params and
+    the flat p/m/v, with shard boundaries re-derived at the target R."""
+    cfg, (f1, f2) = setup
+    mt = MeshTrainer(cfg, _ecfg(), "ours",
+                     MeshCfg(replicas=2, period=2, opt_shard=True))
+    out = mt.run_gossip([f1, f2], 2, key=jax.random.PRNGKey(8))
+    states = [rt.export_state() for rt in out["runtimes"]]
+
+    merged = ck.zero1_merge_states(states)
+    at4 = ck.zero1_shard_states(merged, 4)
+    assert len(at4) == 4
+    for r, st in enumerate(at4):
+        assert int(np.asarray(st.opt[0]["rank"])) == r
+        assert int(np.asarray(st.opt[0]["world"])) == 4
+    merged2 = ck.zero1_merge_states(at4)
+    for i in range(len(merged.params)):
+        for a, b in zip(jax.tree.leaves(merged.params[i]),
+                        jax.tree.leaves(merged2.params[i])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for key in ("p", "m", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(merged.opt[i]["flat"][key]),
+                np.asarray(merged2.opt[i]["flat"][key]))
+
+    # restage on a sharded state must refuse with actionable guidance (this was
+    # the silent-garbage path before the fix)
+    tr_new = AsyncTrainer(cfg, _ecfg(n_stages=2), "ours")
+    with pytest.raises(ValueError, match="zero1_merge_states"):
+        ck.restage(states[0], mt.inner, tr_new)
+
+
+def test_zero1_merge_rejects_bad_rank_sets(setup):
+    cfg, (f1, f2) = setup
+    mt = MeshTrainer(cfg, _ecfg(), "ours",
+                     MeshCfg(replicas=2, period=2, opt_shard=True))
+    out = mt.run_gossip([f1, f2], 2, key=jax.random.PRNGKey(9))
+    states = [rt.export_state() for rt in out["runtimes"]]
+    with pytest.raises(ValueError):
+        ck.zero1_merge_states([states[0], states[0]])  # duplicate rank
+    with pytest.raises(ValueError):
+        ck.zero1_merge_states(states[:1])  # missing rank

@@ -1,0 +1,176 @@
+"""Property suites for the two allocator-flavored runtime primitives, driven
+by random operation sequences (hypothesis when installed, the seeded
+`hypothesis_compat` fallback otherwise):
+
+- `PagePool` (launch/serve.py): every alloc/free interleaving preserves the
+  free-list invariants — LIFO reuse order, double/invalid free raises,
+  `high_water` == the peak number of simultaneously-live pages, and the pool
+  never loses or duplicates a page.
+- `Mailbox(dedupe=True)` (core/events.py): under arbitrary drop/duplicate
+  interleavings of an out-of-order transport, the consumer still sees each
+  microbatch exactly once, in order, and every redelivery is counted in
+  `duplicates`.
+"""
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core.events import Mailbox
+from repro.launch.serve import PagePool
+
+
+# ---------------------------------------------------------------------------
+# PagePool
+# ---------------------------------------------------------------------------
+
+
+def _drive_pool(n_pages, ops_seed, n_ops):
+    """Random alloc/free walk against a model: returns (pool, live, peak)."""
+    rng = np.random.default_rng(ops_seed)
+    pool = PagePool(n_pages)
+    live = []  # model of allocated ids, in allocation order
+    peak = 0
+    for _ in range(n_ops):
+        if live and rng.integers(0, 2):
+            # free a random contiguous chunk of the live set
+            k = int(rng.integers(1, len(live) + 1))
+            idx = int(rng.integers(0, len(live) - k + 1))
+            chunk = live[idx:idx + k]
+            del live[idx:idx + k]
+            pool.free(chunk)
+        else:
+            n = int(rng.integers(1, n_pages + 1))
+            got = pool.alloc(n)
+            if n > n_pages - len(live):
+                assert got is None  # over-ask must refuse, not partially fill
+            else:
+                assert got is not None and len(got) == n
+                assert not (set(got) & set(live))  # no double-hand-out
+                live.extend(got)
+                peak = max(peak, len(live))
+        assert pool.in_use == len(live)
+        assert pool.free_pages == n_pages - len(live)
+    return pool, live, peak
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_pages=st.integers(min_value=1, max_value=12),
+       ops_seed=st.integers(min_value=0, max_value=10_000),
+       n_ops=st.integers(min_value=1, max_value=60))
+def test_pagepool_invariants_under_random_walk(n_pages, ops_seed, n_ops):
+    pool, live, peak = _drive_pool(n_pages, ops_seed, n_ops)
+    # high_water is exactly the peak concurrent demand, never the sum
+    assert pool.high_water == peak
+    # conservation: free list + live model partition the page ids exactly
+    assert sorted(pool._free + live) == list(range(n_pages))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_pages=st.integers(min_value=2, max_value=16),
+       n=st.integers(min_value=1, max_value=8))
+def test_pagepool_lifo_reuse(n_pages, n):
+    """Freshly-freed pages are handed out first, newest-freed first — the
+    property test_serve.py leans on to observe recycling."""
+    n = min(n, n_pages)
+    pool = PagePool(n_pages)
+    first = pool.alloc(n)
+    pool.free(first)
+    again = pool.alloc(n)
+    assert again == first  # LIFO: the exact pages just freed, same order
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_pages=st.integers(min_value=1, max_value=8))
+def test_pagepool_double_and_invalid_free_raise(n_pages):
+    pool = PagePool(n_pages)
+    ids = pool.alloc(1)
+    pool.free(ids)
+    with pytest.raises(ValueError):
+        pool.free(ids)  # double free
+    with pytest.raises(ValueError):
+        pool.free([n_pages])  # out of range
+    with pytest.raises(ValueError):
+        pool.free([-1])
+
+
+# ---------------------------------------------------------------------------
+# Mailbox(dedupe=True)
+# ---------------------------------------------------------------------------
+
+
+def _lossy_transport(n_msgs, seed, dup_rate, shuffle):
+    """Deliver microbatches 0..n-1 with random duplication and reordering.
+    Returns the delivery schedule (a list of mb indices, each >= once)."""
+    rng = np.random.default_rng(seed)
+    sched = list(range(n_msgs))
+    sched += [int(rng.integers(0, n_msgs))
+              for _ in range(int(dup_rate * n_msgs))]
+    if shuffle:
+        rng.shuffle(sched)
+    return sched
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_msgs=st.integers(min_value=1, max_value=40),
+       seed=st.integers(min_value=0, max_value=10_000),
+       dup_rate=st.floats(min_value=0.0, max_value=2.0),
+       shuffle=st.booleans())
+def test_mailbox_dedupe_exactly_once_in_order(n_msgs, seed, dup_rate, shuffle):
+    """At-least-once transport + receiver dedup == exactly-once, in-order
+    consumption: the strict take(mb) loop sees every payload exactly once in
+    microbatch order, duplicates are counted, and late redeliveries of
+    already-consumed indices are still dropped."""
+    box = Mailbox(dedupe=True)
+    sched = _lossy_transport(n_msgs, seed, dup_rate, shuffle)
+    consumed = []
+    next_mb = 0
+    for mb in sched:
+        box.put(mb, ("payload", mb))
+        while box.ready(next_mb):  # consume as soon as the head is available
+            consumed.append(box.take(next_mb))
+            next_mb += 1
+    assert consumed == [("payload", mb) for mb in range(n_msgs)]
+    assert box.duplicates == len(sched) - n_msgs
+    assert len(box) == 0
+    # a replay of the whole schedule after full consumption is all-duplicate
+    for mb in sched:
+        box.put(mb, ("late", mb))
+    assert len(box) == 0 and box.duplicates == 2 * len(sched) - n_msgs
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_msgs=st.integers(min_value=2, max_value=30),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_mailbox_strict_mode_raises_on_duplicate(n_msgs, seed):
+    rng = np.random.default_rng(seed)
+    box = Mailbox()  # strict: a duplicate is a transport bug
+    mb = int(rng.integers(0, n_msgs))
+    box.put(mb, "x")
+    with pytest.raises(RuntimeError, match="duplicate"):
+        box.put(mb, "x")
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_msgs=st.integers(min_value=1, max_value=30),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_mailbox_high_water_is_peak_buffered(n_msgs, seed):
+    """Deliver everything before consuming anything: high_water must equal the
+    full backlog; then a fresh box consuming eagerly in delivery order keeps
+    high_water at the true peak backlog, never the total count."""
+    sched = _lossy_transport(n_msgs, seed, 0.0, True)
+    box = Mailbox(dedupe=True)
+    for mb in sched:
+        box.put(mb, mb)
+    assert box.high_water == n_msgs
+    box2 = Mailbox(dedupe=True)
+    backlog = peak = 0
+    next_mb = 0
+    for mb in sched:
+        box2.put(mb, mb)
+        backlog += 1
+        peak = max(peak, backlog)
+        while box2.ready(next_mb):
+            box2.take(next_mb)
+            next_mb += 1
+            backlog -= 1
+    assert box2.high_water == peak
